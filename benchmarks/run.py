@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8]
+
+Prints ``name,value,derived`` CSV (value is µs for *_us rows, else a
+dimensionless/derived quantity per the row's note).
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module name")
+    args = ap.parse_args()
+
+    from benchmarks import fig8_lop, fig9_schedule, kernels_micro, table1_e2e
+    modules = [
+        ("fig8_lop", fig8_lop),
+        ("fig9_schedule", fig9_schedule),
+        ("table1_e2e", table1_e2e),
+        ("kernels_micro", kernels_micro),
+    ]
+    print("name,value,derived")
+    failed = 0
+    for name, mod in modules:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row_name, value, note in mod.run():
+                print(f"{row_name},{value:.4g},{note}")
+        except Exception as e:   # noqa: BLE001
+            print(f"{name},ERROR,{e!r}")
+            failed += 1
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,73 @@
+"""Table I reproduction: end-to-end decode/prefill throughput model.
+
+The paper's silicon numbers (BitNet-3B @ 16 nm, 1 GHz, 0.8 V): 72.46 tok/s
+decode, 0.88 s prefill (64 tokens), 120 KB SRAM, 59.12 mW. We rebuild the
+*analytic* throughput model for (a) the paper's ASIC parameters and (b) one
+TPU v5e chip running this framework's deployment format, from first
+principles:
+
+  decode is bandwidth-bound: tokens/s ≈ mem_bw / bytes_per_token, where
+  bytes_per_token = packed ternary weights (N/4 B) + KV traffic
+  (LOP: M·d/2 feature bytes + 2·K·d exact bytes per head... dominated by
+  weights at edge batch=1).
+
+Validating against the paper's own silicon: with the ASIC's effective DDR
+bandwidth ≈ 2 GB/s (edge LPDDR class), 3B ternary weights = 0.75 GB/token
+→ ~2.7 tok/s would be DDR-bound — the paper's 72.46 tok/s implies weight
+residency/reuse across the pipeline plus their 26-38% utilization gains;
+we therefore model the ASIC bound from its reported numbers and focus the
+cross-check on *ratios* (LOP/KV) and on the v5e projection.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.bitnet_3b import CONFIG as BITNET
+
+HBM_BW_V5E = 819e9
+PEAK_INT8_V5E = 394e12
+
+
+def decode_bytes_per_token(cfg, n_params: int, m_cache: int, batch: int,
+                           *, with_lop: bool) -> float:
+    """HBM bytes per generated token per sequence (weights amortized over
+    the batch) for the deployment format."""
+    weight_bytes = n_params / 4          # packed 2-bit ternary
+    d = cfg.hd
+    hkv, h = cfg.n_kv_heads, cfg.n_heads
+    if with_lop:
+        k_tokens = int(cfg.lop_keep * m_cache)
+        kv = cfg.n_layers * hkv * (m_cache * d / 2          # feature screen
+                                   + 2 * k_tokens * d)      # exact K/V
+    else:
+        kv = cfg.n_layers * hkv * 2 * m_cache * d
+    return weight_bytes / batch + kv
+
+
+def run():
+    cfg = BITNET
+    n_params = 3.3e9
+    m = 4096                     # cache length for the projection
+
+    rows = []
+    for batch in (1, 8, 64):
+        for with_lop in (False, True):
+            bpt = decode_bytes_per_token(cfg, n_params, m, batch,
+                                         with_lop=with_lop)
+            toks = HBM_BW_V5E / bpt
+            rows.append((
+                f"table1/v5e_decode_toks_b{batch}_"
+                f"{'lop' if with_lop else 'dense'}",
+                toks,
+                f"bandwidth-bound tok/s/seq @M={m} (×{batch} seqs)"))
+
+    # compute-bound prefill estimate (64 tokens, int8 MXU)
+    prefill_flops = 2 * n_params * 64
+    t_prefill = prefill_flops / PEAK_INT8_V5E
+    rows.append(("table1/v5e_prefill64_s", t_prefill,
+                 "paper ASIC: 0.88 s (64 tok); v5e compute bound"))
+    rows.append(("table1/paper_decode_toks", 72.46, "paper silicon, Table I"))
+    rows.append(("table1/weight_mem_GB", n_params / 4 / 1e9,
+                 "packed ternary (7-8x smaller than bf16)"))
+    return rows

@@ -1,0 +1,57 @@
+"""End-to-end driver: QAT-train a ~100M-param BitNet b1.58 model for a few
+hundred steps on the synthetic pipeline, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_bitnet.py [--steps 300]
+
+This is the brief's "train ~100M model for a few hundred steps" e2e driver.
+The config is a scaled BitNet (12L, d=768) — every projection a BitLinear
+trained with STE; loss decreasing proves the QAT flow learns through the
+ternary forward.
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.fault_tolerance import PreemptionHandler
+from repro.launch.train import train_loop
+
+CFG_100M = ModelConfig(
+    name="bitnet-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=2048,
+    vocab=8192,
+    head_dim=64,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/bitnet100m_ckpt")
+    args = ap.parse_args()
+
+    n_params = (CFG_100M.vocab_padded * CFG_100M.d_model * 2
+                + CFG_100M.n_layers * (4 * CFG_100M.d_model ** 2
+                                       + 3 * CFG_100M.d_model * CFG_100M.d_ff))
+    print(f"training {CFG_100M.name}: ~{n_params/1e6:.0f}M params, "
+          f"{args.steps} steps, batch {args.global_batch} × seq {args.seq}")
+    out = train_loop(
+        CFG_100M, steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        peak_lr=6e-4, preemption=PreemptionHandler())
+    first, last = np.mean(out["losses"][:10]), np.mean(out["losses"][-10:])
+    print(f"loss {first:.3f} → {last:.3f}; "
+          f"straggler summary: {out['straggler']}")
+    assert last < first, "QAT did not learn"
+    print("OK — checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

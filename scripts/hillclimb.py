@@ -1,0 +1,74 @@
+"""§Perf hillclimb driver: run a cell variant and diff it against baseline.
+
+    PYTHONPATH=src python scripts/hillclimb.py <arch> <shape> <variant-name>
+        [--env FLAG=1 ...] [--set key=value ...]
+
+Baseline = experiments/dryrun/<arch>__<shape>__sp.json; the variant lands in
+experiments/perf/<arch>__<shape>__<variant>.json and the delta on each
+roofline term is printed.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("variant")
+    ap.add_argument("--env", action="append", default=[])
+    ap.add_argument("--set", action="append", default=[], dest="sets")
+    ap.add_argument("--n-micro", type=int, default=None)
+    args = ap.parse_args()
+
+    for kv in args.env:
+        k, v = kv.split("=", 1)
+        os.environ[k] = v
+
+    from repro.configs.base import get_config
+    from repro.launch.dryrun import run_cell
+
+    cfg = get_config(args.arch)
+    for kv in args.sets:
+        k, v = kv.split("=", 1)
+        cur = getattr(cfg, k)
+        cfg = cfg.replace(**{k: type(cur)(eval(v))
+                             if not isinstance(cur, str) else v})
+
+    res = run_cell(args.arch, args.shape, cfg=cfg, verbose=False,
+                   n_micro=args.n_micro)
+    os.makedirs("experiments/perf", exist_ok=True)
+    out_path = (f"experiments/perf/{args.arch}__{args.shape}__"
+                f"{args.variant}.json")
+    res["variant"] = {"name": args.variant, "env": args.env,
+                      "sets": args.sets}
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=1)
+
+    base_path = f"experiments/dryrun/{args.arch}__{args.shape}__sp.json"
+    with open(base_path) as f:
+        base = json.load(f)
+    rb, rv = base["roofline"], res["roofline"]
+    print(f"== {args.arch} × {args.shape} :: {args.variant}")
+    for k in ("compute_s", "memory_s", "collective_s"):
+        b, v = rb[k], rv[k]
+        delta = (v - b) / abs(b) * 100 if b else float("nan")
+        print(f"  {k:14s} {b:10.4f} → {v:10.4f}  ({delta:+.1f}%)")
+    print(f"  dominant       {rb['dominant']} → {rv['dominant']}")
+    print(f"  bound_s        {rb['bound_s']:.4f} → {rv['bound_s']:.4f} "
+          f"({(rv['bound_s']-rb['bound_s'])/rb['bound_s']*100:+.1f}%)")
+    print(f"  useful_frac    {rb['useful_fraction']:.3f} → "
+          f"{rv['useful_fraction']:.3f}")
+    print(f"  peak mem       {base['memory']['peak_estimate_bytes']/2**30:.1f}"
+          f" → {res['memory']['peak_estimate_bytes']/2**30:.1f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Quick manual sanity for core modules (not a pytest file)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (quantize, dequantize, make_ternary_weight,
+                        bitlinear_ref, bitlinear_qat, pot, lop_scores,
+                        comparison_free_topk, exact_topk,
+                        predictive_sparse_attention, dense_reference_attention,
+                        materialized_mha, streamed_mha, lop_features,
+                        pack_features, unpack_features)
+from repro.core.schedule import standard_softmax_attention
+from repro.core.lop import features_to_pot
+
+rng = np.random.default_rng(0)
+
+# quantize roundtrip
+x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+q = quantize(x)
+err = jnp.max(jnp.abs(dequantize(q) - x))
+print("quant max err:", err, "(scale max:", float(jnp.max(q.scale)), ")")
+assert err < float(jnp.max(q.scale)) * 0.51 + 1e-6
+
+# ternary matmul ref vs fp
+w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32)) * 0.05
+tw = make_ternary_weight(w)
+y_ref = bitlinear_ref(x, tw)
+y_fp = x @ w
+cos = jnp.sum(y_ref * y_fp) / (jnp.linalg.norm(y_ref) * jnp.linalg.norm(y_fp))
+print("bitlinear cos sim vs fp:", cos)
+assert cos > 0.85
+
+# qat grad flows
+g = jax.grad(lambda w_: jnp.sum(bitlinear_qat(x, w_) ** 2))(w)
+assert np.isfinite(np.asarray(g)).all() and float(jnp.max(jnp.abs(g))) > 0
+print("qat grad ok", float(jnp.max(jnp.abs(g))))
+
+# LOP identity: surrogate == dot of pot vectors, and features roundtrip
+qi = jnp.asarray(rng.integers(-127, 128, size=(8,)).astype(np.int8))
+ki = jnp.asarray(rng.integers(-127, 128, size=(16, 8)).astype(np.int8))
+s = lop_scores(qi, ki)
+s_manual = (pot(qi).astype(np.int32)[None] * pot(ki).astype(np.int32)).sum(-1)
+assert (np.asarray(s) == np.asarray(s_manual)).all()
+f = lop_features(ki)
+assert (np.asarray(features_to_pot(f)) == np.asarray(pot(ki))).all()
+assert (np.asarray(unpack_features(pack_features(f))) == np.asarray(f)).all()
+print("lop identity + feature roundtrip ok")
+
+# comparison-free topk recall vs exact
+sc = jnp.asarray(rng.normal(size=(512,)).astype(np.float32))
+idx, gate = comparison_free_topk(sc, 32, n_buckets=64)
+ex = set(np.asarray(exact_topk(sc, 32)).tolist())
+got = set(np.asarray(idx)[np.asarray(gate)].tolist())
+rec = len(ex & got) / 32
+print("cf-topk recall vs exact:", rec)
+assert rec >= 0.5  # bucketized is approximate at ties; should be high typically
+
+# sparse attention close to dense when K = all blocks
+B, H, Hkv, M, D = 2, 4, 2, 256, 32
+qa = jnp.asarray(rng.integers(-40, 40, size=(B, H, D)).astype(np.int8))
+kc = jnp.asarray(rng.integers(-40, 40, size=(B, Hkv, M, D)).astype(np.int8))
+vc = jnp.asarray(rng.integers(-40, 40, size=(B, Hkv, M, D)).astype(np.int8))
+fc = lop_features(kc)
+valid = jnp.arange(M)[None, :] < jnp.asarray([[200], [256]])[:, 0:1]
+valid = jnp.broadcast_to(jnp.arange(M)[None, :], (B, M)) < jnp.asarray([200, 256])[:, None]
+o_all = predictive_sparse_attention(qa, kc, vc, fc, valid, k_blocks=M // 64, block=64)
+o_ref = dense_reference_attention(qa, kc, vc, valid)
+print("sparse(K=all) vs dense max abs diff:", float(jnp.max(jnp.abs(o_all - o_ref))))
+assert float(jnp.max(jnp.abs(o_all - o_ref))) < 1e-2
+
+o_k2 = predictive_sparse_attention(qa, kc, vc, fc, valid, k_blocks=2, block=64)
+rel = float(jnp.linalg.norm(o_k2 - o_ref) / jnp.linalg.norm(o_ref))
+print("sparse(K=2/4 blocks) rel err:", rel)
+
+# schedules agree
+Bm, S, Dm, Hh, hd = 2, 16, 64, 4, 16
+xm = jnp.asarray(rng.normal(size=(Bm, S, Dm)).astype(np.float32))
+ws = [jnp.asarray(rng.normal(size=(Dm, Hh * hd)).astype(np.float32)) * 0.1 for _ in range(3)]
+wo = jnp.asarray(rng.normal(size=(Hh * hd, Dm)).astype(np.float32)) * 0.1
+y1 = materialized_mha(xm, *ws, wo, n_heads=Hh, head_dim=hd, attn_fn=standard_softmax_attention)
+y2 = streamed_mha(xm, *ws, wo, n_heads=Hh, head_dim=hd, attn_fn=standard_softmax_attention, group=2)
+print("schedule max diff:", float(jnp.max(jnp.abs(y1 - y2))))
+assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-3
+print("ALL CORE SANITY OK")

@@ -1,0 +1,67 @@
+"""Quick manual sanity for the Pallas kernels (interpret mode on CPU)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.lop import lop_features, pack_features, pot
+from repro.core.ternary import make_ternary_weight
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(0)
+
+# --- ternary matmul ---
+x = jnp.asarray(rng.integers(-127, 128, size=(48, 512)).astype(np.int8))
+w = jnp.asarray(rng.normal(size=(512, 256)).astype(np.float32)) * 0.02
+tw = make_ternary_weight(w)
+y_k = ops.ternary_matmul(x, tw, impl="pallas")
+y_r = ops.ternary_matmul(x, tw, impl="ref")
+assert (np.asarray(y_k) == np.asarray(y_r)).all(), "ternary matmul mismatch"
+print("ternary_matmul kernel == ref (exact int32)")
+
+# --- lop screen ---
+q = jnp.asarray(rng.integers(-127, 128, size=(12, 128)).astype(np.int8))
+kc = jnp.asarray(rng.integers(-127, 128, size=(1024, 128)).astype(np.int8))
+feat = pack_features(lop_features(kc))
+s_k = ops.lop_screen(q, feat, impl="pallas")
+s_r = ops.lop_screen(q, feat, impl="ref")
+assert (np.asarray(s_k) == np.asarray(s_r)).all(), "lop screen mismatch"
+# identity vs direct pot-dot
+s_d = jnp.einsum("gd,md->gm", pot(q).astype(jnp.int32), pot(kc).astype(jnp.int32))
+assert (np.asarray(s_k) == np.asarray(s_d)).all(), "lop identity broken"
+print("lop_scores kernel == ref == pot-dot identity")
+
+# --- flash prefill ---
+S, D = 512, 128
+qi = jnp.asarray(rng.integers(-60, 61, size=(S, D)).astype(np.int8))
+ki = jnp.asarray(rng.integers(-60, 61, size=(S, D)).astype(np.int8))
+vi = jnp.asarray(rng.integers(-60, 61, size=(S, D)).astype(np.int8))
+qs = jnp.asarray(rng.uniform(0.5, 2.0, size=(S, 1)).astype(np.float32)) * 0.01
+ks = jnp.asarray(rng.uniform(0.5, 2.0, size=(S, 1)).astype(np.float32)) * 0.01
+vs = jnp.asarray(rng.uniform(0.5, 2.0, size=(S, 1)).astype(np.float32)) * 0.01
+sm = 1.0 / np.sqrt(D)
+for causal in (True, False):
+    o_k = ops.flash_prefill(qi, ki, vi, qs, ks, vs, softmax_scale=sm,
+                            causal=causal, impl="pallas")
+    o_r = ops.flash_prefill(qi, ki, vi, qs, ks, vs, softmax_scale=sm,
+                            causal=causal, impl="ref")
+    err = float(jnp.max(jnp.abs(o_k - o_r)))
+    print(f"flash_prefill causal={causal} max abs err: {err:.2e}")
+    assert err < 1e-3
+
+# --- sparse decode ---
+M, BLK, NB, G = 1024, 128, 4, 6
+kcache = jnp.asarray(rng.integers(-60, 61, size=(M, D)).astype(np.int8))
+vcache = jnp.asarray(rng.integers(-60, 61, size=(M, D)).astype(np.int8))
+kscale = jnp.asarray(rng.uniform(0.5, 2.0, size=(M, 1)).astype(np.float32)) * 0.01
+vscale = jnp.asarray(rng.uniform(0.5, 2.0, size=(M, 1)).astype(np.float32)) * 0.01
+qg = jnp.asarray(rng.integers(-60, 61, size=(G, D)).astype(np.int8))
+qscale = jnp.asarray(rng.uniform(0.5, 2.0, size=(G, 1)).astype(np.float32)) * 0.01
+bidx = jnp.asarray([0, 3, 5, 7], dtype=jnp.int32)
+gate_tokens = jnp.asarray([1, 1, 1, 0, BLK, BLK, 100, 0], dtype=jnp.int32)
+o_k = ops.sparse_decode(qg, kcache, vcache, qscale, kscale, vscale, bidx,
+                        gate_tokens, block=BLK, softmax_scale=sm, impl="pallas")
+o_r = ops.sparse_decode(qg, kcache, vcache, qscale, kscale, vscale, bidx,
+                        gate_tokens, block=BLK, softmax_scale=sm, impl="ref")
+err = float(jnp.max(jnp.abs(o_k - o_r)))
+print(f"sparse_decode max abs err: {err:.2e}")
+assert err < 1e-3
+print("ALL KERNEL SANITY OK")

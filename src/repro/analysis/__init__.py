@@ -1,0 +1,4 @@
+"""Compiled-artifact analysis: collective-bytes parsing + roofline terms."""
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import roofline_terms

@@ -1,0 +1,123 @@
+"""Collective-bytes extraction from post-SPMD HLO text.
+
+``cost_analysis()`` has no collective accounting, so we parse the optimized
+module: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` op contributes its *result* shape
+bytes (per-partition, since post-SPMD shapes are per-device). Async pairs
+(``-start``/``-done``) are counted once via the ``-start`` op.
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[8,128]{1,0} all-reduce(...)
+#        %ag = (s8[4,2]{...}, s8[8]{...}) all-gather-start(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Fused-HBM traffic model
+# ---------------------------------------------------------------------------
+# `cost_analysis()['bytes accessed']` sums operand+result bytes of EVERY op
+# — unfused elementwise chains (QAT fake-quant is ~6 ops per weight) count
+# their full tensors repeatedly, wildly overestimating HBM traffic on a
+# real TPU where they fuse. This model counts only ops that genuinely touch
+# HBM (fusions, dots, reductions, gathers/scatters, data movement) and
+# treats bare elementwise ops as fused (they would be, on TPU). The true
+# traffic lies between this estimate and the raw figure; both are reported.
+
+_HBM_OPS = {
+    "fusion", "dot", "convolution", "reduce", "reduce-window", "gather",
+    "scatter", "dynamic-slice", "dynamic-update-slice", "transpose",
+    "concatenate", "pad", "reverse", "sort", "select-and-scatter",
+    "rng", "rng-bit-generator", "cholesky", "triangular-solve",
+}
+# `copy` excluded: XLA:CPU materializes aliasing copies that buffer
+# donation elides on TPU (donated caches update in place).
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.-]+)\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z-]+)"
+    r"(?:-start|-done)?\((.*?)\)", re.M)
+_OPERAND_RE = re.compile(r"%[\w.-]+")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.-]+)\s*\([^)]*\)\s*->", re.M)
+
+
+def hbm_bytes(hlo_text: str) -> int:
+    """Fused-model HBM bytes for one execution of the module (per device)."""
+    # symbol table: instruction name → result bytes
+    sizes = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        sizes[m.group(1)] = _shape_bytes(m.group(2))
+
+    total = 0
+    # walk line by line, tracking whether we're inside a fused computation
+    in_fused = False
+    for line in hlo_text.splitlines():
+        comp = _COMP_RE.match(line)
+        if comp:
+            in_fused = "fused_computation" in comp.group(2)
+            continue
+        if in_fused:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op, operands = m.groups()
+        if op not in _HBM_OPS:
+            continue
+        ops_list = _OPERAND_RE.findall(operands)
+        if op == "dynamic-update-slice":
+            # in-place on TPU (buffer aliasing): traffic = the update
+            # operand only, not the full cache buffer
+            total += sum(sizes.get(o, 0) for o in ops_list[1:])
+            continue
+        total += _shape_bytes(shape_str)
+        for o in ops_list:
+            total += sizes.get(o, 0)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """→ {kind: per-device bytes moved, ..., "total": ...} (+ op counts)."""
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    counts = {k: 0 for k in COLLECTIVE_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # `-done` ops don't match (no shape before them in def position
+        # with -start suffix captured separately); count each op once
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    # avoid double counting: async pairs appear as `-start` (matched) and
+    # `-done` whose result repeats the shape; `-done` defs match the plain
+    # kind name with no '(' — our regex requires '(' right after, and
+    # `-done(` lines match kind + "-done(" → not matched by (-start)? group.
+    total = sum(out.values())
+    return {**out, "total": total, "counts": counts}

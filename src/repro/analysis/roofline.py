@@ -1,0 +1,100 @@
+"""Roofline terms from the compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs  / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes  / HBM_bw               (per chip)
+    collective term = coll_bytes / link_bw              (per chip)
+
+``cost_analysis()`` FLOPs/bytes on the CPU backend are already
+per-partition (post-SPMD), so no division by chip count is needed; the
+mandated formulas (X / (chips × peak)) are equivalent with global sums.
+Collective bytes use the payload (result-shape) convention — a ring
+all-reduce moves ≈2× payload on the wire, so the collective term is a
+lower bound within 2×.
+
+Hardware constants (per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. int8 MXU throughput is 2× bf16 (394 TOPS) — reported as
+``compute_s_int8`` where the quantized flow applies.
+"""
+
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def roofline_terms(cost: dict, coll: dict, *, model_flops_per_chip: float
+                   = 0.0) -> dict:
+    """cost = compiled.cost_analysis(); coll = hlo.collective_bytes(...)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = float(coll.get("total", 0.0))
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "collective_bytes": coll_bytes,
+        "compute_s": compute_s,
+        "compute_s_int8": flops / PEAK_FLOPS_INT8,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    if model_flops_per_chip:
+        terms["model_flops"] = model_flops_per_chip
+        terms["useful_fraction"] = (model_flops_per_chip / flops
+                                    if flops else 0.0)
+        # roofline fraction: useful model FLOPs per wall-second implied by
+        # the dominant term, as a fraction of peak
+        if terms["bound_s"] > 0:
+            terms["roofline_fraction"] = (
+                model_flops_per_chip / terms["bound_s"] / PEAK_FLOPS_BF16)
+    return terms
+
+
+def count_params(tree) -> int:
+    import jax
+    import numpy as np
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """Analytic MODEL_FLOPS for the cell (global, all chips).
+
+    train: 6·N_active·D tokens; prefill: 2·N_active·D; decode: 2·N_active·B
+    (one token per sequence).
+    """
+    from repro.configs.base import text_len
+    if shape.kind == "train":
+        d = shape.global_batch * text_len(cfg, shape.seq_len, "train")
+        return 6.0 * n_active * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * text_len(cfg, shape.seq_len, "prefill")
+        return 2.0 * n_active * d
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg, n_params: int, params_tree=None) -> int:
+    """N_active: MoE expert params scaled by top_k/E."""
+    if cfg.n_experts == 0:
+        return n_params
+    import jax
+    import numpy as np
+    if params_tree is None:
+        return n_params
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_tree)[0]
+    for path, leaf in flat:
+        ks = jax.tree_util.keystr(path)
+        if any(n in ks for n in ("w_gate", "w_up", "w_down")) and \
+           "moe" in ks:
+            expert += int(np.prod(leaf.shape))
+    dense = n_params - expert
+    return int(dense + expert * cfg.top_k / cfg.n_experts)

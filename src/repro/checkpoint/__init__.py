@@ -1,0 +1,4 @@
+"""Sharded numpy checkpoint store with atomic manifests."""
+
+from repro.checkpoint.store import (latest_step, load_checkpoint,
+                                    save_checkpoint)

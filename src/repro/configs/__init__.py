@@ -1,0 +1,11 @@
+"""Architecture configs — one module per assigned architecture.
+
+``get_config(name)`` resolves the ``--arch`` ids from the brief;
+``all_configs()`` returns the full registry (assigned archs + the paper's
+own bitnet-3b).
+"""
+
+from repro.configs.base import (ASSIGNED, SHAPES, SMOKE_SHAPES, ModelConfig,
+                                ShapeConfig, all_configs, get_config,
+                                input_specs, register, shape_applicable,
+                                text_len)

@@ -1,0 +1,25 @@
+"""bitnet-3b — the paper's own model: BitNet b1.58 3B [arXiv:2402.17764].
+
+LLaMA-3B-shaped (26L, d 3200, 32H, ffn 8640) with every projection a
+BitLinear; the silicon prototype (Table I) decodes this model at
+72.46 tokens/s. This config drives the Table I / Fig 8 / Fig 9 benchmark
+reproductions and the paper-faithful baseline of §Perf.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="bitnet-3b",
+    family="dense",
+    n_layers=26,
+    d_model=3200,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8640,
+    vocab=32000,
+    head_dim=100,
+))
+
+REDUCED = CONFIG.replace(
+    name="bitnet-3b-reduced", n_layers=3, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=256, vocab=512, head_dim=32, lop_block=32)

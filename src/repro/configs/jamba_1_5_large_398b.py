@@ -1,0 +1,28 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887; hf]."""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    head_dim=128,
+    n_experts=16,
+    top_k=2,
+    attn_every=8,              # 1 attention layer per 8 (1:7 Mamba ratio)
+    moe_every=2,
+    mamba_d_state=16,
+    mamba_expand=2,
+    mamba_conv=4,
+))
+
+REDUCED = CONFIG.replace(
+    name="jamba-1.5-large-398b-reduced", n_layers=8, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, head_dim=32, n_experts=4, top_k=2,
+    attn_every=4, moe_every=2, moe_group=64, lop_block=32)

@@ -1,0 +1,28 @@
+"""llava-next-34b [vlm] — anyres tiling
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified].
+
+Backbone-only per the brief: the vision tower is a stub — ``input_specs()``
+provides precomputed anyres patch embeddings [B, n_img_tokens, d_model]
+prepended to the text stream.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    head_dim=128,
+    n_img_tokens=2880,         # anyres: base 576 + 4 tiles × 576
+    rope_theta=5_000_000.0,
+))
+
+REDUCED = CONFIG.replace(
+    name="llava-next-34b-reduced", n_layers=3, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, head_dim=32, n_img_tokens=16,
+    lop_block=32)

@@ -1,0 +1,21 @@
+"""mistral-nemo-12b [dense] — 128k ctx
+[hf:mistralai/Mistral-Nemo-Base-2407; hf]."""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mistral-nemo-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=131072,
+    head_dim=128,              # q_dim 4096 ≠ d_model (Nemo convention)
+    rope_theta=1_000_000.0,
+))
+
+REDUCED = CONFIG.replace(
+    name="mistral-nemo-12b-reduced", n_layers=3, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, head_dim=32, lop_block=32)

@@ -1,0 +1,26 @@
+"""rwkv6-1.6b [ssm] — Finch, data-dependent decay [arXiv:2404.05892;
+unverified].
+
+Attention-free: LOP predictive sparse attention is **inapplicable** (no KV
+cache to screen — DESIGN.md §Arch-applicability); the ternary BitLinear flow
+still applies to every projection (r/k/v/g/w, output, channel-mix).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,                # time-mix heads (head size 64)
+    n_kv_heads=32,
+    d_ff=7168,
+    vocab=65536,
+    head_dim=64,
+    use_lop=False,
+))
+
+REDUCED = CONFIG.replace(
+    name="rwkv6-1.6b-reduced", n_layers=3, d_model=96, n_heads=4,
+    n_kv_heads=4, d_ff=192, vocab=512, head_dim=24)

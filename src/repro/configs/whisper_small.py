@@ -1,0 +1,32 @@
+"""whisper-small [audio] — enc-dec, conv frontend (stub)
+[arXiv:2212.04356; unverified].
+
+Backbone-only per the brief: ``input_specs()`` provides precomputed frame
+embeddings [B, n_frames, d_model]; the conv frontend is a stub. Adaptation
+note (DESIGN.md): positions are handled by rotary embeddings instead of
+Whisper's learned/sinusoidal tables so the backbone supports the assigned
+stress shapes (32k decode cache ≫ the model's nominal 448 ctx).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,               # decoder layers
+    n_encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=51865,
+    head_dim=64,
+    norm="layernorm",
+    gated_ffn=False,           # whisper MLP is gelu, non-gated
+    cross_ctx=1500,
+))
+
+REDUCED = CONFIG.replace(
+    name="whisper-small-reduced", n_layers=2, n_encoder_layers=2, d_model=96,
+    n_heads=4, n_kv_heads=4, d_ff=192, vocab=512, head_dim=24, cross_ctx=64,
+    lop_block=32)

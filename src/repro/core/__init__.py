@@ -1,0 +1,14 @@
+"""VitaLLM core: ternary quantized flow + LOP predictive sparse attention."""
+
+from repro.core.quantization import (QuantizedTensor, absmax_scale, dequantize,
+                                     fake_quantize, int8_matmul, quantize,
+                                     rmsnorm, ste_quantize)
+from repro.core.ternary import (TernaryWeight, bitlinear_infer, bitlinear_qat,
+                                bitlinear_ref, make_ternary_weight,
+                                pack_ternary, ternary_quantize, unpack_ternary)
+from repro.core.lop import (comparison_free_topk, exact_topk, kv_traffic_bytes,
+                            leading_one, lop_features, lop_scores,
+                            pack_features, pot, unpack_features)
+from repro.core.sparse_attention import (dense_reference_attention,
+                                         predictive_sparse_attention)
+from repro.core.schedule import materialized_mha, streamed_mha

@@ -1,0 +1,167 @@
+"""Leading-One Prediction (LOP) predictive sparse attention — paper §III-A.
+
+The surrogate score
+
+    ŝ(q,k) = Σᵢ sgn(qᵢ)·sgn(kᵢ)·2^(LO(qᵢ)+LO(kᵢ)),   LO(x) = ⌊log₂|x|⌋
+
+is *exactly* the dot product of power-of-two-rounded vectors
+``pot(x) = sgn(x)·2^LO(|x|)`` — the key TPU-native observation: the ASIC's
+barrel-shift ExpAdd array becomes an int8 MXU matmul against a 4-bit packed
+feature cache (sgn‖LO per element, two per byte → the feature cache reads
+half the bytes of the exact int8 keys).
+
+Selection is *comparison-free* (paper's bucketized k-degree selector [6]):
+scores are bucketized, a high-to-low prefix scan finds the cut bin where the
+cumulative count first reaches K, and indices are emitted without any
+pairwise comparator tree. We keep the paper's *block* granularity ("only
+those candidate blocks are requested") so KV fetches stay contiguous and
+TPU-aligned.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# LO field values 0..6 encode ⌊log₂|x|⌋ for |x| ∈ [1,127]; 7 encodes x == 0.
+LO_ZERO = 7
+
+
+def leading_one(x: jax.Array) -> jax.Array:
+    """⌊log₂|x|⌋ for int8 magnitudes, exactly, without floats.
+
+    |x| ∈ [1,127] → LO ∈ [0,6];  x == 0 → LO_ZERO (7).
+    """
+    v = jnp.abs(x.astype(jnp.int32))
+    lo = ((v >= 2).astype(jnp.int32) + (v >= 4) + (v >= 8)
+          + (v >= 16) + (v >= 32) + (v >= 64))
+    return jnp.where(v == 0, LO_ZERO, lo).astype(jnp.int32)
+
+
+def pot(x: jax.Array) -> jax.Array:
+    """Power-of-two rounding: sgn(x)·2^LO(|x|) as int8 (0 stays 0, max ±64)."""
+    lo = leading_one(x)
+    mag = jnp.where(lo == LO_ZERO, 0, jnp.left_shift(1, jnp.minimum(lo, 6)))
+    return (jnp.sign(x.astype(jnp.int32)) * mag).astype(jnp.int8)
+
+
+def lop_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """Surrogate scores ŝ = pot(q)·pot(k)ᵀ in int32 (multiplier-free on the
+    ASIC; an int8 MXU matmul here).  q: [..., d], k: [..., M, d] → [..., M]."""
+    qp, kp = pot(q), pot(k)
+    return jnp.einsum("...d,...md->...m", qp, kp,
+                      preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 4-bit (sgn‖LO) feature packing — the LOP feature cache
+# ---------------------------------------------------------------------------
+
+def lop_features(x: jax.Array) -> jax.Array:
+    """Per-element 4-bit feature nibble: (sgn_bit << 3) | LO.  int8 storage of
+    the nibble is the reference layout; `pack_features` halves it."""
+    lo = leading_one(x)
+    sgn = (x < 0).astype(jnp.int32)
+    return ((sgn << 3) | lo).astype(jnp.uint8)
+
+
+def features_to_pot(feat: jax.Array) -> jax.Array:
+    """Decode nibbles back to pot() int8 values."""
+    lo = (feat & 0x7).astype(jnp.int32)
+    sgn = ((feat >> 3) & 0x1).astype(jnp.int32)
+    mag = jnp.where(lo == LO_ZERO, 0, jnp.left_shift(1, jnp.minimum(lo, 6)))
+    return ((1 - 2 * sgn) * mag).astype(jnp.int8)
+
+
+def pack_features(feat: jax.Array) -> jax.Array:
+    """Pack nibble features [..., d] (d even) → uint8 [..., d//2]."""
+    lo_nib = feat[..., 0::2]
+    hi_nib = feat[..., 1::2]
+    return (lo_nib | (hi_nib << 4)).astype(jnp.uint8)
+
+
+def unpack_features(packed: jax.Array) -> jax.Array:
+    """uint8 [..., d//2] → nibble features [..., d]."""
+    lo_nib = packed & 0xF
+    hi_nib = (packed >> 4) & 0xF
+    return jnp.stack([lo_nib, hi_nib], axis=-1).reshape(
+        packed.shape[:-1] + (packed.shape[-1] * 2,)).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Comparison-free top-K (bucketized histogram / prefix-scan selector)
+# ---------------------------------------------------------------------------
+
+def comparison_free_topk(scores: jax.Array, k: int, n_buckets: int = 64,
+                         valid: jax.Array | None = None):
+    """Select the top-k indices of ``scores`` [M] without pairwise compares.
+
+    1. bucketize scores into ``n_buckets`` linear ranges,
+    2. histogram + high-to-low prefix scan → cut bin where cum-count ≥ k,
+    3. emit every index above the cut bin, then fill from the cut bin in
+       ascending index order (the ASIC's k-wide priority encoders), padded
+       to exactly k entries.
+
+    Returns (indices [k] int32, gate [k] bool).  With ``valid`` given,
+    invalid positions never get selected (masked to the bottom bucket).
+    """
+    m = scores.shape[-1]
+    s = scores.astype(jnp.float32)
+    if valid is not None:
+        s = jnp.where(valid, s, -jnp.inf)
+    finite = jnp.isfinite(s)
+    smin = jnp.min(jnp.where(finite, s, jnp.inf))
+    smax = jnp.max(jnp.where(finite, s, -jnp.inf))
+    span = jnp.maximum(smax - smin, 1e-9)
+    bucket = jnp.clip(((s - smin) / span * n_buckets).astype(jnp.int32),
+                      0, n_buckets - 1)
+    bucket = jnp.where(finite, bucket, -1)          # invalid → below range
+
+    hist = jnp.zeros((n_buckets,), jnp.int32).at[bucket].add(
+        jnp.where(bucket >= 0, 1, 0))
+    # high-to-low cumulative count; cut = lowest bucket kept entirely-or-partially
+    cum_hi = jnp.cumsum(hist[::-1])[::-1]            # cum_hi[b] = #scores in [b, nb)
+    reach = cum_hi >= k
+    cut = jnp.where(jnp.any(reach), jnp.max(jnp.where(reach, jnp.arange(n_buckets), -1)), 0)
+
+    above = bucket > cut
+    at_cut = bucket == cut
+    n_above = jnp.sum(above.astype(jnp.int32))
+    # emission rank: 'above' entries first (index order), then cut-bin entries
+    rank_above = jnp.cumsum(above.astype(jnp.int32)) - 1
+    rank_cut = n_above + jnp.cumsum(at_cut.astype(jnp.int32)) - 1
+    rank = jnp.where(above, rank_above, jnp.where(at_cut, rank_cut, m + 1))
+    sel = rank < k
+    out = jnp.zeros((k,), jnp.int32).at[jnp.where(sel, rank, k)].set(
+        jnp.arange(m, dtype=jnp.int32), mode="drop")
+    gate = jnp.arange(k) < jnp.minimum(jnp.sum(sel.astype(jnp.int32)), k)
+    return out, gate
+
+
+def block_reduce_scores(scores: jax.Array, block: int,
+                        mode: str = "max") -> jax.Array:
+    """Token scores [..., M] → block scores [..., M//block] (paper fetches
+    candidate *blocks*, keeping KV reads contiguous)."""
+    *lead, m = scores.shape
+    assert m % block == 0, f"M={m} not a multiple of block={block}"
+    s = scores.reshape(*lead, m // block, block)
+    return jnp.max(s, axis=-1) if mode == "max" else jnp.sum(s, axis=-1)
+
+
+def exact_topk(scores: jax.Array, k: int):
+    """Comparator-based reference selector (oracle for recall tests)."""
+    _, idx = jax.lax.top_k(scores, k)
+    return idx
+
+
+def kv_traffic_bytes(m: int, d: int, k: int, *, packed_features: bool = True,
+                     with_lop: bool = True) -> int:
+    """KV bytes fetched per (head, query) — the Fig. 8 traffic model.
+
+    Without LOP: read all M keys + M values (int8).  With LOP: read the
+    feature cache (4-bit packed → d/2 bytes/key) + K exact keys + K values.
+    """
+    if not with_lop:
+        return 2 * m * d
+    feat = m * (d // 2 if packed_features else d)
+    return feat + 2 * k * d

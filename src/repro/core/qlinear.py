@@ -1,0 +1,54 @@
+"""Serving-format linear: absmax barrier → TINT integer GEMM → fused dequant.
+
+A "packed" linear node is ``{"packed": uint8 [k//4, n], "scale": f32 [1,1],
+"b"?}`` — the deployment format produced by
+:func:`repro.serving.quantize.quantize_params`. ``qlinear`` implements the
+paper's cross-core contract: quantize once per vector (the barrier), run the
+GEMM entirely in the integer domain, dequantize once at the output by
+(activation scale × weight γ).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize
+from repro.core.ternary import TernaryWeight
+from repro.kernels import ops
+
+
+def is_packed(node) -> bool:
+    return isinstance(node, dict) and "packed" in node
+
+
+def qlinear(node, x: jax.Array) -> jax.Array:
+    """x f32/bf16 [..., k] → f32 [..., n]."""
+    if is_packed(node):
+        k = node["packed"].shape[-2] * 4
+        n = node["packed"].shape[-1]
+        xq = quantize(x)                                   # the barrier
+        tw = TernaryWeight(packed=node["packed"], scale=1.0, shape=(k, n))
+        acc = ops.ternary_matmul(xq.values, tw)
+        y = acc.astype(jnp.float32) * xq.scale * node["scale"].reshape(())
+    else:
+        y = x.astype(jnp.float32) @ node["w"].astype(jnp.float32)
+    if "b" in node:
+        y = y + node["b"]
+    return y
+
+
+def qlinear_expert(node, x: jax.Array) -> jax.Array:
+    """Per-expert linear: x [E, C, k]; node packed [E, k//4, n] (or fp w)."""
+    if is_packed(node):
+        k = node["packed"].shape[-2] * 4
+
+        def one(xe, pe, se):
+            xq = quantize(xe)
+            tw = TernaryWeight(packed=pe, scale=1.0, shape=(k, pe.shape[-1]))
+            acc = ops.ternary_matmul(xq.values, tw)
+            return acc.astype(jnp.float32) * xq.scale * se.reshape(())
+
+        return jax.vmap(one)(x, node["packed"], node["scale"])
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      node["w"].astype(jnp.float32))

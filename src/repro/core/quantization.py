@@ -1,0 +1,105 @@
+"""Absmax quantization barrier (paper §III-C).
+
+The paper standardizes every cross-core interface as an
+``(integer vector, single scale)`` pair: the per-vector absmax is itself a
+vector-wide reduction, so it doubles as the synchronization barrier between a
+producing linear tile stream and the consuming core. We express that contract
+as a first-class :class:`QuantizedTensor` pytree — int8 values plus an f32
+scale per *vector* (last axis by default) — and keep all reductions
+(absmax, RMSNorm sum-of-squares, softmax max/sum-exp) in f32 while the linear
+algebra stays in the integer domain.
+
+Training uses the straight-through estimator (STE) so the same modules serve
+BitNet-style quantization-aware training.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+EPS = 1e-5
+
+
+class QuantizedTensor(NamedTuple):
+    """(integer vector, single scale) pair — the paper's cross-core interface.
+
+    ``values`` is int8 with shape [..., d]; ``scale`` is f32 with shape
+    [..., 1] such that ``dequantize(qt) ≈ values * scale``.
+    """
+
+    values: jax.Array  # int8
+    scale: jax.Array   # f32, broadcastable to values
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+def absmax_scale(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Per-vector absmax reduction α = maxᵢ|xᵢ| / 127 (the barrier)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax, EPS).astype(jnp.float32) / INT8_MAX
+
+
+def quantize(x: jax.Array, axis: int = -1) -> QuantizedTensor:
+    """Quantize once per vector after the absmax reduction completes."""
+    scale = absmax_scale(x, axis=axis)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -INT8_MAX, INT8_MAX)
+    return QuantizedTensor(values=q.astype(jnp.int8), scale=scale)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    """Single output-side dequantization at the consumer."""
+    return (qt.values.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def fake_quantize(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Quantize→dequantize in the input dtype (QAT forward value)."""
+    return dequantize(quantize(x, axis=axis), dtype=x.dtype)
+
+
+def ste_quantize(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Straight-through estimator: forward = fake-quantized, grad = identity."""
+    return x + jax.lax.stop_gradient(fake_quantize(x, axis=axis) - x)
+
+
+def int8_matmul(xq: QuantizedTensor, wq_values: jax.Array,
+                w_scale: jax.Array) -> jax.Array:
+    """Integer-domain GEMM with fused output dequantization.
+
+    ``xq.values [..., k] @ wq_values [k, n]`` accumulated in int32, then one
+    dequantization by the product of scales (paper Fig. 6: "dequantization
+    fused at the consumer").
+    """
+    acc = jax.lax.dot_general(
+        xq.values, wq_values,
+        dimension_numbers=(((xq.values.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * xq.scale * w_scale
+
+
+def rmsnorm_reduction(x: jax.Array) -> jax.Array:
+    """Sum-of-squares reduction for RMSNorm (kept in f32, overlappable)."""
+    return jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    ms = rmsnorm_reduction(x)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(ms + eps)
+    return (y * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def online_softmax_stats(logits: jax.Array, axis: int = -1):
+    """Running-max and sum-of-exponentials (the paper's softmax reductions)."""
+    m = jnp.max(logits, axis=axis, keepdims=True)
+    s = jnp.sum(jnp.exp(logits - m), axis=axis, keepdims=True)
+    return m, s

@@ -1,0 +1,75 @@
+"""Head-level streaming schedule (paper §III-B) — TPU adaptation.
+
+The ASIC's one-head-offset pipeline (TINT computes Q/K/V for head h+1 while
+BoothFlex runs attention for head h) exists to avoid materializing all-head
+Q/K/V in SRAM. The XLA analogue: express MHA as a `lax.scan` over head
+*groups* whose body fuses projection → attention → partial output projection.
+No full [B, S, 3·H·d] buffer ever exists; peak live activation is one head
+group. The conventional schedule (materialize all heads, then attend) is kept
+as the ablation baseline for the Fig. 9 benchmark.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def materialized_mha(x, wq, wk, wv, wo, *, n_heads: int, head_dim: int,
+                     attn_fn):
+    """Conventional schedule: compute Q/K/V for ALL heads, then attention.
+
+    x [B,S,D]; wq/wk/wv [D, H*d]; wo [H*d, D]; attn_fn(q,k,v)->o per head
+    batch. Used as the ablation baseline (extra round of writes/re-reads).
+    """
+    b, s, dm = x.shape
+    q = (x @ wq).reshape(b, s, n_heads, head_dim)
+    k = (x @ wk).reshape(b, s, n_heads, head_dim)
+    v = (x @ wv).reshape(b, s, n_heads, head_dim)
+    o = attn_fn(q, k, v)                              # [B,S,H,d]
+    return o.reshape(b, s, n_heads * head_dim) @ wo
+
+
+def streamed_mha(x, wq, wk, wv, wo, *, n_heads: int, head_dim: int,
+                 attn_fn, group: int = 1):
+    """Head-level streaming: scan over head groups; each step projects one
+    group, attends, and accumulates its slice of the output projection.
+
+    Peak live Q/K/V = one group instead of H heads; the output is accumulated
+    output-stationary, matching the paper's OS dataflow.
+    """
+    b, s, dm = x.shape
+    assert n_heads % group == 0
+    n_steps = n_heads // group
+    gd = group * head_dim
+
+    wq_g = wq.reshape(dm, n_steps, gd).transpose(1, 0, 2)
+    wk_g = wk.reshape(dm, n_steps, gd).transpose(1, 0, 2)
+    wv_g = wv.reshape(dm, n_steps, gd).transpose(1, 0, 2)
+    wo_g = wo.reshape(n_steps, gd, dm)
+
+    def body(acc, ws):
+        wq_h, wk_h, wv_h, wo_h = ws
+        q = (x @ wq_h).reshape(b, s, group, head_dim)
+        k = (x @ wk_h).reshape(b, s, group, head_dim)
+        v = (x @ wv_h).reshape(b, s, group, head_dim)
+        o = attn_fn(q, k, v).reshape(b, s, gd)
+        return acc + o @ wo_h, None
+
+    acc0 = jnp.zeros((b, s, dm), x.dtype)
+    acc, _ = jax.lax.scan(body, acc0, (wq_g, wk_g, wv_g, wo_g))
+    return acc
+
+
+def standard_softmax_attention(q, k, v, *, causal: bool = True):
+    """Per-head-batch attention used by both schedules: q/k/v [B,S,H,d]."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (d ** 0.5)
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

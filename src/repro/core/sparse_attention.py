@@ -1,0 +1,118 @@
+"""Predictive sparse attention (paper §III-A system view).
+
+Decode-time flow per (batch, head):
+
+    1. **screen**  — surrogate scores over all M cached tokens from the 4-bit
+       LOP feature cache (multiplier-free on the ASIC; int8 pot-dot here),
+    2. **select**  — comparison-free top-K at *block* granularity, so the KV
+       fetches the memory system sees are short contiguous reads,
+    3. **gather**  — fetch only the K candidate blocks of exact int8 K/V,
+    4. **exact**   — softmax attention confined to the candidates
+       (f32 reductions per the absmax barrier; integer GEMMs).
+
+Average KV traffic scales with K rather than M: ×(1 − K/M) reduction,
+no retraining (the screen only reorders which keys are *read*).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lop
+from repro.core.quantization import online_softmax_stats
+
+NEG_INF = -1e30
+
+
+def _gather_blocks(x: jax.Array, block_idx: jax.Array, block: int) -> jax.Array:
+    """x [M, ...] , block_idx [nb] → [nb*block, ...] contiguous candidate rows."""
+    m = x.shape[0]
+    xb = x.reshape(m // block, block, *x.shape[1:])
+    return xb[block_idx].reshape(block_idx.shape[0] * block, *x.shape[1:])
+
+
+def _single_head_sparse_attention(q, k_cache, v_cache, feat_cache, valid,
+                                  *, k_blocks: int, block: int,
+                                  n_buckets: int, softmax_scale: float):
+    """q [d], caches [M, d] (int8) / feat [M, d] nibbles, valid [M] bool."""
+    m, d = k_cache.shape
+
+    # 1. screen — pot-dot surrogate from the feature cache
+    qp = lop.pot(q)
+    kp = lop.features_to_pot(feat_cache)
+    s_hat = jnp.einsum("d,md->m", qp, kp, preferred_element_type=jnp.int32)
+
+    # 2. comparison-free block top-K
+    blk_valid = jnp.any(valid.reshape(m // block, block), axis=-1)
+    blk_scores = lop.block_reduce_scores(
+        jnp.where(valid, s_hat, jnp.iinfo(jnp.int32).min), block)
+    blk_idx, blk_gate = lop.comparison_free_topk(
+        blk_scores, k_blocks, n_buckets=n_buckets, valid=blk_valid)
+
+    # 3. gather only the candidate blocks (contiguous reads)
+    k_sel = _gather_blocks(k_cache, blk_idx, block)      # [K, d] int8
+    v_sel = _gather_blocks(v_cache, blk_idx, block)      # [K, d] int8
+    tok_valid = (_gather_blocks(valid[:, None], blk_idx, block)[:, 0]
+                 & jnp.repeat(blk_gate, block))
+
+    # 4. exact attention confined to candidates (int8 GEMMs, f32 reductions)
+    logits = jnp.einsum("d,kd->k", q, k_sel,
+                        preferred_element_type=jnp.int32).astype(jnp.float32)
+    logits = logits * softmax_scale
+    logits = jnp.where(tok_valid, logits, NEG_INF)
+    mx, se = online_softmax_stats(logits)
+    p = jnp.exp(logits - mx) / se
+    return jnp.einsum("k,kd->d", p, v_sel.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("k_blocks", "block", "n_buckets"))
+def predictive_sparse_attention(q, k_cache, v_cache, feat_cache, valid,
+                                *, k_blocks: int, block: int = 64,
+                                n_buckets: int = 64,
+                                softmax_scale: float | None = None):
+    """Batched decode attention with the LOP screen.
+
+    q          int8   [B, H, d]      (one new token per sequence)
+    k_cache    int8   [B, Hkv, M, d]
+    v_cache    int8   [B, Hkv, M, d]
+    feat_cache uint8  [B, Hkv, M, d] (nibble features; pack separately in HBM)
+    valid      bool   [B, M]
+    → f32 [B, H, d]  (still scaled by q/k/v scales at the caller)
+    """
+    b, h, d = q.shape
+    hkv = k_cache.shape[1]
+    group = h // hkv
+    if softmax_scale is None:
+        softmax_scale = 1.0 / (d ** 0.5)
+
+    fn = partial(_single_head_sparse_attention, k_blocks=k_blocks, block=block,
+                 n_buckets=n_buckets, softmax_scale=softmax_scale)
+    # vmap: heads share the kv-head cache within a GQA group
+    q_g = q.reshape(b, hkv, group, d)
+    per_kv = jax.vmap(jax.vmap(fn, in_axes=(0, None, None, None, None)),
+                      in_axes=(0, 0, 0, 0, None))      # over kv heads
+    per_b = jax.vmap(per_kv, in_axes=(0, 0, 0, 0, 0))  # over batch
+    out = per_b(q_g, k_cache, v_cache, feat_cache, valid)
+    return out.reshape(b, h, d)
+
+
+@partial(jax.jit, static_argnames=())
+def dense_reference_attention(q, k_cache, v_cache, valid,
+                              softmax_scale: float | None = None):
+    """No-LOP oracle: exact attention over all M cached tokens."""
+    b, h, d = q.shape
+    hkv = k_cache.shape[1]
+    group = h // hkv
+    if softmax_scale is None:
+        softmax_scale = 1.0 / (d ** 0.5)
+    q_g = q.reshape(b, hkv, group, d)
+    logits = jnp.einsum("bhgd,bhmd->bhgm", q_g, k_cache,
+                        preferred_element_type=jnp.int32).astype(jnp.float32)
+    logits = logits * softmax_scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgm,bhmd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d)

@@ -1,0 +1,134 @@
+"""Ternary weights (BitNet b1.58) and the TINT-core adaptation (paper §II-A).
+
+The ASIC's TINT core streams *packed 2-bit ternary codes* into a
+multiplier-free select-accumulate array. On TPU the multiplier-free part is
+moot (the MXU does int8 dots natively); what transfers is the packed code
+stream: weights live in HBM as 2-bit codes (4 per byte) and are unpacked to
+int8 inside VMEM by the Pallas kernel (``repro.kernels.ternary_matmul``),
+cutting HBM weight traffic 4× vs int8 / 8× vs bf16 — precisely the resource
+that bounds decode.
+
+This module provides the pure-jnp reference semantics: absmean ternary
+quantization (BitNet b1.58), 2-bit pack/unpack, and the BitLinear forward in
+both inference (integer-domain) and QAT (STE) flavours.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (QuantizedTensor, dequantize, int8_matmul,
+                                     quantize, ste_quantize)
+
+EPS = 1e-5
+
+# 2-bit code assignment:  0 -> 0b00,  +1 -> 0b01,  -1 -> 0b10  (0b11 unused)
+_CODE_ZERO, _CODE_POS, _CODE_NEG = 0, 1, 2
+
+
+class TernaryWeight(NamedTuple):
+    """Ternary weight in packed form: 2-bit codes, 4 per byte, packed along
+    the *reduction* (first) axis so the kernel unpacks contiguous k-blocks."""
+
+    packed: jax.Array   # uint8 [k//4, n]
+    scale: jax.Array    # f32 scalar or [1, n] (per-channel variant)
+    shape: tuple        # original (k, n)
+
+
+def ternary_quantize(w: jax.Array, per_channel: bool = False):
+    """BitNet b1.58 absmean quantization.
+
+    γ = mean|W| ;  Wt = clip(round(W / γ), -1, +1).  Returns (Wt int8, γ).
+    ``per_channel=True`` is a beyond-paper variant (per-output-channel γ).
+    """
+    w = w.astype(jnp.float32)
+    axis = 0 if per_channel else None
+    gamma = jnp.maximum(jnp.mean(jnp.abs(w), axis=axis, keepdims=True), EPS)
+    wt = jnp.clip(jnp.round(w / gamma), -1, 1).astype(jnp.int8)
+    return wt, gamma.astype(jnp.float32)
+
+
+def ste_ternary(w: jax.Array, per_channel: bool = False) -> jax.Array:
+    """QAT forward value for weights: dequantized ternary, identity gradient."""
+    wt, gamma = ternary_quantize(w, per_channel=per_channel)
+    wq = (wt.astype(jnp.float32) * gamma).astype(w.dtype)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing (the TINT code stream)
+# ---------------------------------------------------------------------------
+
+def pack_ternary(wt: jax.Array) -> jax.Array:
+    """Pack int8 ternary values {-1,0,+1} [k, n] → uint8 codes [k//4, n].
+
+    Code j of a byte holds row ``4*i + j``; k must be a multiple of 4
+    (pad upstream).
+    """
+    k, n = wt.shape
+    assert k % 4 == 0, f"k={k} must be a multiple of 4 (pad before packing)"
+    codes = jnp.where(wt > 0, _CODE_POS, jnp.where(wt < 0, _CODE_NEG, _CODE_ZERO))
+    codes = codes.astype(jnp.uint8).reshape(k // 4, 4, n)
+    return (codes[:, 0] | (codes[:, 1] << 2) | (codes[:, 2] << 4)
+            | (codes[:, 3] << 6))
+
+
+def unpack_ternary(packed: jax.Array, k: int) -> jax.Array:
+    """Unpack uint8 codes [k//4, n] → int8 ternary [k, n]."""
+    kp, n = packed.shape
+    assert kp * 4 == k
+    parts = [(packed >> (2 * j)) & 0x3 for j in range(4)]
+    codes = jnp.stack(parts, axis=1).reshape(k, n)
+    return (jnp.where(codes == _CODE_POS, 1, 0)
+            - jnp.where(codes == _CODE_NEG, 1, 0)).astype(jnp.int8)
+
+
+def make_ternary_weight(w: jax.Array, per_channel: bool = False) -> TernaryWeight:
+    wt, gamma = ternary_quantize(w, per_channel=per_channel)
+    return TernaryWeight(packed=pack_ternary(wt), scale=gamma, shape=w.shape)
+
+
+# ---------------------------------------------------------------------------
+# BitLinear forwards (reference semantics; kernels provide the fast path)
+# ---------------------------------------------------------------------------
+
+def bitlinear_infer(xq: QuantizedTensor, tw: TernaryWeight) -> jax.Array:
+    """Inference BitLinear: int8 activations × ternary weights → f32.
+
+    The entire GEMM runs in the integer domain (TINT semantics); one fused
+    dequantization by (activation scale × weight γ) at the output side.
+    """
+    wt = unpack_ternary(tw.packed, tw.shape[0])
+    return int8_matmul(xq, wt, tw.scale)
+
+
+def bitlinear_qat(x: jax.Array, w: jax.Array,
+                  per_channel: bool = False) -> jax.Array:
+    """Training BitLinear (BitNet): STE-quantized activations and weights.
+
+    Forward ≡ ternary×int8 semantics; backward flows straight through, so
+    autodiff trains the latent full-precision master weights. The matmul
+    runs in the activation dtype (bf16 in production) with f32 accumulation
+    — master weights stay f32 and are cast at use (MaxText-style).
+    """
+    xq = ste_quantize(x)                       # per-token absmax int8
+    wq = ste_ternary(w, per_channel=per_channel).astype(x.dtype)
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def bitlinear_ref(x: jax.Array, tw: TernaryWeight) -> jax.Array:
+    """Convenience: f32/bf16 in → quantize (barrier) → integer GEMM → f32."""
+    return bitlinear_infer(quantize(x), tw)
+
+
+def memory_footprint_bytes(shape: tuple, fmt: str) -> int:
+    """Weight storage model used by the benchmarks (paper's 7-8× claim)."""
+    k, n = shape
+    return {
+        "bf16": 2 * k * n,
+        "int8": k * n,
+        "ternary_packed": (k // 4) * n + 4,   # 2 bit/weight + one f32 scale
+    }[fmt]

@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic sharded token streams."""
+
+from repro.data.pipeline import SyntheticDataset

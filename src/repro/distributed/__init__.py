@@ -1,0 +1,5 @@
+"""Distributed runtime: partitioning rules, collectives, fault tolerance."""
+
+from repro.distributed.partitioning import (current_mesh, dp_axes, fsdp_axes,
+                                            logical_to_pspec, shard,
+                                            tree_pspecs, use_mesh)

@@ -1,0 +1,131 @@
+"""Fault tolerance: preemption, stragglers, elastic re-mesh.
+
+At thousand-node scale the framework must assume (i) SIGTERM preemptions,
+(ii) slow outlier hosts, (iii) permanent device loss. The pieces:
+
+  * :class:`PreemptionHandler` — converts SIGTERM/SIGINT into a flag the
+    training loop polls; the loop checkpoints and exits cleanly.
+  * :class:`StragglerMonitor` — rolling per-step latency stats; flags
+    outliers (> μ + k·σ over a window) so the orchestrator can drain the
+    slow host and trigger a re-mesh.
+  * :func:`plan_elastic_mesh` — given the surviving device count, the
+    largest usable (data × model) mesh keeping the model axis intact
+    (TP degree is baked into layer shardings; DP shrinks elastically).
+  * :func:`elastic_restart` — rebuild mesh from survivors + reload the last
+    complete checkpoint; the data pipeline is deterministic in (step, host),
+    so resumed training is bit-reproducible modulo the lost step.
+
+Tested by simulation in tests/test_distributed.py (device loss = restricting
+the visible device list).
+"""
+
+from __future__ import annotations
+
+import collections
+import signal
+import statistics
+import time
+
+import jax
+import numpy as np
+
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT → cooperative checkpoint-and-exit flag."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._requested = False
+        self._installed = []
+        for sig in signals:
+            try:
+                prev = signal.signal(sig, self._handle)
+                self._installed.append((sig, prev))
+            except ValueError:            # not on main thread (tests)
+                pass
+
+    def _handle(self, signum, frame):
+        self._requested = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def restore(self):
+        for sig, prev in self._installed:
+            signal.signal(sig, prev)
+
+
+class StragglerMonitor:
+    """Rolling window of per-step durations with outlier detection."""
+
+    def __init__(self, window: int = 50, threshold_sigma: float = 3.0,
+                 min_steps: int = 10):
+        self.window = window
+        self.sigma = threshold_sigma
+        self.min_steps = min_steps
+        self.times = collections.deque(maxlen=window)
+        self.flagged: list[tuple[int, float]] = []
+        self._step = 0
+
+    def record(self, duration_s: float) -> bool:
+        """Record a step time; returns True if this step is a straggler."""
+        self._step += 1
+        is_straggler = False
+        if len(self.times) >= self.min_steps:
+            mu = statistics.fmean(self.times)
+            sd = statistics.pstdev(self.times) or 1e-9
+            if duration_s > mu + self.sigma * sd:
+                is_straggler = True
+                self.flagged.append((self._step, duration_s))
+        self.times.append(duration_s)
+        return is_straggler
+
+    def summary(self) -> dict:
+        return {
+            "steps": self._step,
+            "mean_s": statistics.fmean(self.times) if self.times else 0.0,
+            "flagged": list(self.flagged),
+        }
+
+
+def plan_elastic_mesh(n_devices: int, *, model: int = 16,
+                      pod: int | None = None) -> tuple:
+    """Largest (data, model) [or (pod, data, model)] mesh from survivors.
+
+    The model (TP) axis is preserved — layer shardings depend on it; the
+    data axis absorbs the loss. Returns the mesh shape tuple.
+    """
+    if n_devices < model:
+        raise RuntimeError(
+            f"{n_devices} devices cannot sustain model axis {model}")
+    if pod:
+        per_pod = n_devices // pod
+        data = per_pod // model
+        if data < 1:
+            return plan_elastic_mesh(n_devices, model=model, pod=None)
+        return (pod, data, model)
+    return (n_devices // model, model)
+
+
+def make_elastic_mesh(devices=None, *, model: int = 16, multi_pod=False):
+    """Build the largest healthy mesh from an explicit device list."""
+    devices = list(devices if devices is not None else jax.devices())
+    shape = plan_elastic_mesh(len(devices), model=model,
+                              pod=2 if multi_pod else None)
+    n_used = int(np.prod(shape))
+    dev_array = np.asarray(devices[:n_used]).reshape(shape)
+    names = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.sharding.Mesh(dev_array, names)
+
+
+def elastic_restart(ckpt_dir: str, tree_like, surviving_devices, *,
+                    model: int = 16):
+    """Device loss recovery: new mesh from survivors + last good step.
+
+    Returns (mesh, tree, step, extra). Resharding onto the new mesh happens
+    when the caller re-places the host arrays with the new shardings.
+    """
+    from repro.checkpoint.store import load_checkpoint
+    mesh = make_elastic_mesh(surviving_devices, model=model)
+    tree, step, extra = load_checkpoint(ckpt_dir, tree_like)
+    return mesh, tree, step, extra

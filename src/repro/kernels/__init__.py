@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  * ``ternary_matmul``  — TINT core: packed-2bit ternary × int8 GEMM
+  * ``lop_scores``      — LOP screen over the packed 4-bit feature cache
+  * ``int8_attention``  — int8 flash prefill + LOP block-sparse decode
+
+``ops`` exposes the jit'd public wrappers (pallas/ref dispatch, padding);
+``ref`` holds the pure-jnp oracles used by the allclose tests and traced by
+the full-size dry-run.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import (flash_prefill, lop_screen, sparse_decode,
+                               ternary_matmul)

@@ -1,0 +1,243 @@
+"""Int8 attention Pallas kernels (paper §II-B / §III adaptation).
+
+Two kernels share the BoothFlex idea's transferable half — one integer
+datapath serves both attention and projections, so the int8 layout/scale
+conventions established by the absmax barrier flow through attention without
+format churn:
+
+  * ``int8_flash_prefill`` — blocked causal flash attention over int8 Q/K/V
+    with per-token f32 scales and f32 online-softmax reductions (the paper's
+    "nonlinear reductions overlap with linear tiles": running max / sum-exp
+    accumulate in VMEM scratch while the MXU produces logit tiles).
+  * ``sparse_decode_attention`` — the LOP-selected block-sparse decode step:
+    a scalar-prefetch grid walks ONLY the K candidate KV blocks (contiguous
+    reads, paper Fig. 4), doing exact int8 attention over them.
+
+HW-codesign notes:
+  * int8 operands keep MXU throughput at 2× bf16 and HBM traffic at ½.
+  * KV blocks are 128-token aligned — the ASIC's "short contiguous reads"
+    become TPU-aligned HBM bursts.
+  * f32 accumulators/reductions live in VMEM scratch across the key-streaming
+    grid axis (output-stationary, like the paper's OS dataflow).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+# ---------------------------------------------------------------------------
+# Blocked int8 causal flash attention (prefill)
+# ---------------------------------------------------------------------------
+
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, vs_ref,
+                          o_ref, m_ref, l_ref, acc_ref, *,
+                          n_k: int, bq: int, bk: int, softmax_scale: float,
+                          causal: bool, window: int):
+    """Grid (q-tile i, k-tile j); j is the sequential streaming axis."""
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: tiles strictly above the diagonal contribute nothing;
+    # SWA: tiles entirely below the window band are skipped too
+    run = True
+    if causal:
+        run = j * bk <= i * bq + bq - 1
+        if window:
+            run = jnp.logical_and(run, (j + 1) * bk - 1 > i * bq - window)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[...]                                    # [bq, d] int8
+        k = k_ref[...]                                    # [bk, d] int8
+        s = jax.lax.dot_general(                          # int32 logits
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        # absmax-barrier dequant: logits scaled by per-token q/k scales
+        s = s * qs_ref[...] * ks_ref[...].reshape(1, bk) * softmax_scale
+
+        if causal:
+            q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+            if window:
+                s = jnp.where(q_pos - k_pos < window, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # [bq, 128] (lanes ==)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)        # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)                # broadcast → [bq,128]
+        alpha = jnp.exp(m_prev - m_new)                   # rescale factor
+        p = jnp.exp(s - m_new[:, :1])                     # [bq, bk]
+        l_new = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        # accumulate P·(V·v_scale) in f32 (V dequantized in-tile)
+        v = v_ref[...].astype(jnp.float32) * vs_ref[...]  # [bk, d]
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == n_k - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softmax_scale", "causal",
+                                             "window", "bq", "bk",
+                                             "interpret"))
+def int8_flash_prefill(q, k, v, q_scale, k_scale, v_scale, *,
+                       softmax_scale: float, causal: bool = True,
+                       window: int = 0, bq: int = DEFAULT_BQ,
+                       bk: int = DEFAULT_BK,
+                       interpret: bool = False) -> jax.Array:
+    """q/k/v int8 [s, d]; *_scale f32 [s, 1] → f32 [s, d].
+
+    s must be a multiple of the block sizes (ops.py pads); scales are the
+    per-token absmax scales from the quantization barrier. ``window > 0``
+    adds a sliding-window causal mask (SWA).
+    """
+    s, d = q.shape
+    assert s % bq == 0 and s % bk == 0
+    n_q, n_k = s // bq, s // bk
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        functools.partial(_flash_prefill_kernel, n_k=n_k, bq=bq, bk=bk,
+                          softmax_scale=softmax_scale, causal=causal,
+                          window=window),
+        grid=(n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lanes equal)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running sum-exp
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v, q_scale, k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
+# LOP block-sparse decode attention (scalar-prefetch candidate walk)
+# ---------------------------------------------------------------------------
+
+def _sparse_decode_kernel(idx_ref, gate_ref, q_ref, k_ref, v_ref, qs_ref,
+                          ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                          n_blocks: int, block: int, softmax_scale: float):
+    """Grid (candidate-block b,): walks ONLY the selected KV blocks."""
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(gate_ref[b] > 0)
+    def _tile():
+        q = q_ref[...]                                    # [g, d] int8
+        k = k_ref[...]                                    # [block, d] int8
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        s = s * qs_ref[...] * ks_ref[...].reshape(1, block) * softmax_scale
+        # in-block interval mask: [start, end) covers tokens both inside the
+        # cache length (suffix cut) and inside the SWA window (prefix cut)
+        end = gate_ref[n_blocks + b]
+        start = gate_ref[2 * n_blocks + b]
+        t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((t >= start) & (t < end), s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :1])
+        l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32) * vs_ref[...]
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(b == n_blocks - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        o_ref[...] = (acc_ref[...] /
+                      jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "softmax_scale",
+                                             "interpret"))
+def sparse_decode_attention(q, k_cache, v_cache, q_scale, k_scale, v_scale,
+                            block_idx, gate_tokens, *, block: int,
+                            softmax_scale: float,
+                            interpret: bool = False) -> jax.Array:
+    """One-token decode over the LOP-selected candidate blocks.
+
+    q           int8  [g, d]        (g = q-heads sharing this kv head)
+    k/v_cache   int8  [m, d]        (m = cache capacity, block-aligned)
+    q_scale     f32   [g, 1]        per-head absmax scale of the new query
+    k/v_scale   f32   [m, 1]        per-token absmax scales
+    block_idx   int32 [nb]          selected block ids (from comparison-free
+                                    top-K); walked in-order by the grid
+    gate_tokens int32 [3*nb]        [gate(0/1) ‖ end ‖ start] per block —
+                                    scalar-prefetch operand; tokens
+                                    [start, end) inside each block are live
+    → f32 [g, d]
+    """
+    g, d = q.shape
+    m = k_cache.shape[0]
+    nb = block_idx.shape[0]
+    assert m % block == 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((g, d), lambda b, idx, gt: (0, 0)),
+            pl.BlockSpec((block, d), lambda b, idx, gt: (idx[b], 0)),
+            pl.BlockSpec((block, d), lambda b, idx, gt: (idx[b], 0)),
+            pl.BlockSpec((g, 1), lambda b, idx, gt: (0, 0)),
+            pl.BlockSpec((block, 1), lambda b, idx, gt: (idx[b], 0)),
+            pl.BlockSpec((block, 1), lambda b, idx, gt: (idx[b], 0)),
+        ],
+        out_specs=pl.BlockSpec((g, d), lambda b, idx, gt: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_sparse_decode_kernel, n_blocks=nb, block=block,
+                          softmax_scale=softmax_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, d), jnp.float32),
+        interpret=interpret,
+    )(block_idx, gate_tokens, q, k_cache, v_cache, q_scale, k_scale, v_scale)

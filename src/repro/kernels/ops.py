@@ -1,0 +1,149 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy
+---------------
+Every op has two interchangeable implementations with identical semantics:
+
+  * ``pallas``  — the TPU kernel (``interpret=True`` on CPU, where the kernel
+    body executes in Python; this is the validation mode mandated for this
+    container).
+  * ``ref``     — the pure-jnp oracle in :mod:`repro.kernels.ref`. XLA lowers
+    it to the same MXU int8 dots on TPU; it is also what the full-size
+    dry-run traces (interpret-mode Pallas unrolls its grid at trace time,
+    which would explode the HLO for production shapes).
+
+``impl="auto"`` resolves to ``pallas`` on TPU and ``ref`` elsewhere, so the
+same model code runs in tests (small shapes, interpret kernels), in the
+dry-run (full shapes, ref path), and on real hardware (kernels).
+
+All wrappers pad to the kernel block sizes and slice back.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lop import pot
+from repro.core.ternary import TernaryWeight
+from repro.kernels import int8_attention as _attn
+from repro.kernels import lop_scores as _lop
+from repro.kernels import ref as _ref
+from repro.kernels import ternary_matmul as _tmm
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+# ---------------------------------------------------------------------------
+# TINT: packed-ternary × int8 GEMM
+# ---------------------------------------------------------------------------
+
+def ternary_matmul(x: jax.Array, tw: TernaryWeight, *,
+                   impl: str = "auto") -> jax.Array:
+    """int8 activations [..., k] × packed ternary weight → int32 [..., n].
+
+    Output is the raw integer accumulator; the caller applies the absmax-
+    barrier dequantization (one multiply by activation-scale × γ).
+    """
+    k, n = tw.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if _resolve(impl) == "ref":
+        out = _ref.ternary_matmul_ref(x2, tw.packed, k)
+        return out.reshape(*lead, n)
+
+    bm, bk, bn = _tmm.DEFAULT_BM, _tmm.DEFAULT_BK, _tmm.DEFAULT_BN
+    bm = min(bm, max(8, x2.shape[0]))
+    bk = min(bk, k)
+    bn = min(bn, n)
+    xp, m0 = _pad_to(x2, bm, 0)
+    assert k % bk == 0 and n % bn == 0, (k, n, bk, bn)
+    out = _tmm.ternary_matmul(xp, tw.packed, k, bm=bm, bk=bk, bn=bn,
+                              interpret=_interpret())
+    return out[:m0].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# LOP screen: surrogate scores from the packed feature cache
+# ---------------------------------------------------------------------------
+
+def lop_screen(q: jax.Array, feat_packed: jax.Array, *,
+               impl: str = "auto") -> jax.Array:
+    """int8 queries [..., d] × packed (sgn‖LO) cache [m, d//2] → int32 [..., m].
+
+    Applies pot() rounding to q internally (the cache is already rounded).
+    """
+    d = q.shape[-1]
+    m = feat_packed.shape[0]
+    lead = q.shape[:-1]
+    qp = pot(q).reshape(-1, d)
+    if _resolve(impl) == "ref":
+        out = _ref.lop_scores_ref(qp, feat_packed)
+        return out.reshape(*lead, m)
+
+    bq = min(_lop.DEFAULT_BQ, max(8, qp.shape[0]))
+    bm = min(_lop.DEFAULT_BM, m)
+    qpp, g0 = _pad_to(qp, bq, 0)
+    assert m % bm == 0, (m, bm)
+    out = _lop.lop_scores_kernel(qpp, feat_packed, bq=bq, bm=bm,
+                                 interpret=_interpret())
+    return out[:g0].reshape(*lead, m)
+
+
+# ---------------------------------------------------------------------------
+# Int8 flash attention (prefill) and LOP block-sparse decode
+# ---------------------------------------------------------------------------
+
+def flash_prefill(q, k, v, q_scale, k_scale, v_scale, *,
+                  softmax_scale: float, causal: bool = True, window: int = 0,
+                  impl: str = "auto") -> jax.Array:
+    """Single-head int8 flash attention; see kernel docstring for shapes."""
+    if _resolve(impl) == "ref":
+        return _ref.flash_prefill_ref(q, k, v, q_scale, k_scale, v_scale,
+                                      softmax_scale=softmax_scale,
+                                      causal=causal, window=window)
+    s = q.shape[0]
+    bq = min(_attn.DEFAULT_BQ, s)
+    bk = min(_attn.DEFAULT_BK, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    return _attn.int8_flash_prefill(q, k, v, q_scale, k_scale, v_scale,
+                                    softmax_scale=softmax_scale,
+                                    causal=causal, window=window, bq=bq,
+                                    bk=bk, interpret=_interpret())
+
+
+def sparse_decode(q, k_cache, v_cache, q_scale, k_scale, v_scale,
+                  block_idx, gate_tokens, *, block: int,
+                  softmax_scale: float, impl: str = "auto") -> jax.Array:
+    """Single-kv-head LOP-sparse decode; see kernel docstring for shapes."""
+    if _resolve(impl) == "ref":
+        return _ref.sparse_decode_attention_ref(
+            q, k_cache, v_cache, q_scale, k_scale, v_scale, block_idx,
+            gate_tokens, block=block, softmax_scale=softmax_scale)
+    return _attn.sparse_decode_attention(
+        q, k_cache, v_cache, q_scale, k_scale, v_scale, block_idx,
+        gate_tokens, block=block, softmax_scale=softmax_scale,
+        interpret=_interpret())

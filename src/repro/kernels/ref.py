@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lop import features_to_pot, pot, unpack_features
+from repro.core.ternary import unpack_ternary
+
+NEG_INF = -1e30
+
+
+def ternary_matmul_ref(x: jax.Array, packed: jax.Array,
+                       k: int) -> jax.Array:
+    """int8 x [m, k] @ packed-2bit ternary w [k//4, n] → int32 [m, n]."""
+    w = unpack_ternary(packed, k)
+    return jax.lax.dot(x, w, preferred_element_type=jnp.int32)
+
+
+def lop_scores_ref(q_pot: jax.Array, packed_feat: jax.Array) -> jax.Array:
+    """Surrogate scores from the packed feature cache.
+
+    q_pot int8 [g, d] (already pot-rounded); packed_feat uint8 [m, d//2]
+    → int32 [g, m].
+    """
+    kp = features_to_pot(unpack_features(packed_feat))       # [m, d] int8
+    return jax.lax.dot(q_pot, kp.T, preferred_element_type=jnp.int32)
+
+
+def flash_prefill_ref(q, k, v, q_scale, k_scale, v_scale, *,
+                      softmax_scale: float, causal: bool = True,
+                      window: int = 0) -> jax.Array:
+    """Dense (causal/SWA) int8 attention oracle with per-token absmax scales.
+
+    q/k/v int8 [s, d]; scales f32 [s, 1] → f32 [s, d].
+    """
+    s = q.shape[0]
+    logits = jax.lax.dot(q, k.T,
+                         preferred_element_type=jnp.int32).astype(jnp.float32)
+    logits = logits * q_scale * k_scale.reshape(1, s) * softmax_scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    if causal:
+        logits = jnp.where(qpos >= kpos, logits, NEG_INF)
+        if window:
+            logits = jnp.where(qpos - kpos < window, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.dot(p, v.astype(jnp.float32) * v_scale)
+
+
+def sparse_decode_attention_ref(q, k_cache, v_cache, q_scale, k_scale,
+                                v_scale, block_idx, gate_tokens, *,
+                                block: int, softmax_scale: float) -> jax.Array:
+    """Block-sparse decode attention oracle (mirrors the kernel contract).
+
+    q int8 [g, d]; caches int8 [m, d]; scales f32 per the kernel;
+    block_idx int32 [nb]; gate_tokens int32 [3*nb] = [gate ‖ end ‖ start].
+    Exact softmax over the union of gated, in-interval tokens.
+    """
+    m, d = k_cache.shape
+    nb = block_idx.shape[0]
+    gate = gate_tokens[:nb] > 0
+    end = gate_tokens[nb:2 * nb]
+    start = gate_tokens[2 * nb:]
+    kb = k_cache.reshape(m // block, block, d)
+    vb = v_cache.reshape(m // block, block, d)
+    ksb = k_scale.reshape(m // block, block, 1)
+    vsb = v_scale.reshape(m // block, block, 1)
+    k_sel = kb[block_idx].reshape(nb * block, d)
+    v_sel = vb[block_idx].reshape(nb * block, d)
+    ks_sel = ksb[block_idx].reshape(nb * block, 1)
+    vs_sel = vsb[block_idx].reshape(nb * block, 1)
+    t = jnp.arange(block)[None, :]
+    tok_in = (t >= start[:, None]) & (t < end[:, None])
+    valid = (tok_in & gate[:, None]).reshape(nb * block)
+
+    logits = jax.lax.dot(q, k_sel.T,
+                         preferred_element_type=jnp.int32).astype(jnp.float32)
+    logits = logits * q_scale * ks_sel.reshape(1, -1) * softmax_scale
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.dot(p, v_sel.astype(jnp.float32) * vs_sel)

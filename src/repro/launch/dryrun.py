@@ -1,0 +1,479 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds ShapeDtypeStruct stand-ins for every input (no
+device allocation), jits the step with explicit in/out shardings on the
+production mesh, ``.lower().compile()``s it, and records::
+
+    memory_analysis()   — per-device bytes (proves it fits 16 GB HBM)
+    cost_analysis()     — per-device HLO FLOPs / bytes (roofline terms)
+    collective bytes    — parsed from compiled.as_text()  (§Roofline)
+
+Usage:
+    python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k \
+        [--multi-pod] [--out experiments/dryrun] [--n-micro 1]
+
+Exit code 0 = compile succeeded (or the cell is a documented skip).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import (active_params, count_params,
+                                     model_flops, roofline_terms)
+from repro.configs.base import (SHAPES, all_configs, get_config, input_specs,
+                                shape_applicable)
+from repro.distributed.partitioning import (dp_axes, logical_to_pspec,
+                                            tree_pspecs, use_mesh)
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import init_params
+from repro.serving.cache import cache_pspecs, init_cache
+from repro.serving.engine import prefill, serve_step
+from repro.serving.quantize import quantize_params
+from repro.training.optimizer import adamw_init
+from repro.training.train import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract (allocation-free) param/state construction
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg):
+    """(ShapeDtypeStruct params, logical pspecs) without allocating."""
+    captured = {}
+
+    def build(key):
+        p, s = init_params(cfg, key)
+        captured["specs"] = s
+        return p
+
+    p_sds = jax.eval_shape(build, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return p_sds, captured["specs"]
+
+
+def qparam_pspecs(pspecs, qparams_sds):
+    """Map original param pspecs onto the quantized (packed) tree."""
+    def walk(sp, qp):
+        if isinstance(qp, dict) and "packed" in qp:
+            wspec = sp["w"] if isinstance(sp, dict) and "w" in sp else sp
+            out = {"packed": wspec,
+                   "scale": (None,) * qp["scale"].ndim}
+            if "b" in qp:
+                out["b"] = sp["b"] if isinstance(sp, dict) else \
+                    (None,) * qp["b"].ndim
+            return out
+        if isinstance(qp, dict):
+            return {k: walk(sp[k], v) for k, v in qp.items()}
+        return sp
+
+    return walk(pspecs, qparams_sds)
+
+
+def _axis_size(mesh, entry) -> int:
+    import math
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return int(mesh.shape[entry])
+    return math.prod(int(mesh.shape[a]) for a in entry)
+
+
+def _shardings(mesh, logical_tree, sds_tree=None):
+    """Logical trees → NamedShardings; with ``sds_tree`` given, axes whose
+    size doesn't divide the mesh extent are dropped to replicated (keeps
+    reduced/smoke configs and odd head counts legal)."""
+    from repro.distributed.partitioning import is_spec_leaf
+
+    def one(axes, sds=None):
+        spec = logical_to_pspec(axes, mesh)
+        if sds is not None:
+            entries = list(spec) + [None] * (sds.ndim - len(spec))
+            fixed = [e if (e is None or sds.shape[i] % _axis_size(mesh, e)
+                           == 0) else None
+                     for i, e in enumerate(entries[:sds.ndim])]
+            spec = jax.sharding.PartitionSpec(*fixed)
+        return NamedSharding(mesh, spec)
+
+    if sds_tree is None:
+        return jax.tree.map(one, logical_tree, is_leaf=is_spec_leaf)
+    flat_spec, treedef = jax.tree.flatten(logical_tree,
+                                          is_leaf=is_spec_leaf)
+    flat_sds = treedef.flatten_up_to(sds_tree)
+    return treedef.unflatten([one(s, x) for s, x in zip(flat_spec,
+                                                        flat_sds)])
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+
+def build_train_cell(cfg, shape, mesh, *, n_micro: int = 1):
+    p_sds, pspecs = abstract_params(cfg)
+    opt_sds = jax.eval_shape(adamw_init, p_sds)
+    opt_specs = type(opt_sds)(step=(), m=pspecs, v=pspecs)
+
+    batch_sds = input_specs(cfg, shape)
+    batch_specs = {k: ("dp",) + (None,) * (v.ndim - 1)
+                   for k, v in batch_sds.items()}
+
+    step = make_train_step(cfg, n_micro=n_micro)
+    in_sh = (_shardings(mesh, pspecs, p_sds),
+             _shardings(mesh, opt_specs, opt_sds),
+             _shardings(mesh, batch_specs, batch_sds))
+    out_sh = (in_sh[0], in_sh[1],
+              jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                           {"loss": 0, "grad_norm": 0, "lr": 0,
+                            "param_norm": 0, "ce": 0, "aux": 0}))
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1))
+    args = (p_sds, opt_sds, batch_sds)
+    return fn, args, p_sds
+
+
+def build_prefill_cell(cfg, shape, mesh):
+    p_sds, pspecs = abstract_params(cfg)
+    qp_sds = jax.eval_shape(lambda p: quantize_params(cfg, p), p_sds)
+    qspecs = qparam_pspecs(pspecs, qp_sds)
+
+    batch_sds = input_specs(cfg, shape)
+    batch_specs = {k: ("dp",) + (None,) * (v.ndim - 1)
+                   for k, v in batch_sds.items()}
+
+    sp_axes, align, batch_ax = decode_sharding(cfg, mesh,
+                                               shape.global_batch)
+
+    def fn_prefill(qp, batch):
+        return prefill(cfg, qp, batch["tokens"],
+                       frames=batch.get("frames"),
+                       patches=batch.get("patches"),
+                       cache_align=align)
+
+    cache_like = jax.eval_shape(
+        lambda qp, b: fn_prefill(qp, b)[1], qp_sds, batch_sds)
+    c_specs = cache_pspecs(cfg, cache_like, batch_axes=batch_ax,
+                           seq_axes="sp")
+    out_sh = (NamedSharding(mesh, logical_to_pspec(("dp", "tp"), mesh)),
+              _shardings(mesh, c_specs, cache_like))
+    fn = jax.jit(fn_prefill,
+                 in_shardings=(_shardings(mesh, qspecs, qp_sds),
+                               _shardings(mesh, batch_specs, batch_sds)),
+                 out_shardings=out_sh)
+    return fn, (qp_sds, batch_sds), p_sds
+
+
+def decode_sharding(cfg, mesh, batch: int):
+    """(sp_axes, capacity alignment, batch logical axis) for decode cells."""
+    import math
+    dp = math.prod(int(mesh.shape[a]) for a in dp_axes(mesh))
+    if batch % dp == 0 and batch >= dp:
+        sp_axes = ("model",)
+        batch_ax = "dp"
+    else:
+        # batch too small to shard (long_500k B=1): fold data into SP
+        sp_axes = ("data", "model")
+        batch_ax = None
+    nsh = math.prod(int(mesh.shape[a]) for a in sp_axes)
+    return sp_axes, nsh * cfg.lop_block, batch_ax
+
+
+def build_decode_cell(cfg, shape, mesh):
+    p_sds, pspecs = abstract_params(cfg)
+    qp_sds = jax.eval_shape(lambda p: quantize_params(cfg, p), p_sds)
+    qspecs = qparam_pspecs(pspecs, qp_sds)
+
+    b = shape.global_batch
+    sp_axes, align, batch_ax = decode_sharding(cfg, mesh, b)
+    cache_sds = jax.eval_shape(
+        lambda: init_cache(cfg, b, shape.seq_len, align=align))
+    c_specs = cache_pspecs(cfg, cache_sds, batch_axes=batch_ax,
+                           seq_axes=sp_axes)
+    tok_sds = input_specs(cfg, shape)["tokens"]
+    tok_spec = (batch_ax, None)
+
+    use_sp = cfg.family != "ssm"
+
+    def fn_decode(qp, cache, tokens):
+        return serve_step(cfg, qp, cache, tokens,
+                          sp_axes=sp_axes if use_sp else None)
+
+    cache_sh = _shardings(mesh, c_specs, cache_sds)
+    fn = jax.jit(fn_decode,
+                 in_shardings=(_shardings(mesh, qspecs, qp_sds), cache_sh,
+                               NamedSharding(mesh,
+                                             logical_to_pspec(tok_spec,
+                                                              mesh))),
+                 out_shardings=(
+                     NamedSharding(mesh,
+                                   logical_to_pspec((batch_ax, "tp"), mesh)),
+                     cache_sh),
+                 donate_argnums=(1,))
+    return fn, (qp_sds, cache_sds, tok_sds), p_sds
+
+
+# ---------------------------------------------------------------------------
+# Run one cell
+# ---------------------------------------------------------------------------
+
+def _build_and_compile(cfg, shape, mesh, *, n_micro: int):
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            fn, args, p_sds = build_train_cell(cfg, shape, mesh,
+                                               n_micro=n_micro)
+        elif shape.kind == "prefill":
+            fn, args, p_sds = build_prefill_cell(cfg, shape, mesh)
+        else:
+            fn, args, p_sds = build_decode_cell(cfg, shape, mesh)
+        compiled = fn.lower(*args).compile()
+    return compiled, p_sds
+
+
+def _variant_cfg(cfg, n_units: int):
+    """Depth-``n_units`` variant for differential costing."""
+    kw = {}
+    if cfg.family == "hybrid":
+        kw["n_layers"] = n_units * cfg.attn_every
+    else:
+        kw["n_layers"] = n_units
+    if cfg.family == "encdec":
+        kw["n_encoder_layers"] = n_units
+    return cfg.replace(**kw)
+
+
+def _depth_units(cfg) -> int:
+    return (cfg.n_layers // cfg.attn_every if cfg.family == "hybrid"
+            else cfg.n_layers)
+
+
+def _cost_dict(compiled) -> dict:
+    from repro.analysis.hlo import hbm_bytes
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "hbm": float(hbm_bytes(txt)),
+            "coll": float(coll["total"])}
+
+
+def differential_cost(cfg, shape, mesh) -> dict:
+    """Per-layer-exact cost via small *unrolled* variants.
+
+    XLA's cost_analysis counts while bodies once, so the full-depth compile
+    under-counts loop content. We compile depth-1/depth-2 variants with
+    every structural scan unrolled (REPRO_UNROLL_SCANS=1) at up to two
+    small batch sizes, then decompose each quantity into batch-FIXED
+    (weight all-gathers, grad reductions, optimizer) and batch-LINEAR
+    (activations) parts:
+
+        Δ(B)   = u(2,B) − u(1,B)            one exact layer at batch B
+        base(B)= u(1,B) − Δ(B)              embed/head/loss/opt overhead
+        total  = base(B*) + L·Δ(B*)         linear in B between the probes
+
+    Token-level recurrences (Mamba/RWKV) stay scanned — <1% of flops
+    (audited in DESIGN.md §Roofline-accounting).
+    """
+    from repro.configs.base import ShapeConfig
+    B = shape.global_batch
+    # prefill has no optimizer → every quantity is batch-linear: one batch
+    # point + linear scaling is exact for flops/hbm (weight all-gathers get
+    # conservatively overestimated by the scaling; noted in EXPERIMENTS.md).
+    # train/decode get the two-point fixed/linear decomposition.
+    if B <= 16 or shape.kind == "prefill":
+        b_points = [min(B, 16)]
+    else:
+        b_points = [16, 32]
+
+    os.environ["REPRO_UNROLL_SCANS"] = "1"
+    os.environ["REPRO_ATTN_CHUNK"] = "2048"
+    u = {}
+    try:
+        for b in b_points:
+            sh = ShapeConfig(shape.name, shape.seq_len, b, shape.kind)
+            for units in (1, 2):
+                t0 = time.time()
+                c, _ = _build_and_compile(_variant_cfg(cfg, units), sh,
+                                          mesh, n_micro=1)
+                u[(units, b)] = _cost_dict(c)
+                del c
+                print(f"  [probe u{units} b{b}] {time.time()-t0:.0f}s",
+                      flush=True)
+    finally:
+        os.environ.pop("REPRO_UNROLL_SCANS", None)
+        os.environ.pop("REPRO_ATTN_CHUNK", None)
+
+    ell = _depth_units(cfg)
+    keys = ("flops", "bytes", "hbm", "coll")
+
+    def interp(lo: dict, hi: dict | None, b_lo: int, b_hi: int | None):
+        if hi is None:
+            return lo
+        return {k: lo[k] + (B - b_lo) * (hi[k] - lo[k]) / (b_hi - b_lo)
+                for k in keys}
+
+    if len(b_points) == 1:
+        b0 = b_points[0]
+        scale = B / b0
+        delta = {k: (u[(2, b0)][k] - u[(1, b0)][k]) * scale for k in keys}
+        base = {k: (u[(1, b0)][k]) * scale - delta[k] for k in keys}
+    else:
+        b_lo, b_hi = b_points
+        d_lo = {k: u[(2, b_lo)][k] - u[(1, b_lo)][k] for k in keys}
+        d_hi = {k: u[(2, b_hi)][k] - u[(1, b_hi)][k] for k in keys}
+        base_lo = {k: u[(1, b_lo)][k] - d_lo[k] for k in keys}
+        base_hi = {k: u[(1, b_hi)][k] - d_hi[k] for k in keys}
+        delta = interp(d_lo, d_hi, b_lo, b_hi)
+        base = interp(base_lo, base_hi, b_lo, b_hi)
+
+    out = {k: base[k] + ell * delta[k] for k in keys}
+    out["per_layer"] = delta
+    out["base"] = base
+    out["probes"] = {f"u{units}_b{b}": v for (units, b), v in u.items()}
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             n_micro: int | None = None, differential: bool = True,
+             verbose: bool = True, cfg=None) -> dict:
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shape.kind}
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        result["status"] = "skip"
+        result["reason"] = reason
+        return result
+
+    if n_micro is None:
+        n_micro = 8 if shape.kind == "train" else 1
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    print(f"[{arch} × {shape_name} × {mesh_name}] compiling...", flush=True)
+    t0 = time.time()
+    compiled, p_sds = _build_and_compile(cfg, shape, mesh, n_micro=n_micro)
+    t_compile = time.time() - t0
+    print(f"  [real cell] {t_compile:.0f}s", flush=True)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    raw = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0)),
+           "coll": coll}
+    del compiled, txt
+
+    # differential costing (single-pod roofline table only — brief §Roofline)
+    corrected = None
+    if differential and not multi_pod:
+        t1 = time.time()
+        corrected = differential_cost(cfg, shape, mesh)
+        corrected["variant_compile_s"] = round(time.time() - t1, 1)
+
+    n_params = count_params(p_sds)
+    n_active = active_params(cfg, n_params, p_sds)
+    chips = 512 if multi_pod else 256
+    mf_global = model_flops(cfg, shape, n_params, n_active)
+    if corrected is not None:
+        # memory term from the fused-HBM model; raw bytes kept as the
+        # unfused upper bound (analysis/hlo.py)
+        eff_cost = {"flops": corrected["flops"],
+                    "bytes accessed": corrected["hbm"]}
+        eff_coll = {"total": corrected["coll"]}
+    else:
+        eff_cost = {"flops": raw["flops"], "bytes accessed": raw["bytes"]}
+        eff_coll = {"total": raw["coll"]["total"]}
+    terms = roofline_terms(eff_cost, eff_coll,
+                           model_flops_per_chip=mf_global / chips)
+    if corrected is not None:
+        terms["memory_s_raw_upper"] = corrected["bytes"] / 819e9
+
+    result.update({
+        "status": "ok",
+        "chips": chips,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "n_micro": n_micro,
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "roofline": terms,
+        "raw_scan_cost": raw,
+        "differential": corrected,
+    })
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+              f"compile {t_compile:.0f}s "
+              f"dominant={terms['dominant']} bound={terms['bound_s']:.2e}s "
+              f"peak/dev={result['memory']['peak_estimate_bytes']/2**30:.2f}"
+              f"GiB")
+        print("memory_analysis:", mem)
+        print("cost_analysis flops:", cost.get("flops"),
+              "bytes:", cost.get("bytes accessed"))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None],
+                    help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None,
+                    help="default: 8 for train cells, 1 otherwise")
+    ap.add_argument("--no-differential", action="store_true",
+                    help="skip the costing probes (compile proof only)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(all_configs())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__{'mp' if mp else 'sp'}"
+                try:
+                    res = run_cell(arch, shape_name, multi_pod=mp,
+                                   n_micro=args.n_micro,
+                                   differential=not args.no_differential)
+                except Exception as e:   # noqa: BLE001 — report, keep going
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "pod2x16x16" if mp else "pod16x16",
+                           "status": "fail", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                    print(f"[{tag}] FAIL: {e}")
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

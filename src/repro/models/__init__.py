@@ -1,0 +1,8 @@
+"""Architecture zoo: one functional model family per module.
+
+Every family exposes ``init_params(cfg, key)`` → (params, pspecs) and a
+``forward(cfg, params, ...)`` training/inference path built from the paper's
+quantized flow (BitLinear projections + absmax barrier + LOP attention).
+"""
+
+from repro.models.transformer import forward_train, init_params

@@ -1,0 +1,111 @@
+"""Shared building blocks: BitLinear, norms, embeddings, rotary.
+
+Parameters are plain nested dicts of arrays; every ``*_init`` returns
+``(params, pspecs)`` where ``pspecs`` mirrors the param tree with tuples of
+*logical* axes (resolved by :mod:`repro.distributed.partitioning`).
+
+The quantized flow follows the paper: projections are BitLinear (absmean
+ternary weights × absmax int8 activations, trained with STE); embeddings,
+norms, router and the LM head stay high-precision (BitNet's convention).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import is_packed, qlinear
+from repro.core.quantization import rmsnorm
+from repro.core.ternary import bitlinear_qat
+
+
+# ---------------------------------------------------------------------------
+# Linear / BitLinear
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                spec=("fsdp", "tp"), dtype=jnp.float32):
+    w = jax.random.normal(key, (d_in, d_out), dtype) * (d_in ** -0.5)
+    params = {"w": w}
+    pspecs = {"w": spec}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+        pspecs["b"] = (spec[-1],)
+    return params, pspecs
+
+
+def linear_apply(params, x, *, quant: str):
+    """Linear dispatch on param format:
+
+      * serving nodes (``{"packed", "scale"}``) → integer-domain qlinear
+        (so the same model code serves quantized weights),
+      * training nodes (``{"w"}``) → QAT BitLinear (``quant="ternary"``)
+        or plain matmul (``"bf16"``).
+    """
+    if is_packed(params):
+        return qlinear(params, x)
+    if quant == "ternary":
+        y = bitlinear_qat(x, params["w"])
+    else:
+        y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms (f32 reductions per the absmax barrier discipline)
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"g": jnp.ones((d,), dtype)}, {"g": (None,)}
+    return ({"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+            {"g": (None,), "b": (None,)})
+
+
+def norm_apply(params, x, kind: str, eps: float = 1e-6):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["g"], eps)
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["g"] + params["b"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab_padded: int, d: int, dtype=jnp.float32):
+    e = jax.random.normal(key, (vocab_padded, d), dtype) * 0.02
+    return {"table": e}, {"table": ("tp", "fsdp")}
+
+
+def embedding_apply(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def head_apply(params, x):
+    """LM head (high-precision): [..., d] @ [d, V] → logits."""
+    return x @ params["w"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, dh] (dh even), positions [..., S] → rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,142 @@
+"""Mamba (selective SSM) block — the non-attention layer of Jamba.
+
+Training/prefill run the selective scan as a chunked sequential recurrence
+(``chunked_scan``): dt/B/C are projected for the whole sequence (cheap), the
+O(T) state recurrence carries ``h [B, Di, S]`` and per-chunk remat caps AD
+residuals. Decode is a single-step state update.
+
+TP: the inner dim Di is sharded over the model axis (depthwise conv, A, D,
+dt all per-channel → embarrassingly TP); in/out projections are the usual
+column/row-parallel pair.
+
+LOP/KV-cache machinery is inapplicable here (no KV cache — DESIGN.md
+§Arch-applicability); the ternary BitLinear flow still covers in/out/x/dt
+projections.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import shard
+from repro.models.layers import linear_apply, linear_init
+from repro.models.scan_utils import chunked_scan
+
+
+def dt_rank(cfg) -> int:
+    return -(-cfg.d_model // 16)
+
+
+def mamba_init(key, cfg):
+    keys = jax.random.split(key, 6)
+    d, di, s, ck = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.mamba_conv
+    r = dt_rank(cfg)
+    p, sp = {}, {}
+    p["in_proj"], sp["in_proj"] = linear_init(keys[0], d, 2 * di)
+    p["x_proj"], sp["x_proj"] = linear_init(keys[1], di, r + 2 * s,
+                                            spec=("tp", None))
+    p["dt_proj"], sp["dt_proj"] = linear_init(keys[2], r, di,
+                                              spec=(None, "tp"), bias=True)
+    p["conv_w"] = jax.random.normal(keys[3], (ck, di), jnp.float32) * 0.1
+    p["conv_b"] = jnp.zeros((di,), jnp.float32)
+    # S4-style A init: -[1..S] per channel
+    p["A_log"] = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, s + 1, dtype=jnp.float32), (di, s)))
+    p["D"] = jnp.ones((di,), jnp.float32)
+    p["out_proj"], sp["out_proj"] = linear_init(keys[5], di, d,
+                                                spec=("tp", "fsdp"))
+    sp.update({"conv_w": (None, "tp"), "conv_b": ("tp",),
+               "A_log": ("tp", None), "D": ("tp",)})
+    return p, sp
+
+
+def _causal_conv(x, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv. x [B, T, Di]; conv_w [ck, Di].
+
+    conv_state [B, ck-1, Di] (decode) prepends history; returns (y, new_state).
+    """
+    ck = conv_w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(ck))
+    new_state = xp[:, xp.shape[1] - (ck - 1):]
+    return y + conv_b, new_state
+
+
+def _ssm_inputs(cfg, p, u):
+    """Project u [B, T, D] → (x, z, dt, B_ssm, C_ssm) for the scan."""
+    s = cfg.mamba_d_state
+    r = dt_rank(cfg)
+    xz = linear_apply(p["in_proj"], u, quant=cfg.quant)
+    x, z = jnp.split(xz, 2, axis=-1)                    # [B, T, Di] each
+    x = shard(x, "dp", None, "tp")
+    return x, z, s, r
+
+
+def _ssm_project(cfg, p, x):
+    s = cfg.mamba_d_state
+    r = dt_rank(cfg)
+    x_dbl = linear_apply(p["x_proj"], x, quant=cfg.quant)
+    dt, b_ssm, c_ssm = jnp.split(x_dbl, [r, r + s], axis=-1)
+    dt = jax.nn.softplus(linear_apply(p["dt_proj"], dt, quant=cfg.quant))
+    return dt, b_ssm, c_ssm                             # [B,T,Di],[B,T,S]×2
+
+
+def _scan_step(a_log, d_resid):
+    def body(h, inp):
+        x_t, z_t, dt_t, b_t, c_t = inp
+        # h [B, Di, S]; discretize: h = exp(dt·A)·h + dt·x·B
+        da = jnp.exp(dt_t[..., None] * (-jnp.exp(a_log)))      # [B, Di, S]
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t) + d_resid * x_t
+        return h, y
+    return body
+
+
+def mamba_forward(cfg, p, u, *, chunk: int = 64):
+    """Training/prefill pass. u [B, T, D] → (y [B, T, D], final_state)."""
+    b, t, _ = u.shape
+    di, s = cfg.d_inner, cfg.mamba_d_state
+    x, z, _, _ = _ssm_inputs(cfg, p, u)
+    x, conv_state = _causal_conv(x, p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x)
+    dt, b_ssm, c_ssm = _ssm_project(cfg, p, x)
+
+    xs = (x.transpose(1, 0, 2), z.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b_ssm.transpose(1, 0, 2), c_ssm.transpose(1, 0, 2))
+    h0 = jnp.zeros((b, di, s), jnp.float32)
+    h, ys = chunked_scan(_scan_step(p["A_log"], p["D"]), h0, xs, chunk=chunk)
+    y = ys.transpose(1, 0, 2)                           # [B, T, Di]
+    y = y * jax.nn.silu(z)
+    out = linear_apply(p["out_proj"], y.astype(u.dtype), quant=cfg.quant)
+    return out, {"ssm": h, "conv": conv_state}
+
+
+def mamba_decode_step(cfg, p, u, state):
+    """One-token decode. u [B, 1, D]; state {ssm [B,Di,S], conv [B,ck-1,Di]}.
+
+    Returns (y [B, 1, D], new_state).
+    """
+    x, z, _, _ = _ssm_inputs(cfg, p, u)
+    x, conv_state = _causal_conv(x, p["conv_w"], p["conv_b"], state["conv"])
+    x = jax.nn.silu(x)
+    dt, b_ssm, c_ssm = _ssm_project(cfg, p, x)
+    body = _scan_step(p["A_log"], p["D"])
+    h, y = body(state["ssm"], (x[:, 0], z[:, 0], dt[:, 0],
+                               b_ssm[:, 0], c_ssm[:, 0]))
+    y = y[:, None] * jax.nn.silu(z)
+    out = linear_apply(p["out_proj"], y.astype(u.dtype), quant=cfg.quant)
+    return out, {"ssm": h, "conv": conv_state}
+
+
+def mamba_state_shape(cfg, batch: int):
+    """ShapeDtypeStructs of the decode state (for cache allocation)."""
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.mamba_conv - 1, cfg.d_inner), jnp.float32),
+    }

@@ -1,0 +1,132 @@
+"""RWKV6 ("Finch") — attention-free token-mix with data-dependent decay.
+
+Per head h with state S ∈ R^{dh×dh}:
+
+    y_t = r_t · (S_{t-1} + diag(u)·k_t v_tᵀ)
+    S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ,   w_t = exp(-exp(w_base + LoRA(m_w)))
+
+Training/prefill use the chunked remat scan; decode is one state update —
+"KV cache of seq_len" for this family IS the recurrent state (DESIGN.md §6).
+LOP is inapplicable (no attention, nothing to screen); every projection is
+still BitLinear under the ternary flow.
+
+TP: heads shard over the model axis (state [B, H/tp, dh, dh]).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import shard
+from repro.models.layers import linear_apply, linear_init
+from repro.models.scan_utils import chunked_scan
+
+W_LORA = 64
+
+
+def rwkv_init(key, cfg):
+    keys = jax.random.split(key, 10)
+    d, f, h, dh = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.hd
+    p, sp = {}, {}
+    for i, name in enumerate(("wr", "wk", "wv", "wg")):
+        p[name], sp[name] = linear_init(keys[i], d, d)
+    p["wo"], sp["wo"] = linear_init(keys[4], d, d, spec=("tp", "fsdp"))
+    # token-shift lerp coefficients (static mus; rwkv6's data-dep lerp is
+    # carried by the decay LoRA below)
+    p["mu"] = jnp.full((5, d), 0.5, jnp.float32)        # r,k,v,g,w
+    sp["mu"] = (None, None)
+    # data-dependent decay: w = exp(-exp(w_base + m_w @ A @ B))
+    p["w_base"] = jnp.zeros((d,), jnp.float32) - 4.0
+    p["w_lora_a"], sp["w_lora_a"] = linear_init(keys[5], d, W_LORA,
+                                                spec=("fsdp", None))
+    p["w_lora_b"], sp["w_lora_b"] = linear_init(keys[6], W_LORA, d,
+                                                spec=(None, "tp"))
+    p["u"] = jax.random.normal(keys[7], (h, dh), jnp.float32) * 0.1
+    p["ln_x"] = jnp.ones((d,), jnp.float32)             # per-head groupnorm
+    sp.update({"w_base": ("tp",), "u": (None, None), "ln_x": (None,)})
+    # channel mix
+    p["mu_c"] = jnp.full((2, d), 0.5, jnp.float32)      # r, k
+    sp["mu_c"] = (None, None)
+    p["wk_c"], sp["wk_c"] = linear_init(keys[8], d, f)
+    p["wv_c"], sp["wv_c"] = linear_init(keys[9], f, d, spec=("tp", "fsdp"))
+    p["wr_c"], sp["wr_c"] = linear_init(keys[0], d, d)
+    return p, sp
+
+
+def _group_norm(x, gamma, h, dh, eps=1e-5):
+    """Per-head layer norm of y [B, H, dh] (rwkv's ln_x)."""
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * gamma.reshape(h, dh)
+
+
+def _time_mix_inputs(cfg, p, x, x_prev):
+    """Token-shift mixes + projections for the whole sequence.
+
+    x [B, T, D]; x_prev [B, 1, D] (token before x[0]). Returns r,k,v,g,w
+    shaped [B, T, H, dh] (w per-channel decay in (0,1)).
+    """
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.hd
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    mixes = [x + p["mu"][i].astype(x.dtype) * (shifted - x)
+             for i in range(5)]
+    r = linear_apply(p["wr"], mixes[0], quant=cfg.quant)
+    k = linear_apply(p["wk"], mixes[1], quant=cfg.quant)
+    v = linear_apply(p["wv"], mixes[2], quant=cfg.quant)
+    g = jax.nn.silu(linear_apply(p["wg"], mixes[3], quant=cfg.quant))
+    lora = linear_apply(
+        p["w_lora_b"],
+        jnp.tanh(linear_apply(p["w_lora_a"], mixes[4], quant=cfg.quant)),
+        quant=cfg.quant)
+    w = jnp.exp(-jnp.exp(p["w_base"] + lora))           # [B, T, D] in (0,1)
+    to_heads = lambda a: shard(a.reshape(b, t, h, dh), "dp", None, "tp", None)
+    return tuple(map(to_heads, (r, k, v, w))) + (g,)
+
+
+def _wkv_step(u):
+    def body(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # [B, H, dh]
+        kv = k_t[..., :, None] * v_t[..., None, :]      # [B, H, dh, dh]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+    return body
+
+
+def rwkv_time_mix(cfg, p, x, x_prev, state, *, chunk: int = 64):
+    """x [B,T,D], x_prev [B,1,D], state [B,H,dh,dh] → (out, last_x, state)."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.hd
+    r, k, v, w, g = _time_mix_inputs(cfg, p, x, x_prev)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = chunked_scan(_wkv_step(p["u"]), state, xs, chunk=chunk)
+    y = ys.transpose(1, 0, 2, 3)                        # [B, T, H, dh]
+    y = _group_norm(y, p["ln_x"], h, dh)
+    y = (y.reshape(b, t, d) * g).astype(x.dtype)
+    out = linear_apply(p["wo"], y, quant=cfg.quant)
+    return out, x[:, -1:], state
+
+
+def rwkv_channel_mix(cfg, p, x, x_prev):
+    """x [B,T,D] → (out, last_x)."""
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    m_r = x + p["mu_c"][0].astype(x.dtype) * (shifted - x)
+    m_k = x + p["mu_c"][1].astype(x.dtype) * (shifted - x)
+    k = jnp.square(jax.nn.relu(linear_apply(p["wk_c"], m_k, quant=cfg.quant)))
+    k = shard(k, "dp", None, "tp")
+    r = jax.nn.sigmoid(linear_apply(p["wr_c"], m_r, quant=cfg.quant))
+    out = (r * linear_apply(p["wv_c"], k, quant=cfg.quant)).astype(x.dtype)
+    return out, x[:, -1:]
+
+
+def rwkv_state_shape(cfg, batch: int):
+    """Decode-state ShapeDtypeStructs (per layer)."""
+    return {
+        "wkv": jax.ShapeDtypeStruct(
+            (batch, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32),
+        "x_tm": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.float32),
+        "x_cm": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.float32),
+    }

@@ -1,0 +1,82 @@
+"""Chunked sequential scan with per-chunk rematerialization.
+
+Recurrent families (Mamba, RWKV6) need a scan over time whose AD residuals
+would otherwise be O(T × state). Chunking the scan and checkpointing the
+chunk body caps the saved residuals at O(T/chunk × state) while the backward
+pass recomputes each chunk transiently — the same memory discipline the
+layer-level remat applies to the stack.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def accounting_unroll(length: int) -> int:
+    """Scan unroll factor for dry-run *cost accounting* variants.
+
+    XLA's cost_analysis counts while-loop bodies ONCE (verified in
+    EXPERIMENTS.md §Dry-run); the differential-costing variants set
+    ``REPRO_UNROLL_SCANS=1`` so structural scans (layers, attention chunks,
+    MoE groups) unroll and every body is counted. Token-level recurrences
+    (Mamba/RWKV) stay scanned — their flop share is <1% (audited in
+    DESIGN.md §Roofline-accounting).
+    """
+    return length if os.environ.get("REPRO_UNROLL_SCANS") == "1" else 1
+
+
+def chunked_scan(body, carry, xs, *, chunk: int = 64, remat: bool = True):
+    """``lax.scan(body, carry, xs)`` in remat'd chunks.
+
+    xs: pytree with a shared leading time axis T (padded here if needed —
+    body must tolerate trailing garbage steps ONLY if T % chunk != 0 and the
+    caller slices ys; we instead pad and slice internally, so body runs on
+    padded steps with the final carry taken at step T).
+    """
+    t = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+
+    if pad:
+        # run the clean prefix in chunks, the ragged tail unchunked
+        head = jax.tree.map(lambda a: a[: t - (t % chunk)], xs)
+        tail = jax.tree.map(lambda a: a[t - (t % chunk):], xs)
+        carry, ys_head = chunked_scan(body, carry, head, chunk=chunk,
+                                      remat=remat) if t >= chunk else (carry,
+                                                                       None)
+        carry, ys_tail = jax.lax.scan(body, carry, tail)
+        if ys_head is None:
+            return carry, ys_tail
+        ys = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                          ys_head, ys_tail)
+        return carry, ys
+
+    nc = t // chunk
+
+    def chunk_body(c, xc):
+        return jax.lax.scan(body, c, xc)
+
+    f = jax.checkpoint(chunk_body) if remat else chunk_body
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(nc, chunk, *a.shape[1:]), xs)
+    carry, ys_c = jax.lax.scan(f, carry, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape(nc * chunk, *a.shape[2:]), ys_c)
+    return carry, ys
+
+
+def stacked_init(layer_init, key, n: int, *args, **kwargs):
+    """vmap a per-layer init over ``n`` keys → params stacked on axis 0.
+
+    Returns (stacked_params, pspecs_with_leading_None).
+    """
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: layer_init(k, *args, **kwargs)[0])(keys)
+    _, pspecs = layer_init(keys[0], *args, **kwargs)
+    pspecs = jax.tree.map(lambda s: (None, *s), pspecs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return params, pspecs

@@ -1,0 +1,5 @@
+"""Serving runtime: quantized weights, KV/LOP caches, prefill + decode."""
+
+from repro.serving.cache import init_cache
+from repro.serving.engine import prefill, serve_step
+from repro.serving.quantize import quantize_params

@@ -1,0 +1,117 @@
+"""Serving caches: int8 KV + per-token absmax scales + packed LOP features.
+
+The KV cache follows the paper's memory layout insight: exact keys/values in
+int8 (absmax barrier), plus the 4-bit (sgn‖LO) *feature cache* the LOP screen
+reads instead of the exact keys — the screen touches M·d/2 bytes while exact
+attention touches only the K selected candidate blocks.
+
+Capacity is block-aligned (``lop_block``) so candidate fetches stay
+contiguous. Recurrent families cache their state instead ("KV cache of
+seq_len" = recurrent state for SSM — DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def attn_cache_zeros(cfg, batch: int, capacity: int):
+    hkv, dh = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, hkv, capacity, dh), jnp.int8),
+        "v": jnp.zeros((batch, hkv, capacity, dh), jnp.int8),
+        "k_scale": jnp.zeros((batch, hkv, capacity), jnp.float32),
+        "v_scale": jnp.zeros((batch, hkv, capacity), jnp.float32),
+        "feat": jnp.zeros((batch, hkv, capacity, dh // 2), jnp.uint8),
+    }
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(
+        lambda a: jnp.zeros((n, *a.shape), a.dtype), tree)
+
+
+def init_cache(cfg, batch: int, max_len: int, *, align: int | None = None):
+    """Zero cache sized for ``max_len`` tokens (+1 block of decode slack).
+
+    ``align`` (default lop_block) also aligns capacity to the SP shard
+    count × block so every M-shard is block-aligned.
+    """
+    cap = round_up(max_len + 1, align or cfg.lop_block)
+    cache = {"lengths": jnp.zeros((batch,), jnp.int32)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache["layers"] = _stack(attn_cache_zeros(cfg, batch, cap),
+                                 cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_sb = cfg.n_layers // cfg.attn_every
+        n_mamba = cfg.attn_every - 1
+        cache["blocks"] = {
+            "attn": _stack(attn_cache_zeros(cfg, batch, cap), n_sb),
+            "mamba": {
+                "ssm": jnp.zeros((n_sb, n_mamba, batch, cfg.d_inner,
+                                  cfg.mamba_d_state), jnp.float32),
+                "conv": jnp.zeros((n_sb, n_mamba, batch, cfg.mamba_conv - 1,
+                                   cfg.d_inner), jnp.float32),
+            },
+        }
+    elif cfg.family == "ssm":
+        cache["layers"] = {
+            "wkv": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, cfg.hd,
+                              cfg.hd), jnp.float32),
+            "x_tm": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model),
+                              jnp.float32),
+            "x_cm": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model),
+                              jnp.float32),
+        }
+    elif cfg.family == "encdec":
+        cross_cap = round_up(cfg.cross_ctx, align or cfg.lop_block)
+        cache["layers"] = _stack(attn_cache_zeros(cfg, batch, cap),
+                                 cfg.n_layers)
+        cache["cross"] = _stack(attn_cache_zeros(cfg, batch, cross_cap),
+                                cfg.n_layers)
+        cache["cross_len"] = jnp.zeros((batch,), jnp.int32)
+    else:
+        raise ValueError(cfg.family)
+    return cache
+
+
+def cache_pspecs(cfg, cache, *, batch_axes="dp", seq_axes="sp"):
+    """Logical-axis tree for the cache (M sequence-sharded, batch over dp).
+
+    Attention caches shard the token axis over the model axis (SP) — the
+    quota-sharded LOP selection in :mod:`repro.distributed.sp_decode` works
+    per M-shard. Recurrent state shards its inner dim over the model axis.
+    """
+    def spec_for(path, a):
+        name = path[-1]
+        if name in ("k", "v", "feat"):
+            return (batch_axes, None, seq_axes, None)
+        if name in ("k_scale", "v_scale"):
+            return (batch_axes, None, seq_axes)
+        if name in ("lengths", "cross_len"):
+            return (None,)
+        if name == "ssm":
+            return (batch_axes, "tp", None)
+        if name == "conv":
+            return (batch_axes, None, "tp")
+        if name == "wkv":
+            return (batch_axes, "tp", None, None)
+        if name in ("x_tm", "x_cm"):
+            return (batch_axes, None, None)
+        raise KeyError(path)
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        spec = spec_for(path, node)
+        # stacked leading dims (layers / superblocks / per-block sublayers)
+        extra = node.ndim - len(spec)
+        return (None,) * extra + spec
+
+    return walk((), cache)

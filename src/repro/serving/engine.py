@@ -1,0 +1,628 @@
+"""Serving engine: prefill + one-token decode for every family.
+
+This is the paper's full pipeline on TPU terms (DESIGN.md §2):
+
+  prefill   — BitLinear projections (TINT) → rope → absmax barrier → int8
+              flash attention; K/V/LOP-feature cache written per layer.
+  decode    — one token: project/rope/quantize, append to cache, **LOP
+              screen** over the 4-bit feature cache, comparison-free block
+              top-K, exact int8 attention confined to the K candidate
+              blocks, BitLinear FFN/MoE.
+
+Attention-free layers (Mamba/RWKV) carry recurrent state instead. With an
+active mesh the decode attention runs the SP quota-sharded core
+(:mod:`repro.distributed.sp_decode`) — the cache's token axis lives sharded
+across the model axis and softmax stats merge flash-decoding style.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lop import lop_features, pack_features
+from repro.core.qlinear import qlinear
+from repro.core.quantization import quantize
+from repro.distributed.partitioning import current_mesh, shard
+from repro.kernels import ops
+from repro.models import rwkv6
+from repro.models.layers import (embedding_apply, head_apply, norm_apply,
+                                 rope)
+from repro.models.mamba import mamba_decode_step, mamba_forward
+from repro.models.moe import ffn_apply, moe_apply
+from repro.serving.cache import init_cache, round_up
+from repro.serving.lop_select import (k_keep_blocks, select_blocks,
+                                      token_valid_mask)
+
+NEG_INF = -1e30
+
+
+def _layer_scan(body, x, xs):
+    """Layer-stack scan with dry-run accounting unroll."""
+    from repro.models.scan_utils import accounting_unroll
+    length = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, x, xs, unroll=accounting_unroll(length))
+
+
+def _q(x, axis=-1):
+    qt = quantize(x, axis=axis)
+    return qt.values, qt.scale
+
+
+def _shard_batch(x, *rest):
+    """Constrain batch over dp only when it divides (long_500k has B=1)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    dp = int(mesh.shape.get("data", 1)) * int(mesh.shape.get("pod", 1))
+    if x.shape[0] % dp == 0:
+        return shard(x, "dp", *rest)
+    return x
+
+
+# ===========================================================================
+# int8 chunked attention (prefill path; jnp/MXU form of the flash kernel)
+# ===========================================================================
+
+def int8_chunked_attention(qi, ki, vi, qs, ks, vs, *, causal: bool,
+                           window: int = 0, q_offset=0, kv_len=None,
+                           chunk: int = 256,
+                           softmax_scale: float | None = None):
+    """GQA int8 attention, streamed over query chunks.
+
+    qi int8 [B, H, Sq, dh]; ki/vi int8 [B, Hkv, Skv, dh];
+    qs f32 [B, H, Sq]; ks/vs f32 [B, Hkv, Skv]; kv_len int32 [B] or None.
+    → f32 [B, H, Sq, dh]. Sq is padded to the chunk size internally.
+
+    K/V are repeated to the flat H dim so TP head sharding survives (see
+    models/attention.py); with non-divisible H the chunk rows SP-shard.
+    """
+    import os
+
+    from repro.models.attention import _model_axis_size
+
+    b, h, sq, dh = qi.shape
+    hkv, skv = ki.shape[1], ki.shape[2]
+    if softmax_scale is None:
+        softmax_scale = dh ** -0.5
+    # accounting probes raise the chunk (tiling-invariant — see
+    # models/attention.py)
+    chunk = int(os.environ.get("REPRO_ATTN_CHUNK", chunk))
+    if hkv != h:
+        rep = h // hkv
+        ki = jnp.repeat(ki, rep, axis=1)
+        vi = jnp.repeat(vi, rep, axis=1)
+        ks = jnp.repeat(ks, rep, axis=1)
+        vs = jnp.repeat(vs, rep, axis=1)
+    head_sharded = h % _model_axis_size() == 0
+    chunk = min(chunk, sq)
+    pad = (-sq) % chunk
+    if pad:
+        qi = jnp.pad(qi, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        qs = jnp.pad(qs, ((0, 0), (0, 0), (0, pad)))
+    nc = qi.shape[2] // chunk
+    qg = qi.reshape(b, h, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    qsg = qs.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+    kpos = jnp.arange(skv)
+    # beyond-paper hillclimb flag: keep the QKᵀ einsum in the integer domain
+    # (int8×int8→int32, BoothFlex-faithful; 2× MXU throughput on TPU)
+    int8_logits = os.environ.get("REPRO_INT8_LOGITS") == "1"
+    vf = vi.astype(jnp.float32) * vs[..., None]
+    if int8_logits:
+        kk = ki
+    else:
+        kk = ki.astype(jnp.float32) * ks[..., None]      # dequant once
+    if head_sharded:
+        kk = shard(kk, "dp", "tp", None, None)
+        vf = shard(vf, "dp", "tp", None, None)
+
+    def body(_, args):
+        qc, qsc, ci = args                               # [B, H, C, dh]
+        if head_sharded:
+            qc = shard(qc, "dp", "tp", None, None)
+        else:
+            qc = shard(qc, "dp", None, "sp", None)
+        if int8_logits:
+            s = jnp.einsum("bhcd,bhmd->bhcm", qc, kk,
+                           preferred_element_type=jnp.int32)
+            s = s.astype(jnp.float32) * ks[:, :, None, :]
+        else:
+            s = jnp.einsum("bhcd,bhmd->bhcm", qc.astype(jnp.float32), kk,
+                           preferred_element_type=jnp.float32)
+        s = s * qsc[..., None] * softmax_scale
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((b, chunk, skv), bool)
+        if causal:
+            mask &= qpos[None, :, None] >= kpos[None, None, :]
+            if window:
+                mask &= (qpos[None, :, None] - kpos[None, None, :]) < window
+        if kv_len is not None:
+            mask &= kpos[None, None, :] < kv_len[:, None, None]
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhcm,bhmd->bhcd", p, vf)
+        return None, o
+
+    from repro.models.scan_utils import accounting_unroll
+    _, oc = jax.lax.scan(body, None, (qg, qsg, jnp.arange(nc)),
+                         unroll=accounting_unroll(nc))
+    o = oc.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * chunk, dh)
+    return o[:, :, :sq]
+
+
+# ===========================================================================
+# Attention layer — prefill
+# ===========================================================================
+
+def _project_qkv(cfg, lp, h, src=None):
+    b, s, _ = h.shape
+    src = h if src is None else src
+    skv = src.shape[1]
+    q = qlinear(lp["wq"], h).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = qlinear(lp["wk"], src).reshape(b, skv, cfg.n_kv_heads, cfg.hd)
+    v = qlinear(lp["wv"], src).reshape(b, skv, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _quantize_kv(k, v):
+    """[B, S, Hkv, dh] f32 → int8 caches in [B, Hkv, S, ...] layout."""
+    ki, ksc = _q(k)
+    vi, vsc = _q(v)
+    ki = ki.transpose(0, 2, 1, 3)
+    vi = vi.transpose(0, 2, 1, 3)
+    ksc = ksc[..., 0].transpose(0, 2, 1)
+    vsc = vsc[..., 0].transpose(0, 2, 1)
+    feat = pack_features(lop_features(ki))
+    return ki, vi, ksc, vsc, feat
+
+
+def _pad_cache(arr, cap: int, axis: int = 2):
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, cap - arr.shape[axis])
+    return jnp.pad(arr, pad)
+
+
+def attn_prefill(cfg, lp, h, *, capacity: int, cross_src=None):
+    """→ (attn_out [B,S,D], cache_layer). Caches K/V/features at [0, S)."""
+    b, s, _ = h.shape
+    q, k, v = _project_qkv(cfg, lp, h, src=cross_src)
+    if cross_src is None:
+        positions = jnp.arange(s)[None, :]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    qi, qsc = _q(q)
+    ki, vi, ksc, vsc, feat = _quantize_kv(k, v)
+    qi = qi.transpose(0, 2, 1, 3)                        # [B, H, S, dh]
+    qsc = qsc[..., 0].transpose(0, 2, 1)
+
+    o = int8_chunked_attention(qi, ki, vi, qsc, ksc, vsc,
+                               causal=cross_src is None,
+                               window=cfg.swa_window if cross_src is None
+                               else 0)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    out = qlinear(lp["wo"], o.astype(jnp.float32))
+
+    cache_l = {
+        "k": _pad_cache(ki, capacity), "v": _pad_cache(vi, capacity),
+        "k_scale": _pad_cache(ksc, capacity), "v_scale": _pad_cache(vsc,
+                                                                    capacity),
+        "feat": _pad_cache(feat, capacity),
+    }
+    return out, cache_l
+
+
+def build_cross_cache(cfg, lp, enc, capacity: int):
+    """Quantize encoder memory through this layer's K/V projections."""
+    b, s, _ = enc.shape
+    k = qlinear(lp["wk"], enc).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = qlinear(lp["wv"], enc).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    ki, vi, ksc, vsc, feat = _quantize_kv(k, v)
+    return {
+        "k": _pad_cache(ki, capacity), "v": _pad_cache(vi, capacity),
+        "k_scale": _pad_cache(ksc, capacity),
+        "v_scale": _pad_cache(vsc, capacity),
+        "feat": _pad_cache(feat, capacity),
+    }
+
+
+def cross_attn_prefill(cfg, lp, h, cross_cache, cross_len):
+    """Decoder-side cross attention over a prequantized encoder cache."""
+    b, s, _ = h.shape
+    q = qlinear(lp["wq"], h).reshape(b, s, cfg.n_heads, cfg.hd)
+    qi, qsc = _q(q)
+    qi = qi.transpose(0, 2, 1, 3)
+    qsc = qsc[..., 0].transpose(0, 2, 1)
+    o = int8_chunked_attention(
+        qi, cross_cache["k"], cross_cache["v"], qsc,
+        cross_cache["k_scale"], cross_cache["v_scale"],
+        causal=False, kv_len=cross_len)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    return qlinear(lp["wo"], o.astype(jnp.float32))
+
+
+# ===========================================================================
+# Attention layer — decode (LOP sparse / dense baseline / SP-sharded)
+# ===========================================================================
+
+def lop_decode_attention(cfg, qi, qsc, cl, new_len, *, window: int,
+                         use_lop: bool = True):
+    """Local (non-SP) decode attention core.
+
+    qi int8 [B, H, dh]; qsc f32 [B, H, 1]; cl = cache layer; new_len [B].
+    → f32 [B, H, dh].
+    """
+    b, h, dh = qi.shape
+    hkv = cl["k"].shape[1]
+    g = h // hkv
+    m = cl["k"].shape[2]
+    sm = dh ** -0.5
+
+    if not use_lop:
+        # dense baseline: exact int8 attention over all M cached tokens
+        qg = qi.reshape(b, hkv, g, dh)
+        s = jnp.einsum("bhgd,bhmd->bhgm", qg, cl["k"],
+                       preferred_element_type=jnp.int32).astype(jnp.float32)
+        s = (s * qsc.reshape(b, hkv, g, 1) * cl["k_scale"][:, :, None, :]
+             * sm)
+        valid = token_valid_mask(m, new_len, window)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        vf = cl["v"].astype(jnp.float32) * cl["v_scale"][..., None]
+        return jnp.einsum("bhgm,bhmd->bhgd", p, vf).reshape(b, h, dh)
+
+    import os
+    block = cfg.lop_block
+    k_keep = k_keep_blocks(cfg, m)
+    qg = qi.reshape(b, hkv, g, dh)
+    # 1. screen — surrogate scores from the packed 4-bit feature cache
+    screen = jax.vmap(jax.vmap(ops.lop_screen))          # over (B, Hkv)
+    scores = screen(qg, cl["feat"])                      # [B, Hkv, G, M]
+    # beyond-paper: group-shared selection — one candidate set per KV head
+    # (max of the group's surrogate scores) cuts gather volume G×
+    shared = os.environ.get("REPRO_GQA_SHARED_SELECT") == "1"
+    if shared:
+        scores = jnp.max(scores, axis=2, keepdims=True)  # [B, Hkv, 1, M]
+    # 2. comparison-free block top-K
+    idx, gate_tokens = select_blocks(scores, new_len, block=block,
+                                     k_keep=k_keep, window=window)
+    qsc_g = qsc.reshape(b, hkv, g)
+
+    if shared:
+        # 3./4. one gather + one g-wide exact attention per KV head
+        def one_kv(qv, qs, kc, vc, ks, vs, bi, gt):
+            return ops.sparse_decode(qv, kc, vc, qs[:, None], ks[:, None],
+                                     vs[:, None], bi, gt, block=block,
+                                     softmax_scale=sm)
+
+        per_kv = jax.vmap(one_kv)
+        per_b = jax.vmap(per_kv)
+        out = per_b(qg, qsc_g, cl["k"], cl["v"], cl["k_scale"],
+                    cl["v_scale"], idx[:, :, 0], gate_tokens[:, :, 0])
+        return out.reshape(b, h, dh)
+
+    # 3./4. gather candidates + exact attention (per q-head, paper-faithful)
+    def one(qv, qs, kc, vc, ks, vs, bi, gt):
+        return ops.sparse_decode(qv[None], kc, vc, qs.reshape(1, 1),
+                                 ks[:, None], vs[:, None], bi, gt,
+                                 block=block, softmax_scale=sm)[0]
+
+    per_g = jax.vmap(one, in_axes=(0, 0, None, None, None, None, 0, 0))
+    per_kv = jax.vmap(per_g)
+    per_b = jax.vmap(per_kv)
+    out = per_b(qg, qsc_g, cl["k"], cl["v"], cl["k_scale"], cl["v_scale"],
+                idx, gate_tokens)                        # [B, Hkv, G, dh]
+    return out.reshape(b, h, dh)
+
+
+def _write_token(cl, ki, vi, ksc, vsc, feat, lengths):
+    """Append one quantized token per sequence at its own position."""
+    def wr(arr, val, pos):
+        # arr [Hkv, M, d]; val [Hkv, d]
+        return jax.lax.dynamic_update_slice(
+            arr, val[:, None], (0, pos) + (0,) * (arr.ndim - 2))
+
+    def wr_scale(arr, val, pos):
+        return jax.lax.dynamic_update_slice(arr, val[:, None], (0, pos))
+
+    cl = dict(cl)
+    cl["k"] = jax.vmap(wr)(cl["k"], ki, lengths)
+    cl["v"] = jax.vmap(wr)(cl["v"], vi, lengths)
+    cl["feat"] = jax.vmap(wr)(cl["feat"], feat, lengths)
+    cl["k_scale"] = jax.vmap(wr_scale)(cl["k_scale"], ksc[..., 0], lengths)
+    cl["v_scale"] = jax.vmap(wr_scale)(cl["v_scale"], vsc[..., 0], lengths)
+    return cl
+
+
+def attn_decode(cfg, lp, h, cl, lengths, *, use_lop=True, sp_axes=None):
+    """One-token self-attention with cache append. h [B, 1, D]."""
+    b = h.shape[0]
+    q, k, v = _project_qkv(cfg, lp, h)
+    positions = lengths[:, None]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    qi, qsc = _q(q[:, 0])                                # [B, H, dh]
+    ki, ksc = _q(k[:, 0])                                # [B, Hkv, dh]
+    vi, vsc = _q(v[:, 0])
+    feat = pack_features(lop_features(ki))
+    new_len = lengths + 1
+
+    if sp_axes:
+        from repro.distributed.sp_decode import sp_decode_attention
+        out, cl = sp_decode_attention(
+            cfg, qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths,
+            window=cfg.swa_window, use_lop=use_lop and cfg.use_lop,
+            sp_axes=sp_axes)
+    else:
+        cl = _write_token(cl, ki, vi, ksc, vsc, feat, lengths)
+        out = lop_decode_attention(cfg, qi, qsc, cl, new_len,
+                                   window=cfg.swa_window,
+                                   use_lop=use_lop and cfg.use_lop)
+    out = qlinear(lp["wo"], out.reshape(b, 1, cfg.q_dim).astype(jnp.float32))
+    return out, cl
+
+
+def cross_attn_decode(cfg, lp, h, cross_cl, cross_len, *, use_lop=True,
+                      sp_axes=None):
+    """One-token cross-attention (no cache write)."""
+    b = h.shape[0]
+    q = qlinear(lp["wq"], h).reshape(b, cfg.n_heads, cfg.hd)
+    qi, qsc = _q(q)
+    if sp_axes:
+        from repro.distributed.sp_decode import sp_decode_attention
+        out, _ = sp_decode_attention(
+            cfg, qi, qsc, None, None, None, None, None, cross_cl, cross_len,
+            window=0, use_lop=use_lop and cfg.use_lop, sp_axes=sp_axes,
+            write=False)
+    else:
+        out = lop_decode_attention(cfg, qi, qsc, cross_cl, cross_len,
+                                   window=0, use_lop=use_lop and cfg.use_lop)
+    return qlinear(lp["wo"], out.reshape(b, 1, cfg.q_dim).astype(jnp.float32))
+
+
+# ===========================================================================
+# Layer bodies
+# ===========================================================================
+
+def _mlp(cfg, lp, x):
+    h = norm_apply(lp["ln2"], x, cfg.norm)
+    if "moe" in lp:
+        y, _ = moe_apply(cfg, lp["moe"], h)
+    else:
+        y = ffn_apply(cfg, lp["ffn"], h)
+    return x + y
+
+
+def _decoder_layer_prefill(cfg, lp, x, *, capacity, enc=None, cross_cap=None,
+                           cross_len=None):
+    x = _shard_batch(x)
+    h = norm_apply(lp["ln1"], x, cfg.norm)
+    attn_out, cache_l = attn_prefill(cfg, lp["attn"], h, capacity=capacity)
+    x = x + attn_out
+    out = {"self": cache_l}
+    if enc is not None:
+        cross_cache = build_cross_cache(cfg, lp["xattn"], enc, cross_cap)
+        h = norm_apply(lp["ln_x"], x, cfg.norm)
+        x = x + cross_attn_prefill(cfg, lp["xattn"], h, cross_cache,
+                                   cross_len)
+        out["cross"] = cross_cache
+    return _mlp(cfg, lp, x), out
+
+
+def _decoder_layer_decode(cfg, lp, x, cl, lengths, *, use_lop, sp_axes,
+                          cross_cl=None, cross_len=None):
+    x = _shard_batch(x)
+    h = norm_apply(lp["ln1"], x, cfg.norm)
+    attn_out, new_cl = attn_decode(cfg, lp["attn"], h, cl, lengths,
+                                   use_lop=use_lop, sp_axes=sp_axes)
+    x = x + attn_out
+    if cross_cl is not None:
+        h = norm_apply(lp["ln_x"], x, cfg.norm)
+        x = x + cross_attn_decode(cfg, lp["xattn"], h, cross_cl, cross_len,
+                                  use_lop=use_lop, sp_axes=sp_axes)
+    return _mlp(cfg, lp, x), new_cl
+
+
+def _mamba_layer_prefill(cfg, lp, x):
+    x = _shard_batch(x)
+    h = norm_apply(lp["ln1"], x, cfg.norm)
+    y, state = mamba_forward(cfg, lp["mamba"], h)
+    return _mlp(cfg, lp, x + y), state
+
+
+def _mamba_layer_decode(cfg, lp, x, state):
+    x = _shard_batch(x)
+    h = norm_apply(lp["ln1"], x, cfg.norm)
+    y, state = mamba_decode_step(cfg, lp["mamba"], h, state)
+    return _mlp(cfg, lp, x + y), state
+
+
+def _rwkv_layer(cfg, lp, x, st):
+    """Works for both prefill (T=S, zero states in st) and decode (T=1)."""
+    x = _shard_batch(x)
+    h = norm_apply(lp["ln1"], x, cfg.norm)
+    y, x_tm, wkv = rwkv6.rwkv_time_mix(cfg, lp["tm"], h, st["x_tm"],
+                                       st["wkv"])
+    x = x + y
+    h = norm_apply(lp["ln2"], x, cfg.norm)
+    y, x_cm = rwkv6.rwkv_channel_mix(cfg, lp["tm"], h, st["x_cm"])
+    return x + y, {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}
+
+
+# ===========================================================================
+# Drivers
+# ===========================================================================
+
+def _embed(cfg, qp, tokens, patches=None):
+    x = embedding_apply(qp["embed"], tokens)
+    if cfg.family == "vlm" and patches is not None:
+        proj = patches.astype(x.dtype) @ qp["projector"]["w"]
+        x = jnp.concatenate([proj, x], axis=1)
+    return x
+
+
+def _logits(cfg, qp, x_last):
+    x = norm_apply(qp["ln_f"], x_last, cfg.norm)
+    return head_apply(qp["head"], x)
+
+
+def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
+            use_lop=True, sp_axes=None, cache_align=None):
+    """Full-sequence forward writing the cache. → (last logits [B,V], cache).
+
+    ``max_len`` sizes the cache capacity (defaults to the prompt length +
+    one decode block of slack); ``cache_align`` aligns capacity for SP
+    sharding (must match ``init_cache``'s align).
+    """
+    b = tokens.shape[0]
+    x = _embed(cfg, qp, tokens, patches)
+    s_total = x.shape[1]
+    max_len = max(max_len if max_len is not None else 0, s_total)
+    cap = round_up(max_len + 1, cache_align or cfg.lop_block)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, lp):
+            x, out = _decoder_layer_prefill(cfg, lp, x, capacity=cap)
+            return x, out["self"]
+
+        x, layers_cache = _layer_scan(body, x, qp["layers"])
+        cache = {"lengths": jnp.full((b,), s_total, jnp.int32),
+                 "layers": layers_cache}
+    elif cfg.family == "hybrid":
+        def body(x, bp):
+            outs_m = []
+            attn_cache = None
+            for j in range(cfg.attn_every):
+                sub = bp[f"sub{j}"]
+                if cfg.is_attn_layer(j):
+                    x, out = _decoder_layer_prefill(cfg, sub, x, capacity=cap)
+                    attn_cache = out["self"]
+                else:
+                    x, st = _mamba_layer_prefill(cfg, sub, x)
+                    outs_m.append(st)
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *outs_m)
+            return x, {"attn": attn_cache, "mamba": stacked}
+
+        x, blocks = _layer_scan(body, x, qp["blocks"])
+        cache = {"lengths": jnp.full((b,), s_total, jnp.int32),
+                 "blocks": blocks}
+    elif cfg.family == "ssm":
+        zeros = {
+            "wkv": jnp.zeros((b, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32),
+            "x_tm": jnp.zeros((b, 1, cfg.d_model), jnp.float32),
+            "x_cm": jnp.zeros((b, 1, cfg.d_model), jnp.float32),
+        }
+
+        def body(x, lp):
+            x, st = _rwkv_layer(cfg, lp, x, zeros)
+            return x, st
+
+        x, layers_cache = _layer_scan(body, x, qp["layers"])
+        cache = {"lengths": jnp.full((b,), s_total, jnp.int32),
+                 "layers": layers_cache}
+    elif cfg.family == "encdec":
+        assert frames is not None
+        enc = frames.astype(jnp.float32)
+        enc_cap = round_up(max(cfg.cross_ctx, enc.shape[1]),
+                           cache_align or cfg.lop_block)
+
+        def enc_body(e, lp):
+            e = _shard_batch(e)
+            h = norm_apply(lp["ln1"], e, cfg.norm)
+            q, k, v = _project_qkv(cfg, lp["attn"], h)
+            qi, qsc = _q(q)
+            ki, vi, ksc, vsc, _ = _quantize_kv(k, v)
+            o = int8_chunked_attention(
+                qi.transpose(0, 2, 1, 3), ki, vi,
+                qsc[..., 0].transpose(0, 2, 1), ksc, vsc, causal=False)
+            o = o.transpose(0, 2, 1, 3).reshape(e.shape[0], e.shape[1],
+                                                cfg.q_dim)
+            e = e + qlinear(lp["attn"]["wo"], o)
+            return _mlp(cfg, lp, e), None
+
+        enc, _ = _layer_scan(enc_body, enc, qp["enc_layers"])
+        enc = norm_apply(qp["ln_enc"], enc, cfg.norm)
+        cross_len = jnp.full((b,), enc.shape[1], jnp.int32)
+
+        def body(x, lp):
+            x, out = _decoder_layer_prefill(cfg, lp, x, capacity=cap,
+                                            enc=enc, cross_cap=enc_cap,
+                                            cross_len=cross_len)
+            return x, out
+
+        x, outs = _layer_scan(body, x, qp["layers"])
+        cache = {"lengths": jnp.full((b,), s_total, jnp.int32),
+                 "layers": outs["self"], "cross": outs["cross"],
+                 "cross_len": cross_len}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(cfg, qp, x[:, -1])
+    return logits, cache
+
+
+def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
+    """One decode step. tokens [B, 1] → (logits [B, V], updated cache)."""
+    lengths = cache["lengths"]
+    x = _embed(cfg, qp, tokens)
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, inp):
+            lp, cl = inp
+            x, ncl = _decoder_layer_decode(cfg, lp, x, cl, lengths,
+                                           use_lop=use_lop, sp_axes=sp_axes)
+            return x, ncl
+
+        x, layers_cache = _layer_scan(body, x, (qp["layers"],
+                                              cache["layers"]))
+        new_cache["layers"] = layers_cache
+    elif cfg.family == "hybrid":
+        def body(x, inp):
+            bp, bc = inp
+            new_m = []
+            mi = 0
+            attn_cache = None
+            for j in range(cfg.attn_every):
+                sub = bp[f"sub{j}"]
+                if cfg.is_attn_layer(j):
+                    x, attn_cache = _decoder_layer_decode(
+                        cfg, sub, x, bc["attn"], lengths, use_lop=use_lop,
+                        sp_axes=sp_axes)
+                else:
+                    st = jax.tree.map(lambda a: a[mi], bc["mamba"])
+                    x, st = _mamba_layer_decode(cfg, sub, x, st)
+                    new_m.append(st)
+                    mi += 1
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+            return x, {"attn": attn_cache, "mamba": stacked}
+
+        x, blocks = _layer_scan(body, x, (qp["blocks"], cache["blocks"]))
+        new_cache["blocks"] = blocks
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            lp, st = inp
+            x, st = _rwkv_layer(cfg, lp, x, st)
+            return x, st
+
+        x, layers_cache = _layer_scan(body, x, (qp["layers"],
+                                              cache["layers"]))
+        new_cache["layers"] = layers_cache
+    elif cfg.family == "encdec":
+        def body(x, inp):
+            lp, cl, xcl = inp
+            x, ncl = _decoder_layer_decode(
+                cfg, lp, x, cl, lengths, use_lop=use_lop, sp_axes=sp_axes,
+                cross_cl=xcl, cross_len=cache["cross_len"])
+            return x, ncl
+
+        x, layers_cache = _layer_scan(
+            body, x, (qp["layers"], cache["layers"], cache["cross"]))
+        new_cache["layers"] = layers_cache
+    else:
+        raise ValueError(cfg.family)
+
+    new_cache["lengths"] = lengths + 1
+    logits = _logits(cfg, qp, x[:, -1])
+    return logits, new_cache

@@ -1,0 +1,76 @@
+"""LOP screen → comparison-free block top-K selection (batched serving form).
+
+Wraps the core selector (:mod:`repro.core.lop`) for the engine's decode
+shapes: scores arrive per (batch, kv-head, group-head), selection is at
+*block* granularity (paper: "only those candidate blocks are requested"),
+and the output is the (block_idx, gate_tokens) contract the sparse-decode
+kernel consumes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lop import block_reduce_scores, comparison_free_topk
+
+INT32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def token_valid_mask(m: int, new_len: jax.Array, window: int,
+                     pos_offset: int = 0) -> jax.Array:
+    """[B, M] bool — cache positions visible to the current query.
+
+    ``pos_offset`` maps local shard positions to global (SP path).
+    """
+    pos = pos_offset + jnp.arange(m)[None, :]
+    valid = pos < new_len[:, None]
+    if window:
+        valid &= pos >= (new_len[:, None] - window)
+    return valid
+
+
+def select_blocks(scores: jax.Array, new_len: jax.Array, *, block: int,
+                  k_keep: int, window: int = 0, n_buckets: int = 64,
+                  block_offset: int = 0):
+    """scores int32 [B, Hkv, G, M]; new_len int32 [B] →
+    (block_idx [B,Hkv,G,K], gate_tokens [B,Hkv,G,3K] = [gate ‖ end ‖ start]).
+
+    ``block_offset`` shifts block ids to global numbering when scoring an
+    M-shard (the SP quota-sharded path).
+    """
+    b, hkv, g, m = scores.shape
+    nb = m // block
+    valid = token_valid_mask(m, new_len, window,
+                             pos_offset=block_offset * block)
+    s_masked = jnp.where(valid[:, None, None, :], scores, INT32_MIN)
+    blk = block_reduce_scores(s_masked, block)            # [B,Hkv,G,NB]
+    blk_valid = jnp.any(valid.reshape(b, nb, block), -1)  # [B,NB]
+    blk_valid = jnp.broadcast_to(blk_valid[:, None, None, :],
+                                 (b, hkv, g, nb))
+
+    flat_s = blk.reshape(-1, nb)
+    flat_v = blk_valid.reshape(-1, nb)
+    idx, gate = jax.vmap(
+        lambda s, v: comparison_free_topk(s, k_keep, n_buckets=n_buckets,
+                                          valid=v))(flat_s, flat_v)
+    idx = idx.reshape(b, hkv, g, k_keep)
+    gate = gate.reshape(b, hkv, g, k_keep)
+
+    # live interval [start, end) inside each selected block
+    blk_start = (idx + block_offset) * block              # global token pos
+    len_b = new_len[:, None, None, None]
+    end = jnp.clip(len_b - blk_start, 0, block)
+    if window:
+        start = jnp.clip(len_b - window - blk_start, 0, block)
+    else:
+        start = jnp.zeros_like(end)
+    gate_tokens = jnp.concatenate(
+        [gate.astype(jnp.int32), end, start], axis=-1)    # [B,Hkv,G,3K]
+    return idx, gate_tokens
+
+
+def k_keep_blocks(cfg, m: int) -> int:
+    """Static K (blocks kept) for a capacity-M cache: ⌈keep·M/block⌉."""
+    nb = m // cfg.lop_block
+    return max(1, int(round(cfg.lop_keep * nb)))

@@ -1,0 +1,68 @@
+"""Convert trained master weights → the serving (deployment) format.
+
+Every eligible projection becomes the TINT stream format: packed 2-bit
+ternary codes (4 weights/byte in HBM) + one absmean scale γ — the paper's
+~8× weight-memory reduction vs bf16. Embedding/head/norms/router/conv/SSM
+tensors stay high-precision (BitNet's convention), as do projections whose
+reduction dim is too small to pack (< 4-aligned, e.g. Mamba's tiny dt_proj
+in reduced configs).
+
+Stacked layer weights [L, k, n] pack to [L, k//4, n] (scale [L, 1, 1]) so
+the serving stack still scans. Packed dicts carry no static shape metadata
+(ints would become scan-traced leaves); ``k`` is re-derived from
+``packed.shape`` at apply time (see :mod:`repro.core.qlinear`).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.qlinear import is_packed, qlinear, qlinear_expert  # noqa: F401 (re-export)
+from repro.core.ternary import pack_ternary, ternary_quantize
+
+# param-path names that stay high-precision even when 2-D
+_KEEP_FP = ("head", "projector", "router", "mu", "mu_c", "u",
+            "A_log", "D", "conv_w", "conv_b", "w_base", "ln_x", "table")
+_EXPERT_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def _quantize_linear(w: jax.Array):
+    """w [..., k, n] f32 → {"packed": uint8 [..., k//4, n], "scale": f32}."""
+    lead = w.shape[:-2]
+    k, n = w.shape[-2:]
+    w2 = w.reshape(-1, k, n)
+
+    def one(wi):
+        wt, gamma = ternary_quantize(wi)
+        return pack_ternary(wt), gamma.reshape(())
+
+    packed, scale = jax.vmap(one)(w2)
+    return {"packed": packed.reshape(*lead, k // 4, n),
+            "scale": scale.reshape(*lead, 1, 1)}
+
+
+def _eligible(name: str, k: int, quant: str) -> bool:
+    return quant == "ternary" and name not in _KEEP_FP and k % 4 == 0 and k >= 16
+
+
+def quantize_params(cfg, params):
+    """Training param tree → serving tree (same structure, linears packed)."""
+    def walk(path, node):
+        if isinstance(node, dict):
+            if "w" in node and not isinstance(node["w"], dict):
+                name = path[-1] if path else ""
+                if _eligible(name, node["w"].shape[-2], cfg.quant):
+                    out = _quantize_linear(node["w"])
+                    if "b" in node:
+                        out["b"] = node["b"]
+                    return out
+                return dict(node)
+            return {key: walk(path + (key,), val)
+                    for key, val in node.items()}
+        # raw arrays: MoE expert stacks [L, E, k, n] quantize as well
+        if (node.ndim >= 2 and path and path[-1] in _EXPERT_NAMES
+                and _eligible(path[-1], node.shape[-2], cfg.quant)):
+            return _quantize_linear(node)
+        return node
+
+    return walk((), params)

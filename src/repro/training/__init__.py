@@ -1,0 +1,4 @@
+"""Training stack: AdamW, QAT train step, grad accumulation, schedules."""
+
+from repro.training.optimizer import adamw_init, adamw_update
+from repro.training.train import loss_fn, make_train_step

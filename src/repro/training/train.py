@@ -1,0 +1,93 @@
+"""QAT training step: BitNet STE forward, CE loss, grad accumulation.
+
+``make_train_step`` builds the jit-able step used by both the real trainer
+(:mod:`repro.launch.train`) and the dry-run lowering — microbatch gradient
+accumulation via scan, global-norm clipping, AdamW, optional int8 gradient
+compression (:mod:`repro.distributed.compression`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import forward_train
+from repro.training.optimizer import (adamw_update, clip_by_global_norm,
+                                      global_norm, warmup_cosine)
+
+AUX_WEIGHT = 0.01           # MoE load-balance loss weight
+
+
+def loss_fn(cfg, params, batch, *, remat: bool = True):
+    """Causal-LM cross entropy (+ MoE aux). batch: tokens/labels [B, T]."""
+    logits, aux = forward_train(
+        cfg, params, batch["tokens"],
+        frames=batch.get("frames"), patches=batch.get("patches"),
+        remat=remat)
+    # mask vocab padding out of the softmax
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    logits = jnp.where(vmask, logits, -1e30)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None],
+                             axis=-1)[..., 0]
+    ce = -jnp.mean(ll)
+    return ce + AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+def _microbatches(batch, n_micro: int):
+    return jax.tree.map(
+        lambda a: a.reshape(n_micro, a.shape[0] // n_micro, *a.shape[1:]),
+        batch)
+
+
+def make_train_step(cfg, *, n_micro: int = 1, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    max_grad_norm: float = 1.0, compress_grads=None,
+                    remat: bool = True):
+    """Returns ``train_step(params, opt_state, batch) → (params, state,
+    metrics)``.
+
+    ``compress_grads`` is an optional hook (gradient tree → gradient tree),
+    e.g. int8 all-reduce compression with error feedback.
+    """
+
+    def grads_of(params, mb):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, mb, remat=remat), has_aux=True)(params)
+        return loss, parts, grads
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, parts, grads = grads_of(params, batch)
+        else:
+            mbs = _microbatches(batch, n_micro)
+
+            def acc_body(acc, mb):
+                loss, parts, grads = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   {"loss": loss, "grads": grads})
+                return acc, parts
+
+            zero = {"loss": jnp.float32(0),
+                    "grads": jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+            acc, parts = jax.lax.scan(acc_body, zero, mbs)
+            loss = acc["loss"] / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, acc["grads"])
+            parts = jax.tree.map(lambda x: jnp.mean(x), parts)
+
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        # schedule indexed by the step being TAKEN (1-based: first step
+        # gets peak/warmup, not zero)
+        lr = warmup_cosine(opt_state.step + 1, peak_lr=peak_lr,
+                           warmup=warmup, total=total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "param_norm": global_norm(params), **parts}
+        return params, opt_state, metrics
+
+    return train_step

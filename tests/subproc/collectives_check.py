@@ -1,0 +1,102 @@
+"""Subprocess: grad compression, ring collective matmul, EP MoE
+(8 host devices)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.collective_matmul import (allgather_matmul,
+                                                 ring_reduce_matmul)
+from repro.distributed.compression import compressed_psum, init_error_state
+from repro.launch.mesh import make_host_mesh
+
+rng = np.random.default_rng(0)
+mesh = make_host_mesh((8,), ("data",))
+
+# ---- int8 compressed psum with error feedback ----
+x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+
+
+def one_round(x, err):
+    return compressed_psum(x, "data", err)
+
+
+f = jax.shard_map(one_round, mesh=mesh, in_specs=(P("data"), P("data")),
+                  out_specs=(P("data"), P("data")), check_vma=False)
+err0 = jnp.zeros_like(x)
+total, err1 = f(x, err0)
+exact = jnp.sum(x, axis=0, keepdims=True)
+rel = float(jnp.max(jnp.abs(total[:1] - exact)) / (jnp.max(jnp.abs(exact))
+                                                   + 1e-9))
+assert rel < 0.02, rel                      # one-shot int8 ≈ 1% error
+print("compressed psum one-shot rel err", rel)
+
+# error feedback: the RUNNING MEAN of compressed sums converges to the
+# exact sum (per-round error oscillates; the residual re-enters the next
+# round, so the time-averaged estimate is unbiased)
+carry = err0
+running = np.zeros_like(np.asarray(exact))
+mean_err = []
+for i in range(1, 17):
+    total, carry = f(x, carry)
+    running += np.asarray(total[:1])
+    mean_err.append(float(np.max(np.abs(running / i - np.asarray(exact)))))
+assert mean_err[-1] < mean_err[0] * 0.5, mean_err
+print("error-feedback running mean converges",
+      [f"{a:.4f}" for a in mean_err[::4]])
+
+# ---- ring reduce matmul == psum(x @ w) ----
+B, K, N = 4, 64, 32
+x_loc = jnp.asarray(rng.standard_normal((8, B, K // 8)), jnp.float32)
+w_loc = jnp.asarray(rng.standard_normal((8, K // 8, N)), jnp.float32)
+
+
+def ring(xl, wl):
+    return ring_reduce_matmul(xl[0], wl[0], "data", chunks=4)[None]
+
+
+g = jax.shard_map(ring, mesh=mesh, in_specs=(P("data"), P("data")),
+                  out_specs=P("data"), check_vma=False)
+y_ring = g(x_loc, w_loc)[0]
+y_ref = sum(np.asarray(x_loc[i]) @ np.asarray(w_loc[i]) for i in range(8))
+np.testing.assert_allclose(np.asarray(y_ring), y_ref, rtol=1e-4, atol=1e-4)
+print("ring reduce matmul ok")
+
+# ---- allgather matmul (x batch-sharded, w replicated) ----
+w_full = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+x_batch = jnp.asarray(rng.standard_normal((8 * B, K)), jnp.float32)
+
+
+def ag(xl, wl):
+    return allgather_matmul(xl, wl, "data")
+
+
+h = jax.shard_map(ag, mesh=mesh, in_specs=(P("data"), P(None, None)),
+                  out_specs=P(None, None), check_vma=False)
+y_ag = h(x_batch, w_full)
+y_exp = np.asarray(x_batch) @ np.asarray(w_full)
+np.testing.assert_allclose(np.asarray(y_ag), y_exp, rtol=1e-4, atol=1e-4)
+print("allgather matmul ok")
+
+# ---- EP MoE == reference dense-dispatch MoE ----
+from repro.configs.granite_moe_1b_a400m import REDUCED as GRANITE
+from repro.distributed.expert_parallel import ep_moe_apply
+from repro.models.moe import moe_apply, moe_init
+
+# bf16 mode: ep_moe_apply takes pre-prepared weights (no STE inside), so
+# the equivalence check compares pure dispatch logic
+cfg = GRANITE.replace(capacity_factor=8.0, moe_group=64, quant="bf16")
+mesh2 = make_host_mesh((2, 4), ("data", "model"))
+p, _ = moe_init(jax.random.PRNGKey(0), cfg)
+xs = jnp.asarray(rng.standard_normal((4, 16, cfg.d_model)), jnp.float32)
+
+y_ep = ep_moe_apply(cfg, p, xs, mesh2, axis="model")
+# reference: same routing with group == local token count (2 ranks × 32 tok)
+y_ref, _ = moe_apply(cfg.replace(moe_group=32), p, xs)
+np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref), rtol=2e-3,
+                           atol=2e-3)
+print("ep moe matches reference")
+print("COLLECTIVES_CHECK_OK")

@@ -1,0 +1,100 @@
+"""Checkpoint store: roundtrip, atomicity, restart, garbage collection."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (latest_step, load_checkpoint,
+                                    save_checkpoint)
+from repro.launch.train import train_loop
+from repro.training.optimizer import adamw_init
+
+from tests.test_models_smoke import _reduced
+
+
+def _tree(rng):
+    return {"a": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32)}}
+
+
+def test_roundtrip(tmp_path, rng):
+    tree = _tree(rng)
+    save_checkpoint(str(tmp_path), 7, tree, extra={"note": "x"})
+    out, step, extra = load_checkpoint(str(tmp_path), tree)
+    assert step == 7 and extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_latest_and_gc(tmp_path, rng):
+    tree = _tree(rng)
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, tree, keep=3)
+    assert latest_step(str(tmp_path)) == 5
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_00000003", "step_00000004", "step_00000005"]
+
+
+def test_incomplete_checkpoint_ignored(tmp_path, rng):
+    """A .tmp dir (crash mid-save) must be invisible to restore."""
+    tree = _tree(rng)
+    save_checkpoint(str(tmp_path), 1, tree)
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    # also a committed dir without manifest = garbage
+    os.makedirs(tmp_path / "step_00000003")
+    assert latest_step(str(tmp_path)) == 1
+    _, step, _ = load_checkpoint(str(tmp_path), tree)
+    assert step == 1
+
+
+def test_structure_mismatch_raises(tmp_path, rng):
+    save_checkpoint(str(tmp_path), 1, _tree(rng))
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), {"different": jnp.zeros(3)})
+
+
+def test_shape_mismatch_raises(tmp_path, rng):
+    tree = _tree(rng)
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = dict(tree)
+    bad["a"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), bad)
+
+
+class _PreemptAt:
+    """Fake preemption signal firing after N recorded steps."""
+
+    def __init__(self, at):
+        self.at = at
+        self.n = 0
+
+    @property
+    def preempted(self):
+        self.n += 1
+        return self.n > self.at
+
+
+@pytest.mark.slow
+def test_train_restart_resumes_identically(tmp_path):
+    """checkpoint/restart: 20 straight steps == preempt@10 + restart + 10.
+
+    Both runs use the SAME 20-step schedule (lr depends on total steps);
+    the first run is cut by a simulated preemption, which checkpoints."""
+    cfg = _reduced("stablelm-1.6b").replace(n_layers=2)
+    straight = train_loop(cfg, steps=20, global_batch=4, seq_len=16,
+                          peak_lr=1e-3, log_every=1000)
+    part1 = train_loop(cfg, steps=20, global_batch=4, seq_len=16,
+                       peak_lr=1e-3, ckpt_dir=str(tmp_path), ckpt_every=100,
+                       log_every=1000, preemption=_PreemptAt(10))
+    assert part1["last_step"] < 20          # actually preempted
+    part2 = train_loop(cfg, steps=20, global_batch=4, seq_len=16,
+                       peak_lr=1e-3, ckpt_dir=str(tmp_path), ckpt_every=100,
+                       log_every=1000, resume=True)
+    assert part2["last_step"] == 20
+    for a, b in zip(jax.tree.leaves(straight["params"]),
+                    jax.tree.leaves(part2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

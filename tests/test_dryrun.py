@@ -1,0 +1,103 @@
+"""Dry-run machinery: lower+compile on the production meshes (subprocess
+so the 512-device override never leaks into this process), plus unit tests
+for the analysis layer."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.configs.base import ShapeConfig
+from repro.configs.qwen1_5_32b import REDUCED
+from repro.distributed.partitioning import use_mesh
+from repro.launch.dryrun import (build_decode_cell, build_prefill_cell,
+                                 build_train_cell)
+from repro.launch.mesh import make_production_mesh
+
+cfg = REDUCED.replace(d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+                      d_ff=512, vocab=2048)
+shapes = {
+    "train": ShapeConfig("train_4k", 256, 32, "train"),
+    "prefill": ShapeConfig("prefill_32k", 512, 32, "prefill"),
+    "decode": ShapeConfig("decode_32k", 2048, 32, "decode"),
+}
+for multi_pod in (False, True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    assert mesh.devices.size == (512 if multi_pod else 256)
+    with use_mesh(mesh):
+        for kind, shape in shapes.items():
+            if kind == "train":
+                fn, args, _ = build_train_cell(cfg, shape, mesh)
+            elif kind == "prefill":
+                fn, args, _ = build_prefill_cell(cfg, shape, mesh)
+            else:
+                fn, args, _ = build_decode_cell(cfg, shape, mesh)
+            compiled = fn.lower(*args).compile()
+            mem = compiled.memory_analysis()
+            assert compiled.cost_analysis().get("flops", 0) > 0
+            print(kind, multi_pod, "ok", mem.temp_size_in_bytes)
+print("DRYRUN_SMOKE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_both_meshes(tmp_path):
+    script = tmp_path / "dryrun_smoke.py"
+    script.write_text(SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["TF_CPP_MIN_LOG_LEVEL"] = "2"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, str(script)], capture_output=True,
+                         text=True, timeout=1800, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "DRYRUN_SMOKE_OK" in out.stdout
+
+
+def test_collective_bytes_parser():
+    from repro.analysis.hlo import collective_bytes
+    hlo = """
+  %ag = f32[8,128]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = bf16[64]{0} all-reduce(%y), to_apply=%sum
+  %cp = (s8[4,4]{1,0}, u32[]) collective-permute-start(%z)
+  %cpd = s8[4,4]{1,0} collective-permute-done(%cp)
+  %rs = f32[16]{0} reduce-scatter(%w), dimensions={0}
+  %a2a = f32[2,8]{1,0} all-to-all(%v), dimensions={0}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 4
+    assert out["all-reduce"] == 64 * 2
+    assert out["collective-permute"] == 16 + 4      # tuple incl. u32[]
+    assert out["reduce-scatter"] == 64
+    assert out["all-to-all"] == 64
+    assert out["counts"]["collective-permute"] == 1   # -done not re-counted
+
+
+def test_roofline_terms_dominance():
+    from repro.analysis.roofline import roofline_terms
+    t = roofline_terms({"flops": 197e12, "bytes accessed": 819e9 / 2},
+                       {"total": 0})
+    assert t["dominant"] == "compute_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-6
+    t2 = roofline_terms({"flops": 1e9, "bytes accessed": 819e9},
+                        {"total": 50e9 * 3})
+    assert t2["dominant"] == "collective_s"
+    assert abs(t2["collective_s"] - 3.0) < 1e-6
+
+
+def test_model_flops_conventions():
+    from repro.analysis.roofline import model_flops
+    from repro.configs.base import SHAPES, get_config
+    cfg = get_config("qwen1.5-32b")
+    n = 32_000_000_000
+    mf_train = model_flops(cfg, SHAPES["train_4k"], n, n)
+    assert mf_train == 6.0 * n * 256 * 4096
+    mf_dec = model_flops(cfg, SHAPES["decode_32k"], n, n)
+    assert mf_dec == 2.0 * n * 128

@@ -1,0 +1,59 @@
+"""Fused-HBM traffic model + differential-costing helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import collective_bytes, hbm_bytes
+
+
+def test_hbm_model_counts_fusions_and_dots():
+    hlo = """
+ENTRY %main (p0: f32[128,64]) -> f32[128,32] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %c = f32[64,32]{1,0} constant({...})
+  %fusion.1 = f32[128,64]{1,0} fusion(%p0), kind=kLoop, calls=%fused_computation
+  %dot.2 = f32[128,32]{1,0} dot(%fusion.1, %c), lhs_contracting_dims={1}
+  ROOT %exp = f32[128,32]{1,0} exponential(%dot.2)
+}
+%fused_computation (param_0: f32[128,64]) -> f32[128,64] {
+  %param_0 = f32[128,64]{1,0} parameter(0)
+  %big = f32[128,64]{1,0} multiply(%param_0, %param_0)
+  ROOT %r = f32[128,64]{1,0} add(%big, %big)
+}
+"""
+    b = hbm_bytes(hlo)
+    fusion = 2 * 128 * 64 * 4             # operand + result
+    dot = 128 * 64 * 4 + 64 * 32 * 4 + 128 * 32 * 4
+    # bare exponential assumed fused (elementwise); fused-computation
+    # internals excluded
+    assert b == fusion + dot, (b, fusion + dot)
+
+
+def test_hbm_model_in_place_dus():
+    hlo = """
+ENTRY %main (p0: s8[4,1024,128]) -> s8[4,1024,128] {
+  %p0 = s8[4,1024,128]{2,1,0} parameter(0)
+  %upd = s8[4,1,128]{2,1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %dus = s8[4,1024,128]{2,1,0} dynamic-update-slice(%p0, %upd, %i, %i, %i)
+}
+"""
+    # only the update (+ scalar indices) counts — buffer donation aliases
+    # the big cache operand in place
+    assert hbm_bytes(hlo) == 4 * 1 * 128 + 3 * 4
+
+
+def test_real_compiled_module_parses():
+    def f(x, w):
+        return jax.nn.relu(x @ w) @ w.T
+
+    xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = jax.jit(f).lower(xs, ws).compile()
+    txt = compiled.as_text()
+    b = hbm_bytes(txt)
+    assert b > 0
+    # two dots touch at least their operands/results once
+    assert b >= 2 * (64 * 128 + 128 * 128 + 64 * 128) * 4 * 0.5
+    coll = collective_bytes(txt)
+    assert coll["total"] == 0              # single device: no collectives

@@ -1,0 +1,110 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles — shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lop import lop_features, pack_features
+from repro.core.ternary import make_ternary_weight
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 128, 128), (48, 512, 256), (130, 1024, 128), (1, 256, 512),
+])
+def test_ternary_matmul_exact(m, k, n):
+    x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.standard_normal((k, n)), np.float32) * 0.02
+    tw = make_ternary_weight(w)
+    y_k = ops.ternary_matmul(x, tw, impl="pallas")
+    y_r = ops.ternary_matmul(x, tw, impl="ref")
+    assert y_k.dtype == jnp.int32
+    assert (np.asarray(y_k) == np.asarray(y_r)).all()
+
+
+def test_ternary_matmul_leading_dims():
+    x = jnp.asarray(rng.integers(-50, 51, (2, 3, 256)), jnp.int8)
+    w = jnp.asarray(rng.standard_normal((256, 128)), np.float32) * 0.02
+    tw = make_ternary_weight(w)
+    y = ops.ternary_matmul(x, tw, impl="pallas")
+    assert y.shape == (2, 3, 128)
+    assert (np.asarray(y) ==
+            np.asarray(ops.ternary_matmul(x, tw, impl="ref"))).all()
+
+
+@pytest.mark.parametrize("g,m,d", [(12, 1024, 128), (1, 512, 64),
+                                   (40, 2048, 128)])
+def test_lop_scores_kernel(g, m, d):
+    q = jnp.asarray(rng.integers(-127, 128, (g, d)), jnp.int8)
+    kc = jnp.asarray(rng.integers(-127, 128, (m, d)), jnp.int8)
+    feat = pack_features(lop_features(kc))
+    s_k = ops.lop_screen(q, feat, impl="pallas")
+    s_r = ops.lop_screen(q, feat, impl="ref")
+    assert (np.asarray(s_k) == np.asarray(s_r)).all()
+
+
+@pytest.mark.parametrize("s,d,causal,window", [
+    (256, 64, True, 0), (512, 128, True, 0), (512, 128, False, 0),
+    (512, 64, True, 128),
+])
+def test_flash_prefill_kernel(s, d, causal, window):
+    q = jnp.asarray(rng.integers(-60, 61, (s, d)), jnp.int8)
+    k = jnp.asarray(rng.integers(-60, 61, (s, d)), jnp.int8)
+    v = jnp.asarray(rng.integers(-60, 61, (s, d)), jnp.int8)
+    sc = [jnp.asarray(rng.uniform(0.005, 0.02, (s, 1)), jnp.float32)
+          for _ in range(3)]
+    sm = 1.0 / np.sqrt(d)
+    o_k = ops.flash_prefill(q, k, v, *sc, softmax_scale=sm, causal=causal,
+                            window=window, impl="pallas")
+    o_r = ops.flash_prefill(q, k, v, *sc, softmax_scale=sm, causal=causal,
+                            window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-4)
+
+
+@pytest.mark.parametrize("g,nb,block", [(6, 4, 128), (1, 2, 64), (8, 8, 32)])
+def test_sparse_decode_kernel(g, nb, block):
+    m, d = 16 * block, 64
+    kc = jnp.asarray(rng.integers(-60, 61, (m, d)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-60, 61, (m, d)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.005, 0.02, (m, 1)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.005, 0.02, (m, 1)), jnp.float32)
+    q = jnp.asarray(rng.integers(-60, 61, (g, d)), jnp.int8)
+    qs = jnp.asarray(rng.uniform(0.005, 0.02, (g, 1)), jnp.float32)
+    bidx = jnp.asarray(rng.choice(16, nb, replace=False), jnp.int32)
+    gate = np.ones(nb, np.int32)
+    gate[-1] = 0                                     # one gated-off block
+    end = rng.integers(1, block + 1, nb).astype(np.int32)
+    start = np.minimum(rng.integers(0, block, nb), end - 1).astype(np.int32)
+    gt = jnp.asarray(np.concatenate([gate, end, start]), jnp.int32)
+    sm = 1.0 / np.sqrt(d)
+    o_k = ops.sparse_decode(q, kc, vc, qs, ks, vs, bidx, gt, block=block,
+                            softmax_scale=sm, impl="pallas")
+    o_r = ops.sparse_decode(q, kc, vc, qs, ks, vs, bidx, gt, block=block,
+                            softmax_scale=sm, impl="ref")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-4)
+
+
+def test_sparse_decode_equals_dense_when_all_blocks():
+    """Sparse kernel over ALL blocks == dense attention (exactness)."""
+    m, d, block = 512, 64, 64
+    nb = m // block
+    kc = jnp.asarray(rng.integers(-60, 61, (m, d)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-60, 61, (m, d)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.005, 0.02, (m, 1)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.005, 0.02, (m, 1)), jnp.float32)
+    q = jnp.asarray(rng.integers(-60, 61, (4, d)), jnp.int8)
+    qs = jnp.asarray(rng.uniform(0.005, 0.02, (4, 1)), jnp.float32)
+    bidx = jnp.arange(nb, dtype=jnp.int32)
+    gt = jnp.asarray(np.concatenate([np.ones(nb), np.full(nb, block),
+                                     np.zeros(nb)]).astype(np.int32))
+    sm = 1.0 / np.sqrt(d)
+    o = ops.sparse_decode(q, kc, vc, qs, ks, vs, bidx, gt, block=block,
+                          softmax_scale=sm, impl="pallas")
+    logits = (q.astype(np.int32) @ np.asarray(kc, np.int32).T
+              ).astype(np.float32)
+    logits = logits * np.asarray(qs) * np.asarray(ks).T * sm
+    p = jax.nn.softmax(jnp.asarray(logits), -1)
+    o_dense = np.asarray(p) @ (np.asarray(vc, np.float32) * np.asarray(vs))
+    np.testing.assert_allclose(np.asarray(o), o_dense, atol=1e-4)

@@ -1,0 +1,104 @@
+"""LOP surrogate, features, comparison-free top-K (paper §III-A)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lop import (block_reduce_scores, comparison_free_topk,
+                            exact_topk, features_to_pot, kv_traffic_bytes,
+                            leading_one, lop_features, lop_scores,
+                            pack_features, pot, unpack_features)
+
+int8_vecs = hnp.arrays(np.int8, st.tuples(st.integers(2, 16).map(
+    lambda d: 2 * d),), elements=st.integers(-127, 127))
+
+
+def test_leading_one_exact():
+    for v in range(-127, 128):
+        lo = int(leading_one(jnp.int8(v)))
+        if v == 0:
+            assert lo == 7
+        else:
+            assert lo == int(np.floor(np.log2(abs(v))))
+
+
+@hypothesis.given(int8_vecs)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_surrogate_equals_pot_dot(x):
+    """ŝ(q,k) = Σ sgn·sgn·2^(LO+LO) ≡ dot(pot(q), pot(k)) — the key
+    TPU-mapping identity."""
+    q = jnp.asarray(x)
+    k = jnp.asarray(np.roll(x, 1))[None]
+    s = int(lop_scores(q, k)[0])
+    manual = sum(
+        int(np.sign(a) * np.sign(b)) *
+        2 ** (int(np.floor(np.log2(abs(a)))) + int(np.floor(np.log2(abs(b)))))
+        for a, b in zip(np.asarray(q).tolist(), np.roll(x, 1).tolist())
+        if a != 0 and b != 0)
+    assert s == manual
+
+
+@hypothesis.given(int8_vecs)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_feature_roundtrip(x):
+    k = jnp.asarray(x)[None]
+    f = lop_features(k)
+    assert (np.asarray(features_to_pot(f)) == np.asarray(pot(k))).all()
+    assert (np.asarray(unpack_features(pack_features(f))) ==
+            np.asarray(f)).all()
+
+
+def test_feature_cache_is_half_bytes(rng):
+    k = jnp.asarray(rng.integers(-127, 128, (64, 128)), jnp.int8)
+    packed = pack_features(lop_features(k))
+    assert packed.size * packed.dtype.itemsize == k.size // 2
+
+
+def test_comparison_free_topk_recall(rng):
+    hits = 0
+    trials = 20
+    k = 32
+    for t in range(trials):
+        s = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+        idx, gate = comparison_free_topk(s, k, n_buckets=64)
+        got = set(np.asarray(idx)[np.asarray(gate)].tolist())
+        exact = set(np.asarray(exact_topk(s, k)).tolist())
+        hits += len(got & exact)
+    recall = hits / (trials * k)
+    assert recall > 0.9, recall         # bucketized ≈ exact on random data
+
+
+def test_topk_respects_validity(rng):
+    s = jnp.asarray(rng.standard_normal(128).astype(np.float32)) + 100
+    valid = jnp.arange(128) < 40
+    idx, gate = comparison_free_topk(s, 16, valid=valid)
+    sel = np.asarray(idx)[np.asarray(gate)]
+    assert (sel < 40).all()
+
+
+def test_topk_exact_when_k_equals_m(rng):
+    s = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    idx, gate = comparison_free_topk(s, 64)
+    assert np.asarray(gate).all()
+    assert set(np.asarray(idx).tolist()) == set(range(64))
+
+
+def test_block_reduce(rng):
+    s = jnp.asarray(rng.standard_normal((2, 64)).astype(np.float32))
+    b = block_reduce_scores(s, 16)
+    assert b.shape == (2, 4)
+    assert np.allclose(np.asarray(b)[0, 0],
+                       np.asarray(s)[0, :16].max())
+
+
+def test_kv_traffic_model():
+    m, d, keep = 32768, 128, 1 / 8
+    k = int(m * keep)
+    dense = kv_traffic_bytes(m, d, k, with_lop=False)
+    lop = kv_traffic_bytes(m, d, k, with_lop=True)
+    assert dense == 2 * m * d
+    assert lop == m * d // 2 + 2 * k * d
+    # paper Fig 8 regime (features on-chip → only K/V fetches counted)
+    assert dense / (2 * k * d) == m / k

@@ -1,0 +1,82 @@
+"""Hillclimb flags must preserve exactness (§Perf beyond-paper variants)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import init_params
+from repro.serving.engine import prefill, serve_step
+from repro.serving.quantize import quantize_params
+
+from tests.test_models_smoke import _reduced
+
+
+@pytest.fixture
+def flag_env():
+    keys = ("REPRO_GQA_SHARED_SELECT", "REPRO_INT8_LOGITS",
+            "REPRO_BF16_EXPERT_ACC")
+    old = {k: os.environ.get(k) for k in keys}
+    yield
+    for k, v in old.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
+
+
+def _run_cell(cfg, qp, tokens):
+    logits_full, _ = prefill(cfg, qp, tokens, max_len=24)
+    _, cache = prefill(cfg, qp, tokens[:, :20], max_len=24)
+    logits_dec, _ = serve_step(cfg, qp, cache, tokens[:, 20:21])
+    return logits_full, logits_dec
+
+
+def test_shared_select_exact_at_keep_one(flag_env):
+    """Group-shared selection (beyond-paper) keeps the keep=1.0 exactness
+    guarantee — the candidate union still covers every valid block."""
+    cfg = _reduced("mistral-nemo-12b").replace(lop_keep=1.0)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    rng = np.random.default_rng(5)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 21)), jnp.int32)
+
+    base_full, base_dec = _run_cell(cfg, qp, tokens)
+    os.environ["REPRO_GQA_SHARED_SELECT"] = "1"
+    _, flag_dec = _run_cell(cfg, qp, tokens)
+    rel = float(jnp.max(jnp.abs(flag_dec - base_dec))
+                / (jnp.max(jnp.abs(base_dec)) + 1e-9))
+    assert rel < 1e-5, rel
+
+
+def test_int8_logits_matches_f32_path(flag_env):
+    """Integer-domain QKᵀ (BoothFlex-faithful) ≡ dequantized-f32 einsum up
+    to f32 rounding of the scale product."""
+    cfg = _reduced("stablelm-1.6b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    rng = np.random.default_rng(6)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 21)), jnp.int32)
+
+    base_full, _ = _run_cell(cfg, qp, tokens)
+    os.environ["REPRO_INT8_LOGITS"] = "1"
+    flag_full, _ = _run_cell(cfg, qp, tokens)
+    rel = float(jnp.linalg.norm(flag_full - base_full)
+                / (jnp.linalg.norm(base_full) + 1e-9))
+    assert rel < 1e-4, rel
+
+
+def test_bf16_expert_acc_close(flag_env):
+    """bf16 expert accumulation stays within bf16 tolerance of f32."""
+    from repro.models.moe import moe_apply, moe_init
+    cfg = _reduced("granite-moe-1b-a400m").replace(quant="bf16",
+                                                   capacity_factor=8.0)
+    p, _ = moe_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    y0, _ = moe_apply(cfg, p, x)
+    os.environ["REPRO_BF16_EXPERT_ACC"] = "1"
+    y1, _ = moe_apply(cfg, p, x)
+    rel = float(jnp.linalg.norm(y1 - y0) / (jnp.linalg.norm(y0) + 1e-9))
+    assert rel < 0.05, rel

@@ -1,0 +1,71 @@
+"""Absmax quantization barrier: properties + STE."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import (QuantizedTensor, absmax_scale,
+                                     dequantize, fake_quantize, int8_matmul,
+                                     online_softmax_stats, quantize, rmsnorm,
+                                     ste_quantize)
+
+finite_vecs = hnp.arrays(
+    np.float32, hnp.array_shapes(min_dims=1, max_dims=3, min_side=1,
+                                 max_side=32),
+    elements=st.floats(-1e4, 1e4, width=32))
+
+
+@hypothesis.given(finite_vecs)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_quantize_error_bound(x):
+    """|dequant(quant(x)) − x| ≤ scale/2 (+eps) — the absmax contract."""
+    qt = quantize(jnp.asarray(x))
+    err = np.abs(np.asarray(dequantize(qt)) - x)
+    bound = np.asarray(qt.scale) * 0.5 + 1e-6
+    assert (err <= np.broadcast_to(bound, err.shape) + 1e-6).all()
+
+
+@hypothesis.given(finite_vecs)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_quantize_int8_range(x):
+    qt = quantize(jnp.asarray(x))
+    v = np.asarray(qt.values)
+    assert v.dtype == np.int8
+    assert v.min() >= -127 and v.max() <= 127
+
+
+def test_ste_gradient_is_identity_shaped(rng):
+    x = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    g = jax.grad(lambda a: jnp.sum(ste_quantize(a) ** 2))(x)
+    # STE: d/dx sum(fq(x)^2) ≈ 2*fq(x) (straight-through)
+    expect = 2 * fake_quantize(x)
+    assert np.allclose(np.asarray(g), np.asarray(expect), atol=1e-5)
+
+
+def test_int8_matmul_matches_dequantized(rng):
+    x = jnp.asarray(rng.standard_normal((8, 32)).astype(np.float32))
+    wq = jnp.asarray(rng.integers(-127, 128, (32, 16)), jnp.int8)
+    w_scale = jnp.float32(0.01)
+    xq = quantize(x)
+    y = int8_matmul(xq, wq, w_scale)
+    y_ref = dequantize(xq) @ (wq.astype(np.float32) * 0.01)
+    assert np.allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5,
+                       atol=1e-5)
+
+
+def test_rmsnorm_f32_reduction(rng):
+    x = jnp.asarray(rng.standard_normal((2, 8, 64)).astype(np.float32)) * 10
+    g = jnp.ones((64,))
+    y = rmsnorm(x, g)
+    ms = np.mean(np.square(np.asarray(y)), -1)
+    assert np.allclose(ms, 1.0, rtol=1e-3)
+
+
+def test_online_softmax_stats(rng):
+    logits = jnp.asarray(rng.standard_normal((4, 128)).astype(np.float32))
+    m, s = online_softmax_stats(logits)
+    p = np.exp(np.asarray(logits) - np.asarray(m)) / np.asarray(s)
+    assert np.allclose(p.sum(-1), 1.0, rtol=1e-5)
+    assert np.allclose(p, np.asarray(jax.nn.softmax(logits, -1)), atol=1e-6)

@@ -1,0 +1,61 @@
+"""Head-level streaming schedule ≡ materialized schedule (paper §III-B)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedule import (materialized_mha, standard_softmax_attention,
+                                 streamed_mha)
+
+rng = np.random.default_rng(3)
+
+
+@pytest.mark.parametrize("group", [1, 2, 4])
+def test_streamed_equals_materialized(group):
+    b, s, d, h, hd = 2, 16, 64, 4, 16
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    ws = [jnp.asarray(rng.standard_normal((d, h * hd)), jnp.float32) * 0.1
+          for _ in range(3)]
+    wo = jnp.asarray(rng.standard_normal((h * hd, d)), jnp.float32) * 0.1
+    y1 = materialized_mha(x, *ws, wo, n_heads=h, head_dim=hd,
+                          attn_fn=standard_softmax_attention)
+    y2 = streamed_mha(x, *ws, wo, n_heads=h, head_dim=hd,
+                      attn_fn=standard_softmax_attention, group=group)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_chunked_attention_matches_reference():
+    from repro.models.attention import chunked_attention
+    b, s, h, hkv, dh = 2, 48, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), jnp.float32)
+    o = chunked_attention(q, k, v, causal=True, chunk=16)
+    # reference with GQA repeat
+    kr = jnp.repeat(k, h // hkv, axis=2)
+    vr = jnp.repeat(v, h // hkv, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(dh)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o_ref = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-4)
+
+
+def test_chunked_attention_swa_window():
+    from repro.models.attention import chunked_attention
+    b, s, h, dh, w = 1, 64, 2, 8, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    o_w = chunked_attention(q, k, v, causal=True, window=w, chunk=16)
+    # position s-1 must ignore keys < s-w
+    logits = jnp.einsum("hd,khd->hk", q[0, -1], k[0]) / np.sqrt(dh)
+    kpos = jnp.arange(s)
+    keep = (kpos <= s - 1) & (s - 1 - kpos < w)
+    logits = jnp.where(keep[None], logits, -1e30)
+    p = jax_softmax = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o_ref = jnp.einsum("hk,khd->hd", p, v[0])
+    np.testing.assert_allclose(np.asarray(o_w[0, -1]), np.asarray(o_ref),
+                               atol=1e-4)

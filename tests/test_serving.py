@@ -1,0 +1,140 @@
+"""Serving engine: prefill/decode consistency, LOP exactness, generation."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import init_params
+from repro.serving.cache import init_cache
+from repro.serving.engine import prefill, serve_step
+from repro.serving.quantize import quantize_params
+
+from tests.test_models_smoke import ARCH_MODULES, _reduced
+
+CONSISTENCY_ARCHS = ["mixtral-8x22b", "whisper-small",
+                     "jamba-1.5-large-398b", "llava-next-34b",
+                     "rwkv6-1.6b", "bitnet-3b"]
+
+
+def _inputs(cfg, b, s, key=1):
+    rng = np.random.default_rng(key)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["frames"] = jnp.asarray(rng.standard_normal((b, 48, cfg.d_model)),
+                                   jnp.float32) * 0.05
+    if cfg.family == "vlm":
+        kw["patches"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_img_tokens, cfg.d_model)),
+            jnp.float32) * 0.05
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_prefill_plus_decode_equals_full_prefill(arch):
+    """With lop_keep=1.0 the sparse decode path is exact: prefill(S) +
+    serve_step == prefill(S+1) (the paper's no-retraining guarantee at
+    K=M)."""
+    cfg = _reduced(arch).replace(lop_keep=1.0, capacity_factor=8.0)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    B, S = 2, 20
+    tokens, kw = _inputs(cfg, B, S + 1)
+
+    logits_full, _ = prefill(cfg, qp, tokens, max_len=S + 2, **kw)
+    _, cache = prefill(cfg, qp, tokens[:, :S], max_len=S + 2, **kw)
+    logits_dec, cache2 = serve_step(cfg, qp, cache, tokens[:, S:S + 1])
+
+    ref = float(jnp.max(jnp.abs(logits_full))) + 1e-9
+    err = float(jnp.max(jnp.abs(logits_dec - logits_full)))
+    assert err / ref < 2e-2, (arch, err, ref)
+    assert np.isfinite(np.asarray(logits_dec)).all()
+
+
+def test_sparse_decode_finite_and_close():
+    cfg = _reduced("bitnet-3b").replace(lop_keep=0.5)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    tokens, kw = _inputs(cfg, 2, 21)
+    logits_full, _ = prefill(cfg, qp, tokens, max_len=24, **kw)
+    _, cache = prefill(cfg, qp, tokens[:, :20], max_len=24, **kw)
+    logits_sp, _ = serve_step(cfg, qp, cache, tokens[:, 20:21])
+    rel = float(jnp.linalg.norm(logits_sp - logits_full)
+                / (jnp.linalg.norm(logits_full) + 1e-9))
+    assert np.isfinite(np.asarray(logits_sp)).all()
+    assert rel < 0.5, rel
+
+
+def test_greedy_generation_deterministic():
+    cfg = _reduced("stablelm-1.6b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    tokens, _ = _inputs(cfg, 2, 8)
+
+    def gen():
+        logits, cache = prefill(cfg, qp, tokens, max_len=8 + 8)
+        out = []
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(8):
+            out.append(np.asarray(tok))
+            logits, cache = serve_step(cfg, qp, cache, tok)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        return np.concatenate(out, 1)
+
+    a, b = gen(), gen()
+    assert (a == b).all()
+    assert (a >= 0).all() and (a < cfg.vocab_padded).all()
+
+
+def test_swa_window_limits_decode_attention():
+    """Mixtral SWA: tokens beyond the (depth-stacked) receptive field must
+    not affect decode. With 1 layer + window W, the decode step at position
+    S sees K/V from [S−W, S), which themselves depend on tokens ≥ S−2W."""
+    cfg = _reduced("mixtral-8x22b").replace(lop_keep=1.0, swa_window=16,
+                                            capacity_factor=8.0, n_layers=1)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    S = 40
+    cut = S - 2 * cfg.swa_window  # = 8: outside the receptive field
+    tokens, _ = _inputs(cfg, 1, S + 1)
+    tok2 = tokens.at[:, :cut].set((tokens[:, :cut] + 1) % cfg.vocab)
+    _, c1 = prefill(cfg, qp, tokens[:, :S], max_len=S + 2)
+    _, c2 = prefill(cfg, qp, tok2[:, :S], max_len=S + 2)
+    l1, _ = serve_step(cfg, qp, c1, tokens[:, S:S + 1])
+    l2, _ = serve_step(cfg, qp, c2, tokens[:, S:S + 1])
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
+    # sanity: in-window changes DO affect the logits
+    tok3 = tokens.at[:, S - 4].set((tokens[:, S - 4] + 1) % cfg.vocab)
+    _, c3 = prefill(cfg, qp, tok3[:, :S], max_len=S + 2)
+    l3, _ = serve_step(cfg, qp, c3, tokens[:, S:S + 1])
+    assert float(jnp.max(jnp.abs(l3 - l1))) > 1e-3
+
+
+def test_init_cache_shapes():
+    cfg = _reduced("jamba-1.5-large-398b")
+    cache = init_cache(cfg, 2, 100)
+    n_sb = cfg.n_layers // cfg.attn_every
+    cap = -(-101 // cfg.lop_block) * cfg.lop_block
+    assert cache["blocks"]["attn"]["k"].shape == (
+        n_sb, 2, cfg.n_kv_heads, cap, cfg.hd)
+    assert cache["blocks"]["mamba"]["ssm"].shape == (
+        n_sb, cfg.attn_every - 1, 2, cfg.d_inner, cfg.mamba_d_state)
+    assert cache["blocks"]["attn"]["feat"].shape[-1] == cfg.hd // 2
+
+
+def test_quantize_params_packs_linears():
+    cfg = _reduced("bitnet-3b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    attn = qp["layers"]["attn"]["wq"]
+    assert "packed" in attn and attn["packed"].dtype == jnp.uint8
+    # packed is 4x smaller on the reduction dim
+    assert attn["packed"].shape[-2] * 4 == params["layers"]["attn"]["wq"][
+        "w"].shape[-2]
+    # head/embed stay fp
+    assert "w" in qp["head"] and "table" in qp["embed"]
+    # bf16 config keeps everything fp
+    qp_fp = quantize_params(cfg.replace(quant="bf16"), params)
+    assert "w" in qp_fp["layers"]["attn"]["wq"]

@@ -1,0 +1,75 @@
+"""Ternary (BitNet b1.58) weights + 2-bit packing properties."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ternary import (bitlinear_qat, bitlinear_ref,
+                                make_ternary_weight, memory_footprint_bytes,
+                                pack_ternary, ste_ternary, ternary_quantize,
+                                unpack_ternary)
+
+ternary_mats = hnp.arrays(
+    np.int8,
+    st.tuples(st.integers(1, 16).map(lambda k: 4 * k), st.integers(1, 24)),
+    elements=st.sampled_from([-1, 0, 1]))
+
+
+@hypothesis.given(ternary_mats)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(wt):
+    packed = pack_ternary(jnp.asarray(wt))
+    assert packed.shape == (wt.shape[0] // 4, wt.shape[1])
+    back = np.asarray(unpack_ternary(packed, wt.shape[0]))
+    assert (back == wt).all()
+
+
+@hypothesis.given(hnp.arrays(np.float32, (8, 12),
+                             elements=st.floats(-10, 10, width=32)))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_ternary_quantize_values(w):
+    wt, gamma = ternary_quantize(jnp.asarray(w))
+    vals = np.unique(np.asarray(wt))
+    assert set(vals.tolist()) <= {-1, 0, 1}
+    assert float(np.asarray(gamma).squeeze()) > 0   # γ is [1,1] (keepdims)
+
+
+def test_absmean_scale(rng):
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    _, gamma = ternary_quantize(jnp.asarray(w))
+    assert np.isclose(float(np.asarray(gamma).squeeze()),
+                      np.abs(w).mean(), rtol=1e-5)
+
+
+def test_bitlinear_correlates_with_fp(rng):
+    x = jnp.asarray(rng.standard_normal((16, 128)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32)) * 0.05
+    tw = make_ternary_weight(w)
+    y = np.asarray(bitlinear_ref(x, tw))
+    y_fp = np.asarray(x @ w)
+    cos = (y * y_fp).sum() / (np.linalg.norm(y) * np.linalg.norm(y_fp))
+    assert cos > 0.80, cos
+
+
+def test_qat_gradients_flow(rng):
+    x = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    g = jax.grad(lambda w_: jnp.sum(bitlinear_qat(x, w_) ** 2))(w)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_ste_ternary_forward_equals_quantized(rng):
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    wt, gamma = ternary_quantize(w)
+    assert np.allclose(np.asarray(ste_ternary(w)),
+                       np.asarray(wt.astype(jnp.float32) * gamma), atol=1e-6)
+
+
+def test_memory_footprint_ratios():
+    shape = (4096, 4096)
+    bf16 = memory_footprint_bytes(shape, "bf16")
+    packed = memory_footprint_bytes(shape, "ternary_packed")
+    assert 7.5 < bf16 / packed < 8.1       # the paper's ~8× claim
