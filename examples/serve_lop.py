@@ -2,17 +2,22 @@
 
     PYTHONPATH=src python examples/serve_lop.py [--arch mistral-nemo-12b]
 
-Runs the same batch with (a) dense int8 decode attention and (b) LOP
+Part 1 runs the same batch with (a) dense int8 decode attention and (b) LOP
 predictive sparse attention at several keep fractions, reporting decode
 wall time and the modeled KV traffic — the serving-side view of Fig. 8.
+Part 2 pushes a mixed-prompt-length request stream through the slot-paged
+continuous-batching scheduler and checks every request against its solo
+lockstep run — the serving-engine view of the same screen.
 """
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lop import kv_traffic_bytes
+from repro.launch.serve import serve_loop
 from repro.launch.train import resolve_config
 from repro.models.transformer import init_params
 from repro.serving.engine import prefill, serve_step
@@ -26,7 +31,6 @@ def run(cfg, qp, prompts, gen, use_lop):
     logits, cache = prefill(cfg, qp, prompts,
                             max_len=prompts.shape[1] + gen,
                             use_lop=use_lop)
-    import time
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     toks = []
     t0 = time.time()
@@ -36,6 +40,41 @@ def run(cfg, qp, prompts, gen, use_lop):
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     jax.block_until_ready(logits)
     return np.concatenate(toks, 1), time.time() - t0
+
+
+def keep_ablation(base, qp, args):
+    rng = np.random.default_rng(1)
+    prompts = jnp.asarray(rng.integers(0, base.vocab,
+                                       (args.batch, args.prompt_len)),
+                          jnp.int32)
+    m = args.prompt_len + args.gen
+    ref_toks, t_dense = run(base, qp, prompts, args.gen, use_lop=False)
+    print(f"dense decode:            {t_dense:.2f}s")
+    for keep in (1.0, 0.5, 0.25):
+        cfg = base.replace(lop_keep=keep)
+        toks, t = run(cfg, qp, prompts, args.gen, use_lop=True)
+        agree = float((toks == ref_toks).mean())
+        traffic = kv_traffic_bytes(m, cfg.hd, int(keep * m), with_lop=True)
+        dense_traffic = kv_traffic_bytes(m, cfg.hd, m, with_lop=False)
+        print(f"LOP keep={keep:4.2f} decode:  {t:.2f}s  "
+              f"token agreement {agree:5.1%}  "
+              f"KV traffic ÷{dense_traffic / traffic:.1f}")
+
+
+def continuous_batching_demo(cfg, args):
+    """Slot-paged scheduler over mixed prompt lengths + solo cross-check
+    (the full driver: serve_loop handles traffic synthesis and the
+    per-request lockstep replay)."""
+    out = serve_loop(cfg, n_slots=args.batch, n_requests=args.batch * 2,
+                     min_prompt=max(args.prompt_len // 4, 4),
+                     max_prompt=args.prompt_len, gen=args.gen, verify=True)
+    agree = len(out["results"]) - len(out["mismatched_rids"])
+    print(f"continuous batching: {len(out['results'])} reqs on "
+          f"{args.batch} lanes, {out['wall_s']:.2f}s wall, "
+          f"{out['prefill_compiles']} prefill bucket compiles")
+    print(f"  lockstep agreement {agree}/{len(out['results'])}; latency "
+          f"p50 {out['latency_p50'] * 1e3:.0f} ms, p99 "
+          f"{out['latency_p99'] * 1e3:.0f} ms")
 
 
 def main():
@@ -48,24 +87,9 @@ def main():
 
     base = resolve_config(args.arch, reduced=True)
     params, _ = init_params(base, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(1)
-    prompts = jnp.asarray(rng.integers(0, base.vocab,
-                                       (args.batch, args.prompt_len)),
-                          jnp.int32)
-
-    m = args.prompt_len + args.gen
     qp = quantize_params(base, params)
-    ref_toks, t_dense = run(base, qp, prompts, args.gen, use_lop=False)
-    print(f"dense decode:            {t_dense:.2f}s")
-    for keep in (1.0, 0.5, 0.25):
-        cfg = base.replace(lop_keep=keep)
-        toks, t = run(cfg, qp, prompts, args.gen, use_lop=True)
-        agree = float((toks == ref_toks).mean())
-        traffic = kv_traffic_bytes(m, cfg.hd, int(keep * m), with_lop=True)
-        dense_traffic = kv_traffic_bytes(m, cfg.hd, m, with_lop=False)
-        print(f"LOP keep={keep:4.2f} decode:  {t:.2f}s  "
-              f"token agreement {agree:5.1%}  "
-              f"KV traffic ÷{dense_traffic / traffic:.1f}")
+    keep_ablation(base, qp, args)
+    continuous_batching_demo(base, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP.md): the exact command the driver runs.
+# Usage: scripts/ci_tier1.sh [extra pytest args...]
+#
+# Deterministic tests must pass even without the dev extras installed
+# (property-based modules importorskip hypothesis); install
+# requirements-dev.txt to run the full property suite.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" 2>/dev/null; then
+    echo "ci_tier1: hypothesis not installed — property-based tests will" \
+         "skip (pip install -r requirements-dev.txt for full coverage)" >&2
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -29,7 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.lop import pot
 from repro.core.qlinear import is_packed  # noqa: F401 (doc cross-ref)
-from repro.distributed.partitioning import current_mesh, dp_axes
+from repro.distributed.partitioning import current_mesh, dp_axes, shard_map
 from repro.serving.lop_select import (k_keep_blocks, select_blocks,
                                       token_valid_mask)
 
@@ -123,10 +123,14 @@ def _dense_stats(cfg, qi, qsc, cl, new_len, window, offset):
     return mx, l, acc
 
 
-def _write_token_local(cl, ki, vi, ksc, vsc, feat, lengths, offset, m_loc):
-    """Masked per-rank cache append (only the owner shard writes)."""
+def _write_token_local(cl, ki, vi, ksc, vsc, feat, lengths, offset, m_loc,
+                       active=None):
+    """Masked per-rank cache append (only the owner shard writes; retired
+    slot-pool lanes never write)."""
     local = lengths - offset                              # [B]
     ok = (local >= 0) & (local < m_loc)
+    if active is not None:
+        ok &= active
     pos = jnp.clip(local, 0, m_loc - 1)
 
     def wr(arr, val, p_, ok_):
@@ -150,16 +154,19 @@ def _write_token_local(cl, ki, vi, ksc, vsc, feat, lengths, offset, m_loc):
 
 def sp_decode_attention(cfg, qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths, *,
                         window: int, use_lop: bool, sp_axes: tuple,
-                        write: bool = True):
+                        write: bool = True, active=None):
     """SP decode attention over an M-sharded cache layer.
 
     qi int8 [B, H, dh]; qsc [B, H, 1]; ki/vi int8 [B, Hkv, dh] (new token);
-    cl cache layer (token axis sharded over ``sp_axes``); lengths [B].
+    cl cache layer (token axis sharded over ``sp_axes``); lengths [B];
+    active [B] bool (slot-pool lanes; None = all live).
     → (out f32 [B, H, dh], new cache layer).
     """
     mesh = current_mesh()
     assert mesh is not None, "sp decode requires an active mesh"
     b, h, dh = qi.shape
+    if active is None:
+        active = jnp.ones((b,), jnp.bool_)
     hkv = cl["k"].shape[1]
     m_global = cl["k"].shape[2]
     nshards = math.prod(int(mesh.shape[a]) for a in sp_axes)
@@ -182,7 +189,7 @@ def sp_decode_attention(cfg, qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths, *,
     rep2 = P(batch_ax, None, None)
     rep1 = P(batch_ax)
 
-    def body(qi, qsc, ki, vi, ksc, vsc, feat_new, cl, lengths):
+    def body(qi, qsc, ki, vi, ksc, vsc, feat_new, cl, lengths, act):
         # shard rank along the sp axes → global token offset of this shard
         ridx = jnp.int32(0)
         for a in sp_axes:
@@ -190,8 +197,10 @@ def sp_decode_attention(cfg, qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths, *,
         offset = ridx * m_loc
         if write:
             cl = _write_token_local(cl, ki, vi, ksc, vsc, feat_new, lengths,
-                                    offset, m_loc)
+                                    offset, m_loc, active=act)
         new_len = lengths + (1 if write else 0)
+        # retired lanes see an empty cache (nothing valid to screen/select)
+        new_len = jnp.where(act, new_len, 0)
 
         if use_lop:
             import os
@@ -220,20 +229,21 @@ def sp_decode_attention(cfg, qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths, *,
     in_specs = (new_tok_spec2, new_tok_spec2, new_tok_spec2, new_tok_spec2,
                 new_tok_spec2, new_tok_spec2,
                 new_tok_spec2 if feat is not None else None,
-                cache_spec, rep1)
+                cache_spec, rep1, rep1)
     out_specs = (rep2, cache_spec)
 
     if not write:
         # cross-attention: no new token operands
-        def body_nw(qi, qsc, cl, lengths):
-            return body(qi, qsc, None, None, None, None, None, cl, lengths)
+        def body_nw(qi, qsc, cl, lengths, act):
+            return body(qi, qsc, None, None, None, None, None, cl, lengths,
+                        act)
 
-        fn = jax.shard_map(body_nw, mesh=mesh,
+        fn = shard_map(body_nw, mesh=mesh,
                            in_specs=(new_tok_spec2, new_tok_spec2,
-                                     cache_spec, rep1),
+                                     cache_spec, rep1, rep1),
                            out_specs=out_specs, check_vma=False)
-        return fn(qi, qsc, cl, lengths)
+        return fn(qi, qsc, cl, lengths, active)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
-    return fn(qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths)
+    return fn(qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths, active)

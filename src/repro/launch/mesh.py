@@ -9,17 +9,27 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions.
+
+    Newer JAX exposes ``jax.sharding.AxisType`` and ``make_mesh`` accepts
+    ``axis_types``; older releases (e.g. 0.4.x) have neither — every axis
+    is implicitly Auto there, so plain ``make_mesh`` is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 4), axes=("data", "model")):
     """Small host-device mesh for subprocess tests (8 CPU devices)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)

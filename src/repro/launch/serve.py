@@ -1,11 +1,15 @@
-"""Batched serving driver: continuous-batching style loop on the engine.
+"""Continuous-batching serving driver over the slot-paged engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch bitnet-3b --reduced \
-        --batch 4 --prompt-len 32 --gen 32
+        --slots 4 --requests 8 --min-prompt 8 --max-prompt 48 --gen 16
 
-Runs quantized-weight prefill for a batch of synthetic prompts, then greedy
-decode with the LOP screen; reports tokens/s and the modeled KV-traffic
-reduction for the configured keep fraction.
+Synthesizes a stream of requests with *staggered arrivals* and *variable
+prompt lengths*, drives the :class:`repro.serving.scheduler.Scheduler`
+(admit → prefill → insert → decode → evict per lane), and reports
+per-request latency percentiles (TTFT, end-to-end) alongside aggregate
+tokens/s and the modeled LOP KV-traffic reduction. ``--verify`` replays
+every request alone through the lockstep path and checks the continuous-
+batching run emitted identical greedy tokens.
 """
 
 from __future__ import annotations
@@ -14,85 +18,162 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lop import kv_traffic_bytes
 from repro.launch.train import resolve_config
 from repro.models.transformer import init_params
-from repro.serving.engine import prefill, serve_step
 from repro.serving.quantize import quantize_params
+from repro.serving.scheduler import Request, Scheduler, lockstep_generate
 
 
-def serve_loop(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
-               use_lop: bool = True, greedy: bool = True):
+def make_requests(cfg, *, n_requests: int, min_prompt: int, max_prompt: int,
+                  gen: int, seed: int = 0):
+    """Synthetic traffic: variable prompt lengths, FIFO arrival order."""
+    if n_requests < 1:
+        raise ValueError(f"--requests must be >= 1, got {n_requests}")
+    if not 0 < min_prompt <= max_prompt:
+        raise ValueError(f"need 0 < --min-prompt <= --max-prompt, got "
+                         f"{min_prompt}..{max_prompt}")
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n_requests):
+        plen = int(rng.integers(min_prompt, max_prompt + 1))
+        prompt = rng.integers(0, cfg.vocab, (plen,)).astype(np.int32)
+        frames = patches = None
+        if cfg.family == "encdec":
+            frames = (rng.standard_normal((4 * plen, cfg.d_model))
+                      .astype(np.float32) * 0.02)
+        if cfg.family == "vlm":
+            patches = (rng.standard_normal((cfg.n_img_tokens, cfg.d_model))
+                       .astype(np.float32) * 0.02)
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=gen,
+                            frames=frames, patches=patches))
+    return reqs
+
+
+def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
+               min_prompt: int = 8, max_prompt: int = 48, gen: int = 16,
+               arrival_period: float = 0.0, seed: int = 0,
+               use_lop: bool = True, verify: bool = False):
+    """Continuous-batching run over staggered arrivals. → stats dict.
+
+    ``arrival_period`` (seconds) spaces request arrivals; requests that
+    have not arrived yet stay out of the queue, so lanes drain and refill
+    mid-run exactly as a live server would. 0 = all arrive at t0 (arrival
+    order still staggers admissions once lanes fill).
+    """
     params, _ = init_params(cfg, jax.random.PRNGKey(seed))
     qp = quantize_params(cfg, params)
-    rng = np.random.default_rng(seed)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
-                          jnp.int32)
-    kwargs = {}
-    if cfg.family == "encdec":
-        kwargs["frames"] = jnp.asarray(
-            rng.standard_normal((batch, 4 * prompt_len, cfg.d_model)),
-            jnp.float32) * 0.02
+    reqs = make_requests(cfg, n_requests=n_requests, min_prompt=min_prompt,
+                         max_prompt=max_prompt, gen=gen, seed=seed + 1)
+    max_len = max_prompt + gen
     if cfg.family == "vlm":
-        kwargs["patches"] = jnp.asarray(
-            rng.standard_normal((batch, cfg.n_img_tokens, cfg.d_model)),
-            jnp.float32) * 0.02
+        max_len += cfg.n_img_tokens       # image prefix shares the cache
+    sched = Scheduler(cfg, qp, n_slots=n_slots, max_len=max_len,
+                      use_lop=use_lop)
 
-    prefill_fn = jax.jit(lambda qp, t, kw: prefill(
-        cfg, qp, t, max_len=prompt_len + gen, use_lop=use_lop, **kw))
-    step_fn = jax.jit(lambda qp, c, t: serve_step(cfg, qp, c, t,
-                                                  use_lop=use_lop),
-                      donate_argnums=(1,))
+    t0 = time.monotonic()
+    pending = list(reqs)
+    n_steps = 0
+    while pending or sched.has_work():
+        now = time.monotonic() - t0
+        while pending and now >= pending[0].rid * arrival_period:
+            req = pending.pop(0)
+            req.arrival = time.monotonic()
+            sched.submit(req)
+            now = time.monotonic() - t0
+        sched.admit()
+        if sched.n_active:
+            sched.step()
+            n_steps += 1
+        elif pending:
+            # idle until the next arrival
+            time.sleep(max(0.0,
+                           pending[0].rid * arrival_period - now))
+    wall = time.monotonic() - t0
 
-    t0 = time.time()
-    logits, cache = jax.block_until_ready(prefill_fn(qp, prompts, kwargs))
-    t_prefill = time.time() - t0
-
-    out_tokens = []
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    t0 = time.time()
-    for _ in range(gen):
-        out_tokens.append(np.asarray(tok))
-        logits, cache = step_fn(qp, cache, tok)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
-
-    toks_per_s = batch * gen / t_decode
-    return {
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "tokens_per_s": toks_per_s,
-        "tokens": np.concatenate(out_tokens, axis=1),
+    results = sorted(sched.results, key=lambda r: r.rid)
+    total_toks = sum(len(r.tokens) for r in results)
+    lat = np.asarray([r.latency for r in results])
+    ttft = np.asarray([r.ttft for r in results])
+    out = {
+        "results": results,
+        "tokens": {r.rid: np.asarray(r.tokens, np.int32) for r in results},
+        "wall_s": wall,
+        "decode_steps": n_steps,
+        "tokens_per_s": total_toks / max(wall, 1e-9),
+        "latency_p50": float(np.percentile(lat, 50)),
+        "latency_p90": float(np.percentile(lat, 90)),
+        "latency_p99": float(np.percentile(lat, 99)),
+        "ttft_p50": float(np.percentile(ttft, 50)),
+        "ttft_p90": float(np.percentile(ttft, 90)),
+        "prefill_compiles": sched.prefill_compiles,
     }
+
+    if verify:
+        mismatches = []
+        for req in reqs:
+            ref = lockstep_generate(cfg, qp, req.prompt, req.max_new_tokens,
+                                    max_len=max_len, use_lop=use_lop,
+                                    frames=req.frames, patches=req.patches)
+            if list(out["tokens"][req.rid]) != ref:
+                mismatches.append(req.rid)
+        out["verified"] = not mismatches
+        out["mismatched_rids"] = mismatches
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="bitnet-3b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--min-prompt", type=int, default=8)
+    ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--arrival-period", type=float, default=0.0,
+                    help="seconds between request arrivals (staggered)")
     ap.add_argument("--no-lop", action="store_true")
+    ap.add_argument("--verify", action="store_true",
+                    help="replay each request alone (lockstep) and check "
+                         "token-exact agreement")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch, args.reduced)
-    print(f"serving {cfg.name}: batch {args.batch}, prompt {args.prompt_len},"
-          f" gen {args.gen}, lop={'off' if args.no_lop else 'on'}")
-    out = serve_loop(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                     gen=args.gen, use_lop=not args.no_lop)
-    print(f"prefill {out['prefill_s']:.2f}s  decode {out['decode_s']:.2f}s "
-          f"({out['tokens_per_s']:.1f} tok/s on CPU semantics)")
-    m = args.prompt_len + args.gen
+    print(f"serving {cfg.name}: {args.slots} slots, {args.requests} requests"
+          f" (prompts {args.min_prompt}-{args.max_prompt}, gen {args.gen}),"
+          f" lop={'off' if args.no_lop else 'on'}")
+    out = serve_loop(cfg, n_slots=args.slots, n_requests=args.requests,
+                     min_prompt=args.min_prompt, max_prompt=args.max_prompt,
+                     gen=args.gen, arrival_period=args.arrival_period,
+                     use_lop=not args.no_lop, verify=args.verify)
+
+    print(f"{'rid':>4} {'plen':>5} {'toks':>5} {'ttft_ms':>8} "
+          f"{'latency_ms':>10}  finish")
+    for r in out["results"]:
+        print(f"{r.rid:>4} {r.prompt_len:>5} {len(r.tokens):>5} "
+              f"{r.ttft * 1e3:>8.1f} {r.latency * 1e3:>10.1f}  "
+              f"{r.finish_reason}")
+    print(f"wall {out['wall_s']:.2f}s, {out['decode_steps']} decode steps, "
+          f"{out['tokens_per_s']:.1f} tok/s, "
+          f"{out['prefill_compiles']} prefill bucket compiles")
+    print(f"latency p50/p90/p99: {out['latency_p50'] * 1e3:.1f} / "
+          f"{out['latency_p90'] * 1e3:.1f} / "
+          f"{out['latency_p99'] * 1e3:.1f} ms; "
+          f"ttft p50/p90: {out['ttft_p50'] * 1e3:.1f} / "
+          f"{out['ttft_p90'] * 1e3:.1f} ms")
+    if args.verify:
+        status = "OK" if out["verified"] else \
+            f"MISMATCH rids={out['mismatched_rids']}"
+        print(f"continuous-batching vs lockstep token equivalence: {status}")
+
+    m = args.max_prompt + args.gen
     full = kv_traffic_bytes(m, cfg.hd, m, with_lop=False)
-    lop = kv_traffic_bytes(m, cfg.hd,
-                           int(m * cfg.lop_keep), with_lop=True)
+    lop = kv_traffic_bytes(m, cfg.hd, int(m * cfg.lop_keep), with_lop=True)
     print(f"modeled KV traffic/head/query: {full} B dense → {lop} B with LOP"
-          f" ({full/lop:.1f}× reduction at keep={cfg.lop_keep})")
+          f" ({full / lop:.1f}× reduction at keep={cfg.lop_keep})")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,14 @@
-"""Serving runtime: quantized weights, KV/LOP caches, prefill + decode."""
+"""Serving runtime: quantized weights, slot-paged KV/LOP cache pool,
+prefill + decode engine, continuous-batching scheduler.
 
-from repro.serving.cache import init_cache
+Lifecycle (see :mod:`repro.serving.scheduler`): admit → prefill → insert →
+decode → evict over ``n_slots`` persistent decode lanes.
+"""
+
+from repro.serving.cache import (evict_slot, free_slot, free_slots,
+                                 init_cache, init_cache_pool, insert_slot,
+                                 pool_capacity)
 from repro.serving.engine import prefill, serve_step
 from repro.serving.quantize import quantize_params
+from repro.serving.scheduler import (Request, RequestResult, Scheduler,
+                                     lockstep_generate)

@@ -1,4 +1,4 @@
-"""Serving caches: int8 KV + per-token absmax scales + packed LOP features.
+"""Serving caches: slot-paged int8 KV + absmax scales + packed LOP features.
 
 The KV cache follows the paper's memory layout insight: exact keys/values in
 int8 (absmax barrier), plus the 4-bit (sgn‖LO) *feature cache* the LOP screen
@@ -8,12 +8,35 @@ attention touches only the K selected candidate blocks.
 Capacity is block-aligned (``lop_block``) so candidate fetches stay
 contiguous. Recurrent families cache their state instead ("KV cache of
 seq_len" = recurrent state for SSM — DESIGN.md §6).
+
+Slot-paged pool (continuous batching)
+-------------------------------------
+``init_cache_pool`` allocates the same tree for ``n_slots`` persistent
+*decode lanes* plus a per-lane ``active`` mask. The lifecycle managed by
+:mod:`repro.serving.scheduler` is::
+
+    admit    a queued request once a lane is free,
+    prefill  it alone (length-bucketed compile) into a batch-1 cache,
+    insert   that cache into the free lane (``insert_slot``,
+             one ``dynamic_update_slice`` per leaf) while the other lanes
+             keep decoding,
+    decode   all active lanes together; inactive lanes are masked out of
+             the LOP screen, block top-K and cache writes,
+    evict    the lane on EOS/max-len (``evict_slot``) — the lane's bytes go
+             stale but every read is masked by per-slot ``lengths``, so the
+             next occupant sees a logically fresh lane.
+
+Stale bytes above a lane's ``lengths`` are harmless by construction: the
+LOP screen masks them to INT32_MIN before block reduction and exact
+attention masks them to −∞ before the softmax, which is also why
+evict→insert reuse is bit-identical to a zero-initialised lane.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def round_up(x: int, mult: int) -> int:
@@ -81,37 +104,129 @@ def init_cache(cfg, batch: int, max_len: int, *, align: int | None = None):
     return cache
 
 
+def _leaf_spec(path, *, batch_axes="dp", seq_axes="sp"):
+    """Logical axes of one cache leaf, *excluding* stacked leading dims.
+
+    Every spec starts at the batch/slot axis, so the slot axis index of a
+    leaf is ``leaf.ndim - len(_leaf_spec(path))`` (used by ``insert_slot``).
+    """
+    name = path[-1]
+    if name in ("k", "v", "feat"):
+        return (batch_axes, None, seq_axes, None)
+    if name in ("k_scale", "v_scale"):
+        return (batch_axes, None, seq_axes)
+    if name in ("lengths", "cross_len", "active"):
+        return (None,)
+    if name == "ssm":
+        return (batch_axes, "tp", None)
+    if name == "conv":
+        return (batch_axes, None, "tp")
+    if name == "wkv":
+        return (batch_axes, "tp", None, None)
+    if name in ("x_tm", "x_cm"):
+        return (batch_axes, None, None)
+    raise KeyError(path)
+
+
 def cache_pspecs(cfg, cache, *, batch_axes="dp", seq_axes="sp"):
     """Logical-axis tree for the cache (M sequence-sharded, batch over dp).
 
     Attention caches shard the token axis over the model axis (SP) — the
     quota-sharded LOP selection in :mod:`repro.distributed.sp_decode` works
     per M-shard. Recurrent state shards its inner dim over the model axis.
+    The per-slot ``lengths``/``active`` vectors stay replicated.
     """
-    def spec_for(path, a):
-        name = path[-1]
-        if name in ("k", "v", "feat"):
-            return (batch_axes, None, seq_axes, None)
-        if name in ("k_scale", "v_scale"):
-            return (batch_axes, None, seq_axes)
-        if name in ("lengths", "cross_len"):
-            return (None,)
-        if name == "ssm":
-            return (batch_axes, "tp", None)
-        if name == "conv":
-            return (batch_axes, None, "tp")
-        if name == "wkv":
-            return (batch_axes, "tp", None, None)
-        if name in ("x_tm", "x_cm"):
-            return (batch_axes, None, None)
-        raise KeyError(path)
-
     def walk(path, node):
         if isinstance(node, dict):
             return {k: walk(path + (k,), v) for k, v in node.items()}
-        spec = spec_for(path, node)
+        spec = _leaf_spec(path, batch_axes=batch_axes, seq_axes=seq_axes)
         # stacked leading dims (layers / superblocks / per-block sublayers)
         extra = node.ndim - len(spec)
         return (None,) * extra + spec
 
     return walk((), cache)
+
+
+# ---------------------------------------------------------------------------
+# Slot-paged pool ops (continuous batching)
+# ---------------------------------------------------------------------------
+
+def slot_axis(path, leaf) -> int:
+    """Index of the slot (batch) axis in a cache leaf at ``path``."""
+    return leaf.ndim - len(_leaf_spec(path))
+
+
+def init_cache_pool(cfg, n_slots: int, max_len: int, *,
+                    align: int | None = None):
+    """Slot-paged pool: ``n_slots`` persistent decode lanes, all inactive.
+
+    Identical tree to :func:`init_cache` (so ``serve_step`` runs on it
+    unchanged) plus a per-lane ``active`` mask that the engine threads
+    through the LOP screen, block top-K and cache writes.
+    """
+    pool = init_cache(cfg, n_slots, max_len, align=align)
+    pool["active"] = jnp.zeros((n_slots,), jnp.bool_)
+    return pool
+
+
+def pool_capacity(pool) -> int:
+    """Token capacity M of the pool's attention lanes (0 if attention-free)."""
+    caps = []
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(path + (k,), v)
+        elif path[-1] == "k" and "cross" not in path:
+            spec = _leaf_spec(path)
+            caps.append(node.shape[node.ndim - len(spec) + 2])
+
+    walk((), pool)
+    return caps[0] if caps else 0
+
+
+def insert_slot(pool, slot, req_cache):
+    """Write a single-request (batch-1) prefill cache into lane ``slot``.
+
+    One ``dynamic_update_slice`` per leaf at that leaf's slot axis — the
+    other lanes are untouched, so insertion composes with donated buffers
+    in a jit'd decode loop. ``slot`` may be a traced scalar (one compile
+    serves every lane). The request cache's token capacity may be smaller
+    than the pool's; positions above it go stale and are masked by
+    ``lengths``.
+    """
+    def walk(path, dst, src):
+        if isinstance(dst, dict):
+            return {k: walk(path + (k,), dst[k], src[k]) if k in src
+                    else dst[k] for k in dst}
+        ax = slot_axis(path, dst)
+        start = (0,) * ax + (slot,) + (0,) * (dst.ndim - ax - 1)
+        return jax.lax.dynamic_update_slice(dst, src, start)
+
+    new = walk((), {k: v for k, v in pool.items() if k != "active"},
+               req_cache)
+    new["active"] = pool["active"].at[slot].set(True)
+    return new
+
+
+def evict_slot(pool, slot):
+    """Retire lane ``slot``: mark inactive, zero its length.
+
+    The lane's K/V/feature bytes are left stale — every consumer masks by
+    ``lengths``/``active``, and the next ``insert_slot`` overwrites them.
+    """
+    pool = dict(pool)
+    pool["active"] = pool["active"].at[slot].set(False)
+    pool["lengths"] = pool["lengths"].at[slot].set(0)
+    return pool
+
+
+# ``free_slot`` is eviction under its queue-side name: a lane freed for the
+# next admission. Kept as an alias so scheduler code reads naturally.
+free_slot = evict_slot
+
+
+def free_slots(pool) -> list[int]:
+    """Host-side list of lanes currently free for admission (syncs)."""
+    return [int(i) for i in
+            np.flatnonzero(~np.asarray(pool["active"]))]

@@ -13,6 +13,13 @@ Attention-free layers (Mamba/RWKV) carry recurrent state instead. With an
 active mesh the decode attention runs the SP quota-sharded core
 (:mod:`repro.distributed.sp_decode`) — the cache's token axis lives sharded
 across the model axis and softmax stats merge flash-decoding style.
+
+Slot-paged decode: when the cache carries a per-lane ``active`` mask (a
+:func:`repro.serving.cache.init_cache_pool` pool), ``serve_step`` decodes
+only the live lanes — inactive lanes are screened out of the LOP selection
+(effective length 0), skipped by the cache append, emit zero attention
+output, and keep their ``lengths`` frozen. This is what lets the scheduler
+admit/retire individual requests mid-flight without recompiling the step.
 """
 
 from __future__ import annotations
@@ -316,27 +323,43 @@ def lop_decode_attention(cfg, qi, qsc, cl, new_len, *, window: int,
     return out.reshape(b, h, dh)
 
 
-def _write_token(cl, ki, vi, ksc, vsc, feat, lengths):
-    """Append one quantized token per sequence at its own position."""
-    def wr(arr, val, pos):
-        # arr [Hkv, M, d]; val [Hkv, d]
-        return jax.lax.dynamic_update_slice(
-            arr, val[:, None], (0, pos) + (0,) * (arr.ndim - 2))
+def _write_token(cl, ki, vi, ksc, vsc, feat, lengths, active=None):
+    """Append one quantized token per sequence at its own position.
 
-    def wr_scale(arr, val, pos):
-        return jax.lax.dynamic_update_slice(arr, val[:, None], (0, pos))
+    With ``active`` given, retired/empty slots keep their lane untouched
+    (the write is computed and discarded — branch-free under vmap).
+    """
+    ok = jnp.ones_like(lengths, bool) if active is None else active
+
+    def wr(arr, val, pos, ok_):
+        # arr [Hkv, M, d]; val [Hkv, d]
+        upd = jax.lax.dynamic_update_slice(
+            arr, val[:, None], (0, pos) + (0,) * (arr.ndim - 2))
+        return jnp.where(ok_, upd, arr)
+
+    def wr_scale(arr, val, pos, ok_):
+        upd = jax.lax.dynamic_update_slice(arr, val[:, None], (0, pos))
+        return jnp.where(ok_, upd, arr)
 
     cl = dict(cl)
-    cl["k"] = jax.vmap(wr)(cl["k"], ki, lengths)
-    cl["v"] = jax.vmap(wr)(cl["v"], vi, lengths)
-    cl["feat"] = jax.vmap(wr)(cl["feat"], feat, lengths)
-    cl["k_scale"] = jax.vmap(wr_scale)(cl["k_scale"], ksc[..., 0], lengths)
-    cl["v_scale"] = jax.vmap(wr_scale)(cl["v_scale"], vsc[..., 0], lengths)
+    cl["k"] = jax.vmap(wr)(cl["k"], ki, lengths, ok)
+    cl["v"] = jax.vmap(wr)(cl["v"], vi, lengths, ok)
+    cl["feat"] = jax.vmap(wr)(cl["feat"], feat, lengths, ok)
+    cl["k_scale"] = jax.vmap(wr_scale)(cl["k_scale"], ksc[..., 0], lengths,
+                                       ok)
+    cl["v_scale"] = jax.vmap(wr_scale)(cl["v_scale"], vsc[..., 0], lengths,
+                                       ok)
     return cl
 
 
-def attn_decode(cfg, lp, h, cl, lengths, *, use_lop=True, sp_axes=None):
-    """One-token self-attention with cache append. h [B, 1, D]."""
+def attn_decode(cfg, lp, h, cl, lengths, *, use_lop=True, sp_axes=None,
+                active=None):
+    """One-token self-attention with cache append. h [B, 1, D].
+
+    ``active`` [B] bool masks slot-paged lanes: inactive lanes get effective
+    length 0 (nothing valid for the LOP screen / block top-K), no cache
+    write, and zero attention output.
+    """
     b = h.shape[0]
     q, k, v = _project_qkv(cfg, lp, h)
     positions = lengths[:, None]
@@ -347,18 +370,22 @@ def attn_decode(cfg, lp, h, cl, lengths, *, use_lop=True, sp_axes=None):
     vi, vsc = _q(v[:, 0])
     feat = pack_features(lop_features(ki))
     new_len = lengths + 1
+    if active is not None:
+        new_len = jnp.where(active, new_len, 0)
 
     if sp_axes:
         from repro.distributed.sp_decode import sp_decode_attention
         out, cl = sp_decode_attention(
             cfg, qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths,
             window=cfg.swa_window, use_lop=use_lop and cfg.use_lop,
-            sp_axes=sp_axes)
+            sp_axes=sp_axes, active=active)
     else:
-        cl = _write_token(cl, ki, vi, ksc, vsc, feat, lengths)
+        cl = _write_token(cl, ki, vi, ksc, vsc, feat, lengths, active)
         out = lop_decode_attention(cfg, qi, qsc, cl, new_len,
                                    window=cfg.swa_window,
                                    use_lop=use_lop and cfg.use_lop)
+    if active is not None:
+        out = jnp.where(active[:, None, None], out, 0.0)
     out = qlinear(lp["wo"], out.reshape(b, 1, cfg.q_dim).astype(jnp.float32))
     return out, cl
 
@@ -411,11 +438,12 @@ def _decoder_layer_prefill(cfg, lp, x, *, capacity, enc=None, cross_cap=None,
 
 
 def _decoder_layer_decode(cfg, lp, x, cl, lengths, *, use_lop, sp_axes,
-                          cross_cl=None, cross_len=None):
+                          cross_cl=None, cross_len=None, active=None):
     x = _shard_batch(x)
     h = norm_apply(lp["ln1"], x, cfg.norm)
     attn_out, new_cl = attn_decode(cfg, lp["attn"], h, cl, lengths,
-                                   use_lop=use_lop, sp_axes=sp_axes)
+                                   use_lop=use_lop, sp_axes=sp_axes,
+                                   active=active)
     x = x + attn_out
     if cross_cl is not None:
         h = norm_apply(lp["ln_x"], x, cfg.norm)
@@ -468,18 +496,28 @@ def _logits(cfg, qp, x_last):
 
 
 def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
-            use_lop=True, sp_axes=None, cache_align=None):
+            use_lop=True, sp_axes=None, cache_align=None, true_len=None):
     """Full-sequence forward writing the cache. → (last logits [B,V], cache).
 
     ``max_len`` sizes the cache capacity (defaults to the prompt length +
     one decode block of slack); ``cache_align`` aligns capacity for SP
     sharding (must match ``init_cache``'s align).
+
+    ``true_len`` (scalar, may be traced) supports length-bucketed prefill
+    compilation: ``tokens`` is right-padded to a bucket length and
+    ``true_len`` marks the real sequence end — the cache length is set to
+    it and the returned logits come from position ``true_len - 1``. Exact
+    for causal-attention families (pad tokens can never attend backward
+    into the answer row); recurrent families (hybrid/ssm) must pass
+    unpadded prompts since their state integrates every position.
     """
     b = tokens.shape[0]
     x = _embed(cfg, qp, tokens, patches)
     s_total = x.shape[1]
     max_len = max(max_len if max_len is not None else 0, s_total)
     cap = round_up(max_len + 1, cache_align or cfg.lop_block)
+    if true_len is None:
+        true_len = s_total
 
     if cfg.family in ("dense", "moe", "vlm"):
         def body(x, lp):
@@ -487,7 +525,7 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
             return x, out["self"]
 
         x, layers_cache = _layer_scan(body, x, qp["layers"])
-        cache = {"lengths": jnp.full((b,), s_total, jnp.int32),
+        cache = {"lengths": jnp.full((b,), true_len, jnp.int32),
                  "layers": layers_cache}
     elif cfg.family == "hybrid":
         def body(x, bp):
@@ -505,7 +543,7 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
             return x, {"attn": attn_cache, "mamba": stacked}
 
         x, blocks = _layer_scan(body, x, qp["blocks"])
-        cache = {"lengths": jnp.full((b,), s_total, jnp.int32),
+        cache = {"lengths": jnp.full((b,), true_len, jnp.int32),
                  "blocks": blocks}
     elif cfg.family == "ssm":
         zeros = {
@@ -519,7 +557,7 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
             return x, st
 
         x, layers_cache = _layer_scan(body, x, qp["layers"])
-        cache = {"lengths": jnp.full((b,), s_total, jnp.int32),
+        cache = {"lengths": jnp.full((b,), true_len, jnp.int32),
                  "layers": layers_cache}
     elif cfg.family == "encdec":
         assert frames is not None
@@ -552,19 +590,27 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
             return x, out
 
         x, outs = _layer_scan(body, x, qp["layers"])
-        cache = {"lengths": jnp.full((b,), s_total, jnp.int32),
+        cache = {"lengths": jnp.full((b,), true_len, jnp.int32),
                  "layers": outs["self"], "cross": outs["cross"],
                  "cross_len": cross_len}
     else:
         raise ValueError(cfg.family)
 
-    logits = _logits(cfg, qp, x[:, -1])
+    x_last = jax.lax.dynamic_index_in_dim(x, true_len - 1, axis=1,
+                                          keepdims=False)
+    logits = _logits(cfg, qp, x_last)
     return logits, cache
 
 
 def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
-    """One decode step. tokens [B, 1] → (logits [B, V], updated cache)."""
+    """One decode step. tokens [B, 1] → (logits [B, V], updated cache).
+
+    A slot-paged pool (``"active"`` in the cache) decodes only live lanes:
+    inactive lanes write nothing, keep their ``lengths``, and their logits
+    are meaningless (the scheduler never reads them).
+    """
     lengths = cache["lengths"]
+    active = cache.get("active")
     x = _embed(cfg, qp, tokens)
     new_cache = dict(cache)
 
@@ -572,7 +618,8 @@ def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
         def body(x, inp):
             lp, cl = inp
             x, ncl = _decoder_layer_decode(cfg, lp, x, cl, lengths,
-                                           use_lop=use_lop, sp_axes=sp_axes)
+                                           use_lop=use_lop, sp_axes=sp_axes,
+                                           active=active)
             return x, ncl
 
         x, layers_cache = _layer_scan(body, x, (qp["layers"],
@@ -589,7 +636,7 @@ def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
                 if cfg.is_attn_layer(j):
                     x, attn_cache = _decoder_layer_decode(
                         cfg, sub, x, bc["attn"], lengths, use_lop=use_lop,
-                        sp_axes=sp_axes)
+                        sp_axes=sp_axes, active=active)
                 else:
                     st = jax.tree.map(lambda a: a[mi], bc["mamba"])
                     x, st = _mamba_layer_decode(cfg, sub, x, st)
@@ -614,7 +661,7 @@ def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
             lp, cl, xcl = inp
             x, ncl = _decoder_layer_decode(
                 cfg, lp, x, cl, lengths, use_lop=use_lop, sp_axes=sp_axes,
-                cross_cl=xcl, cross_len=cache["cross_len"])
+                cross_cl=xcl, cross_len=cache["cross_len"], active=active)
             return x, ncl
 
         x, layers_cache = _layer_scan(
@@ -623,6 +670,7 @@ def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
     else:
         raise ValueError(cfg.family)
 
-    new_cache["lengths"] = lengths + 1
+    new_cache["lengths"] = lengths + (1 if active is None
+                                      else active.astype(jnp.int32))
     logits = _logits(cfg, qp, x[:, -1])
     return logits, new_cache

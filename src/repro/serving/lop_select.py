@@ -5,6 +5,12 @@ shapes: scores arrive per (batch, kv-head, group-head), selection is at
 *block* granularity (paper: "only those candidate blocks are requested"),
 and the output is the (block_idx, gate_tokens) contract the sparse-decode
 kernel consumes.
+
+Slot-paged pools reuse the same masking contract: a retired or empty lane
+is passed with ``new_len == 0``, which makes :func:`token_valid_mask` all
+false, every screened score INT32_MIN, and every selected block fully
+gated off (its live interval [start, end) is empty) — stale bytes from a
+previous occupant can never leak into the softmax of the next one.
 """
 
 from __future__ import annotations

@@ -1,0 +1,310 @@
+"""Continuous-batching scheduler over the slot-paged cache pool.
+
+The serving layer's control plane: a FIFO request queue feeding ``n_slots``
+persistent decode lanes (:func:`repro.serving.cache.init_cache_pool`). The
+lifecycle per request is
+
+    admit → prefill → insert → decode → evict
+
+  admit    — a queued request is taken once a lane is free; the other lanes
+             keep decoding in the meantime.
+  prefill  — the request runs alone (batch 1) through ``engine.prefill``.
+             Prompts are right-padded to a power-of-two *length bucket* so
+             compilation is bounded to a handful of shapes instead of one
+             per distinct prompt length; ``true_len`` keeps the padded
+             positions out of the logits and the cache length. Recurrent
+             families (hybrid/ssm) integrate state over every position, so
+             they use exact-length buckets (one compile per length).
+  insert   — the batch-1 cache is written into the free lane with one
+             ``dynamic_update_slice`` per leaf (``insert_slot``), and the
+             prefill's argmax becomes the lane's first generated token.
+  decode   — one jit'd ``serve_step`` advances *all* active lanes; retired
+             lanes are masked out of the LOP screen, block top-K and cache
+             writes by the per-slot ``active`` mask.
+  evict    — on EOS or the request's token budget the lane is retired
+             (``evict_slot``) and immediately reusable; stale bytes are
+             masked by ``lengths`` so the next occupant is unaffected.
+
+Determinism note: lanes are independent through every attention/FFN path,
+so a request decodes the same tokens whether it shares the pool or runs
+alone (``lockstep_generate``) — the equivalence the tests pin down. The
+exception is MoE capacity dropping, which ranks tokens across the batch;
+with a generous ``capacity_factor`` the paths agree, but bit-exactness is
+only guaranteed for dense/vlm/recurrent families.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.cache import (evict_slot, init_cache_pool, insert_slot,
+                                 pool_capacity)
+from repro.serving.engine import prefill, serve_step
+
+
+@dataclass
+class Request:
+    """One generation request entering the queue."""
+    rid: int
+    prompt: np.ndarray                 # int32 [prompt_len]
+    max_new_tokens: int
+    eos_id: int | None = None
+    arrival: float | None = None       # driver-set; default stamps submit()
+    frames: np.ndarray | None = None   # encdec audio frames [S_enc, D]
+    patches: np.ndarray | None = None  # vlm patch embeds [n_img, D]
+
+
+@dataclass
+class RequestResult:
+    """Completed request: emitted tokens + latency breakdown."""
+    rid: int
+    prompt_len: int
+    tokens: list[int] = field(default_factory=list)
+    t_arrival: float = 0.0
+    t_admit: float = 0.0               # prefill started (lane granted)
+    t_first: float = 0.0               # first token emitted (TTFT end)
+    t_done: float = 0.0
+    finish_reason: str = ""            # "eos" | "length"
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_arrival
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+@dataclass
+class _Lane:
+    """Host-side state of one occupied decode lane."""
+    result: RequestResult
+    remaining: int
+    eos_id: int | None
+
+
+def pow2_bucket(n: int, *, lo: int = 16, hi: int | None = None) -> int:
+    """Smallest power-of-two ≥ n (clamped to [lo, hi]) — the prefill
+    compilation bucket. A few buckets cover every prompt length, bounding
+    recompiles regardless of traffic mix."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, hi) if hi is not None else b
+
+
+class Scheduler:
+    """Continuous-batching engine front-end (greedy decoding).
+
+    Drives the admit → prefill → insert → decode → evict lifecycle over a
+    slot-paged pool. ``step()`` advances every active lane one token and
+    returns the requests that completed; ``admit()`` fills free lanes from
+    the queue. The driver (``launch/serve.py``) interleaves the two.
+    """
+
+    def __init__(self, cfg, qp, *, n_slots: int, max_len: int,
+                 use_lop: bool = True, bucket_min: int = 16,
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.qp = qp
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.use_lop = use_lop
+        self.bucket_min = bucket_min
+        self.clock = clock
+        self.pool = init_cache_pool(cfg, n_slots, max_len)
+        self.capacity = pool_capacity(self.pool)
+        # encdec: cross-attention lanes have their own (cross_ctx) capacity
+        self.cross_capacity = (self.pool["cross"]["k"].shape[3]
+                               if "cross" in self.pool else 0)
+
+        self.queue: deque[Request] = deque()
+        self.lanes: list[_Lane | None] = [None] * n_slots
+        self._free: deque[int] = deque(range(n_slots))
+        # pending next-token per lane, fed to the next decode step
+        self._next_tok = np.zeros((n_slots, 1), np.int32)
+        self.results: list[RequestResult] = []
+        self.prefill_compiles = 0
+
+        self._prefill_fns: dict[int, object] = {}
+        self._step_fn = jax.jit(
+            lambda qp, c, t: serve_step(cfg, qp, c, t, use_lop=use_lop),
+            donate_argnums=(1,))
+        self._insert_fn = jax.jit(insert_slot, donate_argnums=(0,))
+        self._evict_fn = jax.jit(evict_slot, donate_argnums=(0,))
+
+    # ---------------- queue ----------------
+
+    def submit(self, req: Request) -> None:
+        # attention-free pools (capacity 0: recurrent state only) have no
+        # token-capacity bound — only the prompt buffer limits them
+        need = len(req.prompt) + req.max_new_tokens
+        if self.cfg.family == "vlm" and req.patches is not None:
+            need += len(req.patches)   # image prefix occupies cache slots
+        assert not self.capacity or need <= self.capacity, (
+            f"request {req.rid} needs {need} tokens but pool capacity is "
+            f"{self.capacity}")
+        assert req.frames is None or len(req.frames) <= \
+            self.cross_capacity, (
+            f"request {req.rid} has {len(req.frames)} encoder frames but "
+            f"the pool's cross capacity is {self.cross_capacity}")
+        if req.arrival is None:
+            req.arrival = self.clock()
+        self.queue.append(req)
+
+    @property
+    def n_active(self) -> int:
+        return sum(l is not None for l in self.lanes)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    # ---------------- admit / prefill / insert ----------------
+
+    def _bucket(self, prompt_len: int) -> int:
+        if self.cfg.family in ("hybrid", "ssm", "encdec"):
+            # recurrent state integrates every position; encdec frames tie
+            # the compile to the prompt anyway → exact-length, no padding
+            return prompt_len
+        return pow2_bucket(prompt_len, lo=self.bucket_min,
+                           hi=self.max_len)
+
+    def _prefill_for(self, key):
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            cfg, use_lop, max_len = self.cfg, self.use_lop, self.max_len
+            fn = jax.jit(lambda qp, t, tl, kw: prefill(
+                cfg, qp, t, max_len=max_len, use_lop=use_lop, true_len=tl,
+                **kw))
+            self._prefill_fns[key] = fn
+            self.prefill_compiles += 1
+        return fn
+
+    def admit(self) -> int:
+        """Admit queued requests into free lanes. Returns #admitted."""
+        n = 0
+        while self.queue and self._free:
+            req = self.queue.popleft()
+            slot = self._free.popleft()
+            plen = len(req.prompt)
+            bucket = max(self._bucket(plen), plen)
+            t_admit = self.clock()
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :plen] = req.prompt
+            kw = {}
+            true_len = plen
+            if req.frames is not None:
+                kw["frames"] = jnp.asarray(req.frames)[None]
+            if req.patches is not None:
+                kw["patches"] = jnp.asarray(req.patches)[None]
+                true_len += len(req.patches)   # image prefix precedes text
+            key = (bucket,) + tuple(sorted(
+                (k, v.shape) for k, v in kw.items()))
+            logits, req_cache = self._prefill_for(key)(
+                self.qp, jnp.asarray(padded), jnp.int32(true_len), kw)
+            self.pool = self._insert_fn(self.pool, jnp.int32(slot),
+                                        req_cache)
+            first = int(jnp.argmax(logits[0]))
+            res = RequestResult(rid=req.rid, prompt_len=plen,
+                                tokens=[first], t_arrival=req.arrival,
+                                t_admit=t_admit, t_first=self.clock())
+            lane = _Lane(result=res, remaining=req.max_new_tokens - 1,
+                         eos_id=req.eos_id)
+            self.lanes[slot] = lane
+            self._next_tok[slot, 0] = first
+            if (req.eos_id is not None and first == req.eos_id) \
+                    or lane.remaining <= 0:
+                self._finish(slot, "eos" if req.eos_id is not None
+                             and first == req.eos_id else "length")
+            n += 1
+        return n
+
+    # ---------------- decode / evict ----------------
+
+    def step(self) -> list[RequestResult]:
+        """One decode step over every active lane; returns completions."""
+        if self.n_active == 0:
+            return []
+        logits, self.pool = self._step_fn(
+            self.qp, self.pool, jnp.asarray(self._next_tok))
+        toks = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        done = []
+        for slot, lane in enumerate(self.lanes):
+            if lane is None:
+                continue
+            tok = int(toks[slot])
+            lane.result.tokens.append(tok)
+            lane.remaining -= 1
+            self._next_tok[slot, 0] = tok
+            if lane.eos_id is not None and tok == lane.eos_id:
+                done.append(self._finish(slot, "eos"))
+            elif lane.remaining <= 0:
+                done.append(self._finish(slot, "length"))
+        return done
+
+    def _finish(self, slot: int, reason: str) -> RequestResult:
+        lane = self.lanes[slot]
+        lane.result.t_done = self.clock()
+        lane.result.finish_reason = reason
+        self.pool = self._evict_fn(self.pool, jnp.int32(slot))
+        self.lanes[slot] = None
+        self._free.append(slot)
+        self._next_tok[slot, 0] = 0
+        self.results.append(lane.result)
+        return lane.result
+
+    def run_to_completion(self) -> list[RequestResult]:
+        """Drain queue + lanes (all requests already submitted)."""
+        while self.has_work():
+            self.admit()
+            self.step()
+        return self.results
+
+
+# jitted lockstep entry points, cached per (cfg, use_lop, max_len) so the
+# N-request verify replay compiles each shape once, not once per request
+_LOCKSTEP_FNS: dict = {}
+
+
+def _lockstep_fns(cfg, use_lop: bool, max_len: int):
+    key = (cfg, use_lop, max_len)
+    fns = _LOCKSTEP_FNS.get(key)
+    if fns is None:
+        fns = (jax.jit(lambda qp, t, kw: prefill(
+                   cfg, qp, t, max_len=max_len, use_lop=use_lop, **kw)),
+               jax.jit(lambda qp, c, t: serve_step(cfg, qp, c, t,
+                                                   use_lop=use_lop),
+                       donate_argnums=(1,)))
+        _LOCKSTEP_FNS[key] = fns
+    return fns
+
+
+def lockstep_generate(cfg, qp, prompt, max_new_tokens: int, *,
+                      max_len: int, use_lop: bool = True,
+                      eos_id: int | None = None, frames=None,
+                      patches=None) -> list[int]:
+    """Single-request lockstep reference path: prefill + greedy decode.
+
+    ``max_len`` must match the pool's (same cache capacity → same LOP
+    block top-K budget) for token-exact agreement with the scheduler.
+    """
+    prefill_fn, step = _lockstep_fns(cfg, use_lop, max_len)
+    kw = {}
+    if frames is not None:
+        kw["frames"] = jnp.asarray(frames)[None]
+    if patches is not None:
+        kw["patches"] = jnp.asarray(patches)[None]
+    logits, cache = prefill_fn(qp, jnp.asarray(prompt)[None], kw)
+    toks = [int(jnp.argmax(logits[0]))]
+    while len(toks) < max_new_tokens and (eos_id is None
+                                          or toks[-1] != eos_id):
+        logits, cache = step(qp, cache,
+                             jnp.asarray([[toks[-1]]], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks

@@ -41,7 +41,10 @@ for multi_pod in (False, True):
                 fn, args, _ = build_decode_cell(cfg, shape, mesh)
             compiled = fn.lower(*args).compile()
             mem = compiled.memory_analysis()
-            assert compiled.cost_analysis().get("flops", 0) > 0
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):   # older jax: list of dicts
+                ca = ca[0]
+            assert ca.get("flops", 0) > 0
             print(kind, multi_pod, "ok", mem.temp_size_in_bytes)
 print("DRYRUN_SMOKE_OK")
 """

@@ -36,6 +36,9 @@ def test_train_quantize_serve_lifecycle():
 @pytest.mark.slow
 def test_serve_loop_driver():
     cfg = _reduced("granite-moe-1b-a400m")
-    out = serve_loop(cfg, batch=2, prompt_len=12, gen=6)
-    assert out["tokens"].shape == (2, 6)
+    out = serve_loop(cfg, n_slots=2, n_requests=3, min_prompt=8,
+                     max_prompt=16, gen=6)
+    assert len(out["results"]) == 3
+    assert all(len(r.tokens) == 6 for r in out["results"])
     assert out["tokens_per_s"] > 0
+    assert out["latency_p50"] > 0 and out["ttft_p50"] > 0

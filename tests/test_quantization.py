@@ -1,39 +1,26 @@
-"""Absmax quantization barrier: properties + STE."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+"""Absmax quantization barrier: deterministic cases + STE.
+
+The hypothesis property-based companions live in test_hypothesis_props.py
+(skipped when hypothesis is not installed).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantization import (QuantizedTensor, absmax_scale,
-                                     dequantize, fake_quantize, int8_matmul,
+from repro.core.quantization import (dequantize, fake_quantize, int8_matmul,
                                      online_softmax_stats, quantize, rmsnorm,
                                      ste_quantize)
 
-finite_vecs = hnp.arrays(
-    np.float32, hnp.array_shapes(min_dims=1, max_dims=3, min_side=1,
-                                 max_side=32),
-    elements=st.floats(-1e4, 1e4, width=32))
 
-
-@hypothesis.given(finite_vecs)
-@hypothesis.settings(max_examples=50, deadline=None)
-def test_quantize_error_bound(x):
+def test_quantize_error_bound_deterministic(rng):
     """|dequant(quant(x)) − x| ≤ scale/2 (+eps) — the absmax contract."""
+    x = (rng.standard_normal((4, 16, 32)) * 1e3).astype(np.float32)
     qt = quantize(jnp.asarray(x))
+    v = np.asarray(qt.values)
+    assert v.dtype == np.int8 and v.min() >= -127 and v.max() <= 127
     err = np.abs(np.asarray(dequantize(qt)) - x)
     bound = np.asarray(qt.scale) * 0.5 + 1e-6
     assert (err <= np.broadcast_to(bound, err.shape) + 1e-6).all()
-
-
-@hypothesis.given(finite_vecs)
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_quantize_int8_range(x):
-    qt = quantize(jnp.asarray(x))
-    v = np.asarray(qt.values)
-    assert v.dtype == np.int8
-    assert v.min() >= -127 and v.max() <= 127
 
 
 def test_ste_gradient_is_identity_shaped(rng):

@@ -1,4 +1,5 @@
-"""Serving engine: prefill/decode consistency, LOP exactness, generation."""
+"""Serving engine: prefill/decode consistency, LOP exactness, generation,
+slot-paged cache pool semantics."""
 import importlib
 
 import jax
@@ -7,7 +8,9 @@ import numpy as np
 import pytest
 
 from repro.models.transformer import init_params
-from repro.serving.cache import init_cache
+from repro.serving.cache import (cache_pspecs, evict_slot, free_slots,
+                                 init_cache, init_cache_pool, insert_slot,
+                                 pool_capacity)
 from repro.serving.engine import prefill, serve_step
 from repro.serving.quantize import quantize_params
 
@@ -122,6 +125,150 @@ def test_init_cache_shapes():
     assert cache["blocks"]["mamba"]["ssm"].shape == (
         n_sb, cfg.attn_every - 1, 2, cfg.d_inner, cfg.mamba_d_state)
     assert cache["blocks"]["attn"]["feat"].shape[-1] == cfg.hd // 2
+
+
+# ---------------------------------------------------------------------------
+# Slot-paged pool
+# ---------------------------------------------------------------------------
+
+MAX_LEN = 63          # capacity 64 with the reduced lop_block of 32
+
+
+def _pool_setup(arch="bitnet-3b", **over):
+    cfg = _reduced(arch)
+    if over:
+        cfg = cfg.replace(**over)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, quantize_params(cfg, params)
+
+
+def _solo_tokens(cfg, qp, prompt, gen, use_lop=True):
+    logits, cache = prefill(cfg, qp, prompt[None], max_len=MAX_LEN,
+                            use_lop=use_lop)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(gen):
+        tok = jnp.asarray([[toks[-1]]], jnp.int32)
+        logits, cache = serve_step(cfg, qp, cache, tok, use_lop=use_lop)
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks
+
+
+def _pool_decode(cfg, qp, pool, first_toks, gen, use_lop=True):
+    """Greedy-decode every active lane of ``pool`` together."""
+    n = pool["lengths"].shape[0]
+    tok = np.zeros((n, 1), np.int32)
+    out = {s: [t] for s, t in first_toks.items()}
+    for s, t in first_toks.items():
+        tok[s, 0] = t
+    for _ in range(gen):
+        logits, pool = serve_step(cfg, qp, pool, jnp.asarray(tok),
+                                  use_lop=use_lop)
+        for s in out:
+            t = int(jnp.argmax(logits[s]))
+            out[s].append(t)
+            tok[s, 0] = t
+    return out, pool
+
+
+def test_variable_length_pool_matches_per_request_lockstep():
+    """Lanes with different lengths decode together exactly as each request
+    does alone — the slot-paged engine's core invariant."""
+    cfg, qp = _pool_setup()
+    rng = np.random.default_rng(11)
+    prompts = {0: rng.integers(0, cfg.vocab, (13,)).astype(np.int32),
+               2: rng.integers(0, cfg.vocab, (29,)).astype(np.int32)}
+    pool = init_cache_pool(cfg, 3, MAX_LEN)          # lane 1 stays empty
+    first = {}
+    for slot, p in prompts.items():
+        logits, req_cache = prefill(cfg, qp, p[None], max_len=MAX_LEN)
+        pool = insert_slot(pool, jnp.int32(slot), req_cache)
+        first[slot] = int(jnp.argmax(logits[0]))
+    assert free_slots(pool) == [1]
+    out, pool = _pool_decode(cfg, qp, pool, first, gen=6)
+    np.testing.assert_array_equal(np.asarray(pool["lengths"]),
+                                  [13 + 6, 0, 29 + 6])
+    for slot, p in prompts.items():
+        assert out[slot] == _solo_tokens(cfg, qp, p, 6), slot
+
+
+def test_evict_insert_reuse_matches_fresh_cache():
+    cfg, qp = _pool_setup()
+    rng = np.random.default_rng(12)
+    a = rng.integers(0, cfg.vocab, (45,)).astype(np.int32)
+    b = rng.integers(0, cfg.vocab, (10,)).astype(np.int32)
+    pool = init_cache_pool(cfg, 2, MAX_LEN)
+    la, ca = prefill(cfg, qp, a[None], max_len=MAX_LEN)
+    pool = insert_slot(pool, jnp.int32(0), ca)
+    out, pool = _pool_decode(cfg, qp, pool,
+                             {0: int(jnp.argmax(la[0]))}, gen=5)
+    pool = evict_slot(pool, jnp.int32(0))
+    assert free_slots(pool) == [0, 1]
+    lb, cb = prefill(cfg, qp, b[None], max_len=MAX_LEN)
+    pool = insert_slot(pool, jnp.int32(0), cb)
+    reused, _ = _pool_decode(cfg, qp, pool,
+                             {0: int(jnp.argmax(lb[0]))}, gen=5)
+    fresh_pool = insert_slot(init_cache_pool(cfg, 2, MAX_LEN),
+                             jnp.int32(0), cb)
+    fresh, _ = _pool_decode(cfg, qp, fresh_pool,
+                            {0: int(jnp.argmax(lb[0]))}, gen=5)
+    assert reused[0] == fresh[0]
+
+
+def test_slot_paged_lop_agrees_with_dense_at_full_keep():
+    """use_lop=True at keep=1.0 must match the dense baseline on the
+    slot-paged path (the paper's K=M exactness, now with masked lanes)."""
+    cfg, qp = _pool_setup(lop_keep=1.0)
+    rng = np.random.default_rng(13)
+    p = rng.integers(0, cfg.vocab, (21,)).astype(np.int32)
+
+    def run(use_lop):
+        pool = init_cache_pool(cfg, 2, MAX_LEN)
+        logits, rc = prefill(cfg, qp, p[None], max_len=MAX_LEN,
+                             use_lop=use_lop)
+        pool = insert_slot(pool, jnp.int32(1), rc)
+        tok = np.zeros((2, 1), np.int32)
+        tok[1, 0] = int(jnp.argmax(logits[0]))
+        logits2, _ = serve_step(cfg, qp, pool, jnp.asarray(tok),
+                                use_lop=use_lop)
+        return logits2[1]
+
+    lop, dense = run(True), run(False)
+    ref = float(jnp.max(jnp.abs(dense))) + 1e-9
+    err = float(jnp.max(jnp.abs(lop - dense)))
+    assert err / ref < 2e-2, (err, ref)
+
+
+def test_pool_tree_matches_lockstep_cache_plus_active():
+    """The pool is init_cache + per-lane active (so serve_step, cache_pspecs
+    and the dryrun cells all keep working), and insert sets length/active."""
+    for arch in ("jamba-1.5-large-398b", "whisper-small", "rwkv6-1.6b"):
+        cfg = _reduced(arch)
+        pool = init_cache_pool(cfg, 2, 60)
+        base = init_cache(cfg, 2, 60)
+        assert set(pool) == set(base) | {"active"}
+        assert not np.asarray(pool["active"]).any()
+        specs = cache_pspecs(cfg, pool)
+        assert specs["active"] == (None,)
+        if cfg.family != "ssm":
+            assert pool_capacity(pool) > 0
+
+
+def test_inactive_lanes_do_not_drift():
+    """Decoding with every lane inactive must leave lengths untouched and
+    produce finite logits (masked screen/top-K/write paths)."""
+    cfg, qp = _pool_setup()
+    pool = init_cache_pool(cfg, 2, MAX_LEN)
+    before = jax.tree.map(np.asarray, pool)
+    logits, after = serve_step(cfg, qp, pool,
+                               jnp.zeros((2, 1), jnp.int32))
+    assert np.isfinite(np.asarray(logits)).all()
+    np.testing.assert_array_equal(np.asarray(after["lengths"]),
+                                  before["lengths"])
+    np.testing.assert_array_equal(np.asarray(after["active"]),
+                                  before["active"])
+    for la, lb in zip(jax.tree.leaves(jax.tree.map(np.asarray, after)),
+                      jax.tree.leaves(before)):
+        np.testing.assert_array_equal(la, lb)
 
 
 def test_quantize_params_packs_linears():
