@@ -11,6 +11,18 @@ feature cache lives on-chip in the 120 KB SRAM); we report both conventions:
 Throughput is measured on CPU semantics (dense int8 decode attention vs the
 LOP screen → select → sparse path) — directionally validating the claim;
 the silicon ratio depends on the ASIC's memory system.
+
+Fused-vs-legacy dispatch
+------------------------
+The decode stack used to launch ``lop_screen`` and ``sparse_decode`` as
+separate single-kv-head kernels under a triple ``vmap`` over (batch,
+kv-head, group) with the block selector in plain jnp between them; it is
+now ONE batched kernel (``ops.decode_attention``). This benchmark keeps a
+local copy of the legacy dispatch and reports both step costs plus the
+Pallas call-site count of each path (from the jaxpr — interpret-mode
+lowering on CPU emits no ``custom-call``s to count in HLO, so the jaxpr
+equation count is the portable proxy; each site is a separate kernel
+launch boundary with jnp glue round-tripping through HBM between them).
 """
 
 from __future__ import annotations
@@ -22,9 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lop import kv_traffic_bytes
-from repro.models.transformer import init_params
 from repro.serving.engine import lop_decode_attention
-from repro.serving.quantize import quantize_params
+from repro.serving.lop_select import k_keep_blocks, select_blocks
 
 from repro.configs.bitnet_3b import REDUCED as BITNET_REDUCED
 
@@ -39,9 +50,49 @@ def _time(fn, *args, iters=20):
     return (time.time() - t0) / iters * 1e6     # µs
 
 
+def _legacy_vmap_decode(cfg, qi, qsc, cl, new_len):
+    """The pre-fusion dispatch: per-head small kernels under a triple vmap.
+
+    Kept verbatim (paper-faithful per-q-head selection) as the baseline the
+    fused kernel replaced — screen kernel, jnp block top-K, then one
+    ``sparse_decode`` launch per (batch, kv-head, group) lane.
+    """
+    from repro.kernels import ops
+    b, h, dh = qi.shape
+    hkv = cl["k"].shape[1]
+    g = h // hkv
+    m = cl["k"].shape[2]
+    sm = dh ** -0.5
+    block = cfg.lop_block
+    k_keep = k_keep_blocks(cfg, m)
+    qg = qi.reshape(b, hkv, g, dh)
+    screen = jax.vmap(jax.vmap(ops.lop_screen))          # over (B, Hkv)
+    scores = screen(qg, cl["feat"])                      # [B, Hkv, G, M]
+    idx, gate_tokens = select_blocks(scores, new_len, block=block,
+                                     k_keep=k_keep, window=0)
+    qsc_g = qsc.reshape(b, hkv, g)
+
+    def one(qv, qs, kc, vc, ks, vs, bi, gt):
+        return ops.sparse_decode(qv[None], kc, vc, qs.reshape(1, 1),
+                                 ks[:, None], vs[:, None], bi, gt,
+                                 block=block, softmax_scale=sm)[0]
+
+    per_g = jax.vmap(one, in_axes=(0, 0, None, None, None, None, 0, 0))
+    per_b = jax.vmap(jax.vmap(per_g))
+    out = per_b(qg, qsc_g, cl["k"], cl["v"], cl["k_scale"], cl["v_scale"],
+                idx, gate_tokens)                        # [B, Hkv, G, dh]
+    return out.reshape(b, h, dh)
+
+
+def _pallas_call_sites(fn, *args) -> int:
+    """Pallas kernel call sites in ``fn``'s jaxpr (launch boundaries)."""
+    return str(jax.make_jaxpr(fn)(*args)).count("pallas_call")
+
+
 def run():
     # paper setting: BitNet-3B-like head_dim, decode against an M-token cache
-    cfg = BITNET_REDUCED.replace(lop_keep=1 / 54.86, lop_block=32)
+    cfg = BITNET_REDUCED.replace(lop_keep=1 / 54.86, lop_block=32,
+                                 gqa_shared_select=False, int8_logits=False)
     b, h, dh, m = 4, cfg.n_heads, cfg.hd, 2048
     hkv = cfg.n_kv_heads
     rng = np.random.default_rng(0)
@@ -63,9 +114,31 @@ def run():
         cfg, q, qs, c, n, window=0, use_lop=False))
     sparse = jax.jit(lambda q, qs, c, n: lop_decode_attention(
         cfg, q, qs, c, n, window=0, use_lop=True))
+    legacy = jax.jit(lambda q, qs, c, n: _legacy_vmap_decode(
+        cfg, q, qs, c, n))
 
     t_dense = _time(dense, qi, qsc, cl, new_len)
     t_sparse = _time(sparse, qi, qsc, cl, new_len)
+    t_legacy = _time(legacy, qi, qsc, cl, new_len)
+
+    # kernel call sites of each dispatch (impl="pallas" jaxprs); the fused
+    # path is ONE pallas_call spanning every (batch, kv-head) lane, the
+    # legacy path is a screen launch + a sparse launch per head group with
+    # jnp selection glue between them
+    import os
+    prev_impl = os.environ.get("REPRO_KERNEL_IMPL")
+    os.environ["REPRO_KERNEL_IMPL"] = "pallas"
+    try:
+        sites_fused = _pallas_call_sites(
+            lambda q: lop_decode_attention(cfg, q, qsc, cl, new_len,
+                                           window=0, use_lop=True), qi)
+        sites_legacy = _pallas_call_sites(
+            lambda q: _legacy_vmap_decode(cfg, q, qsc, cl, new_len), qi)
+    finally:
+        if prev_impl is None:
+            del os.environ["REPRO_KERNEL_IMPL"]
+        else:
+            os.environ["REPRO_KERNEL_IMPL"] = prev_impl
 
     k_tokens = max(1, int(round(cfg.lop_keep * (m // cfg.lop_block)))) \
         * cfg.lop_block
@@ -76,9 +149,17 @@ def run():
     rows = [
         ("fig8/mha_dense_us", t_dense, "dense int8 decode attention"),
         ("fig8/mha_lop_us", t_sparse,
-         f"LOP screen+topk+sparse (keep={cfg.lop_keep:.4f})"),
+         f"fused LOP screen+topk+sparse (keep={cfg.lop_keep:.4f})"),
         ("fig8/mha_speedup", t_dense / t_sparse,
          "paper: +26.31% (1.26x)"),
+        ("fig8/decode_legacy_vmap_us", t_legacy,
+         "pre-fusion dispatch: per-head vmap'd screen+select+sparse"),
+        ("fig8/decode_fused_vs_legacy", t_legacy / t_sparse,
+         "fused single-kernel step cost vs legacy per-head dispatch"),
+        ("fig8/kernel_call_sites_fused", sites_fused,
+         "pallas_call sites in the fused decode jaxpr (target: 1)"),
+        ("fig8/kernel_call_sites_legacy", sites_legacy,
+         "pallas_call sites in the legacy decode jaxpr (screen + sparse)"),
         ("fig8/kv_traffic_reduction_kv_only", kv_only_dense / kv_only_lop,
          "paper convention (features on-chip): target 54.86x"),
         ("fig8/kv_traffic_reduction_with_screen",

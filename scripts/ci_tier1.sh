@@ -5,6 +5,11 @@
 # Deterministic tests must pass even without the dev extras installed
 # (property-based modules importorskip hypothesis); install
 # requirements-dev.txt to run the full property suite.
+#
+# After the main suite, the kernel test modules re-run under BOTH dispatch
+# arms — REPRO_KERNEL_IMPL=ref (jnp oracles) and REPRO_KERNEL_IMPL=pallas
+# (interpret-mode Pallas kernels) — so neither side of the ops.py dispatch
+# can rot while the other stays green.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,4 +18,11 @@ if ! python -c "import hypothesis" 2>/dev/null; then
          "skip (pip install -r requirements-dev.txt for full coverage)" >&2
 fi
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q "$@"
+
+KERNEL_TESTS="tests/test_kernels.py tests/test_decode_attention.py"
+for impl in ref pallas; do
+    echo "ci_tier1: kernel tests under REPRO_KERNEL_IMPL=${impl}" >&2
+    REPRO_KERNEL_IMPL="${impl}" python -m pytest -x -q ${KERNEL_TESTS}
+done

@@ -56,7 +56,10 @@ vscale = jnp.asarray(rng.uniform(0.5, 2.0, size=(M, 1)).astype(np.float32)) * 0.
 qg = jnp.asarray(rng.integers(-60, 61, size=(G, D)).astype(np.int8))
 qscale = jnp.asarray(rng.uniform(0.5, 2.0, size=(G, 1)).astype(np.float32)) * 0.01
 bidx = jnp.asarray([0, 3, 5, 7], dtype=jnp.int32)
-gate_tokens = jnp.asarray([1, 1, 1, 0, BLK, BLK, 100, 0], dtype=jnp.int32)
+# [gate ‖ end ‖ start] per the scalar-prefetch contract (lop_select.py)
+gate_tokens = jnp.asarray([1, 1, 1, 0,            # gates
+                           BLK, BLK, 100, 0,      # live-interval ends
+                           0, 0, 0, 0], dtype=jnp.int32)   # starts
 o_k = ops.sparse_decode(qg, kcache, vcache, qscale, kscale, vscale, bidx,
                         gate_tokens, block=BLK, softmax_scale=sm, impl="pallas")
 o_r = ops.sparse_decode(qg, kcache, vcache, qscale, kscale, vscale, bidx,
@@ -64,4 +67,26 @@ o_r = ops.sparse_decode(qg, kcache, vcache, qscale, kscale, vscale, bidx,
 err = float(jnp.max(jnp.abs(o_k - o_r)))
 print(f"sparse_decode max abs err: {err:.2e}")
 assert err < 1e-3
+
+# --- fused batched decode (the serving decode entry) ---
+B, H, HKV = 2, 8, 2
+qb = jnp.asarray(rng.integers(-60, 61, size=(B, H, D)).astype(np.int8))
+qbs = jnp.asarray(rng.uniform(0.005, 0.02, size=(B, H, 1)).astype(np.float32))
+kb = jnp.asarray(rng.integers(-60, 61, size=(B, HKV, M, D)).astype(np.int8))
+vb = jnp.asarray(rng.integers(-60, 61, size=(B, HKV, M, D)).astype(np.int8))
+kbs = jnp.asarray(rng.uniform(0.005, 0.02, size=(B, HKV, M)).astype(np.float32))
+vbs = jnp.asarray(rng.uniform(0.005, 0.02, size=(B, HKV, M)).astype(np.float32))
+featb = pack_features(lop_features(kb))
+new_len = jnp.asarray([M - 100, 0], jnp.int32)      # lane 1 retired
+for use_lop in (True, False):
+    o_k = ops.decode_attention(qb, qbs, kb, vb, kbs, vbs, featb, new_len,
+                               block=BLK, k_keep=3, use_lop=use_lop,
+                               impl="pallas")
+    o_r = ops.decode_attention(qb, qbs, kb, vb, kbs, vbs, featb, new_len,
+                               block=BLK, k_keep=3, use_lop=use_lop,
+                               impl="ref")
+    err = float(jnp.max(jnp.abs(o_k - o_r)))
+    print(f"decode_attention use_lop={use_lop} max abs err: {err:.2e}")
+    assert err < 1e-3
+    assert float(jnp.max(jnp.abs(o_k[1]))) == 0.0, "retired lane leaked"
 print("ALL KERNEL SANITY OK")

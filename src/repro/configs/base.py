@@ -65,6 +65,13 @@ class ModelConfig:
     lop_block: int = 128        # KV candidate-block granularity (tokens)
     lop_keep: float = 0.125     # K/M — fraction of blocks kept by the screen
     use_lop: bool = True        # False for attention-free archs (rwkv6)
+    # --- beyond-paper decode variants (DESIGN.md §Perf-variants) ---
+    # Explicit kernel parameters of the fused decode path. ``None`` defers
+    # to the legacy REPRO_GQA_SHARED_SELECT / REPRO_INT8_LOGITS env flags,
+    # resolved ONCE at the engine entry (resolve_decode_flags) — never
+    # inside traced inner functions.
+    gqa_shared_select: bool | None = None  # one candidate set per KV head
+    int8_logits: bool | None = None        # integer-domain QKᵀ in prefill
     # --- misc ---
     norm: str = "rmsnorm"       # rmsnorm | layernorm
     gated_ffn: bool = True      # silu-gated (False → gelu MLP, whisper)
@@ -110,6 +117,29 @@ class ModelConfig:
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
+
+
+def resolve_decode_flags(cfg: "ModelConfig") -> "ModelConfig":
+    """Pin the beyond-paper decode variants to concrete booleans.
+
+    Config fields are the source of truth; a ``None`` field falls back to
+    the matching environment flag for backwards compatibility. Called once
+    at the engine entry points (``prefill`` / ``serve_step`` /
+    ``sp_decode_attention``) so no traced inner function ever consults
+    ``os.environ`` — the flags flow through the code as explicit
+    ``ModelConfig`` state and land in the fused decode kernel as static
+    parameters.
+    """
+    if cfg.gqa_shared_select is not None and cfg.int8_logits is not None:
+        return cfg
+    import os
+    shared = cfg.gqa_shared_select
+    int8l = cfg.int8_logits
+    if shared is None:
+        shared = os.environ.get("REPRO_GQA_SHARED_SELECT") == "1"
+    if int8l is None:
+        int8l = os.environ.get("REPRO_INT8_LOGITS") == "1"
+    return cfg.replace(gqa_shared_select=shared, int8_logits=int8l)
 
 
 # ---------------------------------------------------------------------------

@@ -92,45 +92,78 @@ def unpack_features(packed: jax.Array) -> jax.Array:
 # Comparison-free top-K (bucketized histogram / prefix-scan selector)
 # ---------------------------------------------------------------------------
 
-def comparison_free_topk(scores: jax.Array, k: int, n_buckets: int = 64,
-                         valid: jax.Array | None = None):
-    """Select the top-k indices of ``scores`` [M] without pairwise compares.
+# One bucket count shared by every selector instance: the oracle-side
+# `serving/lop_select.select_blocks` and the in-kernel selector of
+# `kernels/decode_attention` must bucketize identically to pick identical
+# candidate sets.
+DEFAULT_N_BUCKETS = 64
+
+
+def comparison_free_rank(s: jax.Array, k: int,
+                         n_buckets: int = DEFAULT_N_BUCKETS) -> jax.Array:
+    """Emission ranks of the bucketized selector: f32 [R, M] → int32 [R, M].
+
+    THE single implementation of the comparison-free selection order —
+    `comparison_free_topk` (jnp oracle side) and the fused decode kernel
+    (`kernels/decode_attention`, where this runs *inside* the Pallas body)
+    both derive from it, so they cannot drift apart. Scores of −inf (or
+    any non-finite) are invalid and never selected. Per row:
 
     1. bucketize scores into ``n_buckets`` linear ranges,
     2. histogram + high-to-low prefix scan → cut bin where cum-count ≥ k,
-    3. emit every index above the cut bin, then fill from the cut bin in
-       ascending index order (the ASIC's k-wide priority encoders), padded
-       to exactly k entries.
+    3. entries above the cut bin rank first in ascending index order, then
+       the cut bin fills the remainder (the ASIC's k-wide priority
+       encoders).
 
-    Returns (indices [k] int32, gate [k] bool).  With ``valid`` given,
-    invalid positions never get selected (masked to the bottom bucket).
+    ``rank < k`` ⇔ selected; everything else gets the sentinel M + k + 1.
+    Uses only broadcast-compare/cumsum vector ops so it stays valid inside
+    a kernel body (interpret-mode validated).
     """
-    m = scores.shape[-1]
-    s = scores.astype(jnp.float32)
-    if valid is not None:
-        s = jnp.where(valid, s, -jnp.inf)
+    m = s.shape[-1]
     finite = jnp.isfinite(s)
-    smin = jnp.min(jnp.where(finite, s, jnp.inf))
-    smax = jnp.max(jnp.where(finite, s, -jnp.inf))
+    smin = jnp.min(jnp.where(finite, s, jnp.inf), -1, keepdims=True)
+    smax = jnp.max(jnp.where(finite, s, -jnp.inf), -1, keepdims=True)
     span = jnp.maximum(smax - smin, 1e-9)
     bucket = jnp.clip(((s - smin) / span * n_buckets).astype(jnp.int32),
                       0, n_buckets - 1)
     bucket = jnp.where(finite, bucket, -1)          # invalid → below range
 
-    hist = jnp.zeros((n_buckets,), jnp.int32).at[bucket].add(
-        jnp.where(bucket >= 0, 1, 0))
-    # high-to-low cumulative count; cut = lowest bucket kept entirely-or-partially
-    cum_hi = jnp.cumsum(hist[::-1])[::-1]            # cum_hi[b] = #scores in [b, nb)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_buckets), 2)
+    hist = jnp.sum((bucket[:, :, None] == bins).astype(jnp.int32), axis=1)
+    # high-to-low cumulative count; cut = lowest bucket kept at all
+    cum_hi = jnp.cumsum(hist[:, ::-1], -1)[:, ::-1]  # [R, n_buckets]
     reach = cum_hi >= k
-    cut = jnp.where(jnp.any(reach), jnp.max(jnp.where(reach, jnp.arange(n_buckets), -1)), 0)
+    bin_ids = jax.lax.broadcasted_iota(jnp.int32, reach.shape, 1)
+    cut = jnp.where(jnp.any(reach, -1, keepdims=True),
+                    jnp.max(jnp.where(reach, bin_ids, -1), -1, keepdims=True),
+                    0)                               # [R, 1]
 
     above = bucket > cut
     at_cut = bucket == cut
-    n_above = jnp.sum(above.astype(jnp.int32))
-    # emission rank: 'above' entries first (index order), then cut-bin entries
-    rank_above = jnp.cumsum(above.astype(jnp.int32)) - 1
-    rank_cut = n_above + jnp.cumsum(at_cut.astype(jnp.int32)) - 1
-    rank = jnp.where(above, rank_above, jnp.where(at_cut, rank_cut, m + 1))
+    n_above = jnp.sum(above.astype(jnp.int32), -1, keepdims=True)
+    rank_above = jnp.cumsum(above.astype(jnp.int32), -1) - 1
+    rank_cut = n_above + jnp.cumsum(at_cut.astype(jnp.int32), -1) - 1
+    big = m + k + 1
+    rank = jnp.where(above, rank_above,
+                     jnp.where(at_cut, rank_cut, big))
+    return jnp.where(rank < k, rank, big).astype(jnp.int32)
+
+
+def comparison_free_topk(scores: jax.Array, k: int,
+                         n_buckets: int = DEFAULT_N_BUCKETS,
+                         valid: jax.Array | None = None):
+    """Select the top-k indices of ``scores`` [M] without pairwise compares.
+
+    Emission order comes from :func:`comparison_free_rank`; this wrapper
+    scatters the ranked indices into a dense [k] list. Returns
+    (indices [k] int32, gate [k] bool).  With ``valid`` given, invalid
+    positions never get selected.
+    """
+    m = scores.shape[-1]
+    s = scores.astype(jnp.float32)
+    if valid is not None:
+        s = jnp.where(valid, s, -jnp.inf)
+    rank = comparison_free_rank(s[None, :], k, n_buckets)[0]
     sel = rank < k
     out = jnp.zeros((k,), jnp.int32).at[jnp.where(sel, rank, k)].set(
         jnp.arange(m, dtype=jnp.int32), mode="drop")

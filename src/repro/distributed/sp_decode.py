@@ -6,121 +6,36 @@ is sharded across the ``model`` axis (SP), because GQA kv-head counts (8, 12,
 
 Per M-shard, each rank:
   1. writes the new token if it owns position ``lengths[b]``,
-  2. runs the LOP screen over its LOCAL 4-bit feature shard,
-  3. selects a local **quota** of ⌈K/nshards⌉ candidate blocks with the
-     comparison-free selector (beyond-paper adaptation: per-shard quotas
-     keep selection collective-free and perfectly load-balanced — every
-     rank gathers the same number of blocks, so no stragglers),
-  4. computes *unnormalized* softmax stats (m, ℓ, acc) over its candidates,
-  5. merges stats across shards flash-decoding style (pmax + psum).
+  2. runs the SAME fused decode kernel as the local path
+     (:func:`repro.kernels.ops.decode_attention`) over its local shard,
+     passing ``pos_offset = rank · M_local`` so validity masking and the
+     candidate live-intervals land on global token positions, and a local
+     **quota** of ⌈K/nshards⌉ candidate blocks (beyond-paper adaptation:
+     per-shard quotas keep selection collective-free and perfectly
+     load-balanced — every rank gathers the same number of blocks, so no
+     stragglers),
+  3. merges the kernel's *unnormalized* softmax stats (m, ℓ, out·ℓ) across
+     shards flash-decoding style (pmax + psum).
 
-Total candidates = nshards·⌈K/nshards⌉ ≈ K; recall vs the paper's global
-top-K is validated in tests/test_distributed.py.
+The screen → select → exact pipeline itself is not duplicated here — it
+lives once, inside the fused kernel / its jnp oracle (DESIGN.md
+§Fused-decode-kernel). Total candidates = nshards·⌈K/nshards⌉ ≈ K; recall
+vs the paper's global top-K is validated in tests/test_distributed.py.
 """
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.lop import pot
+from repro.configs.base import resolve_decode_flags
 from repro.core.qlinear import is_packed  # noqa: F401 (doc cross-ref)
 from repro.distributed.partitioning import current_mesh, dp_axes, shard_map
-from repro.serving.lop_select import (k_keep_blocks, select_blocks,
-                                      token_valid_mask)
-
-NEG_INF = -1e30
-
-
-def _screen_local(qi, feat):
-    """qi int8 [B,Hkv,G,dh]; feat uint8 [B,Hkv,M_loc,dh//2] → int32 scores."""
-    from repro.kernels import ops
-    return jax.vmap(jax.vmap(ops.lop_screen))(qi, feat)
-
-
-def _gather_blocks(arr, idx, block):
-    """arr [B,Hkv,M,...] , idx [B,Hkv,G,K] → [B,Hkv,G,K*block,...]."""
-    b, hkv, m = arr.shape[:3]
-    k = idx.shape[-1]
-    blocks = arr.reshape(b, hkv, m // block, block, *arr.shape[3:])
-
-    def per_bh(blocks_bh, idx_bh):                       # [NB,block,...],[G,K]
-        return blocks_bh[idx_bh]                         # [G,K,block,...]
-
-    out = jax.vmap(jax.vmap(per_bh))(blocks, idx)
-    return out.reshape(b, hkv, idx.shape[2], k * block, *arr.shape[3:])
-
-
-def _sparse_stats(cfg, qi, qsc, cl, idx, gate_tokens, block, g: int):
-    """Unnormalized softmax stats over the selected candidate blocks.
-
-    idx/gate_tokens have G'=G (per-q-head, paper-faithful) or G'=1
-    (group-shared selection — one gather per KV head).
-    → m [B,Hkv,G,1], l [B,Hkv,G,1], acc [B,Hkv,G,dh].
-    """
-    b, hkv, gsel, dh = (*idx.shape[:3], cl["k"].shape[-1])
-    k = idx.shape[-1]
-    sm = dh ** -0.5
-    k_sel = _gather_blocks(cl["k"], idx, block)          # [B,Hkv,G',K*bl,dh]
-    v_sel = _gather_blocks(cl["v"], idx, block)
-    ks_sel = _gather_blocks(cl["k_scale"], idx, block)   # [B,Hkv,G',K*bl]
-    vs_sel = _gather_blocks(cl["v_scale"], idx, block)
-
-    qg = qi.reshape(b, hkv, g, dh)
-    if gsel == 1:
-        s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_sel[:, :, 0],
-                       preferred_element_type=jnp.int32).astype(jnp.float32)
-        s = s * qsc.reshape(b, hkv, g, 1) * ks_sel[:, :, 0][:, :, None] * sm
-    else:
-        s = jnp.einsum("bhgd,bhgkd->bhgk", qg, k_sel,
-                       preferred_element_type=jnp.int32).astype(jnp.float32)
-        s = s * qsc.reshape(b, hkv, g, 1) * ks_sel * sm
-
-    gate = gate_tokens[..., :k] > 0                      # [B,Hkv,G',K]
-    end = gate_tokens[..., k:2 * k]
-    start = gate_tokens[..., 2 * k:]
-    t = jnp.arange(block)[None, None, None, None, :]
-    live = ((t >= start[..., None]) & (t < end[..., None])
-            & gate[..., None])                           # [B,Hkv,G',K,block]
-    live = live.reshape(b, hkv, gsel, k * block)   # broadcasts when G'=1
-    s = jnp.where(live, s, NEG_INF)
-
-    m = jnp.max(s, axis=-1, keepdims=True)
-    m_safe = jnp.maximum(m, -1e29)                       # all-masked shards
-    p = jnp.exp(s - m_safe)
-    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    vf = v_sel.astype(jnp.float32) * vs_sel[..., None]
-    if gsel == 1:
-        acc = jnp.einsum("bhgk,bhkd->bhgd", p, vf[:, :, 0])
-    else:
-        acc = jnp.einsum("bhgk,bhgkd->bhgd", p, vf)
-    return m, l, acc
-
-
-def _dense_stats(cfg, qi, qsc, cl, new_len, window, offset):
-    """No-LOP baseline: stats over the full local M shard."""
-    b, hkv, m, dh = cl["k"].shape
-    g = qi.shape[1] // hkv
-    sm = dh ** -0.5
-    qg = qi.reshape(b, hkv, g, dh)
-    s = jnp.einsum("bhgd,bhmd->bhgm", qg, cl["k"],
-                   preferred_element_type=jnp.int32).astype(jnp.float32)
-    s = s * qsc.reshape(b, hkv, g, 1) * cl["k_scale"][:, :, None, :] * sm
-    valid = token_valid_mask(m, new_len, window, pos_offset=offset)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    mx = jnp.max(s, axis=-1, keepdims=True)
-    m_safe = jnp.maximum(mx, -1e29)
-    p = jnp.exp(s - m_safe)
-    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    vf = cl["v"].astype(jnp.float32) * cl["v_scale"][..., None]
-    acc = jnp.einsum("bhgm,bhmd->bhgd", p, vf)
-    return mx, l, acc
+from repro.kernels import ops
+from repro.serving.lop_select import k_keep_blocks
 
 
 def _write_token_local(cl, ki, vi, ksc, vsc, feat, lengths, offset, m_loc,
@@ -164,10 +79,10 @@ def sp_decode_attention(cfg, qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths, *,
     """
     mesh = current_mesh()
     assert mesh is not None, "sp decode requires an active mesh"
+    cfg = resolve_decode_flags(cfg)
     b, h, dh = qi.shape
     if active is None:
         active = jnp.ones((b,), jnp.bool_)
-    hkv = cl["k"].shape[1]
     m_global = cl["k"].shape[2]
     nshards = math.prod(int(mesh.shape[a]) for a in sp_axes)
     m_loc = m_global // nshards
@@ -202,28 +117,22 @@ def sp_decode_attention(cfg, qi, qsc, ki, vi, ksc, vsc, feat, cl, lengths, *,
         # retired lanes see an empty cache (nothing valid to screen/select)
         new_len = jnp.where(act, new_len, 0)
 
-        if use_lop:
-            import os
-            qg = qi.reshape(qi.shape[0], hkv, h // hkv, dh)
-            scores = _screen_local(qg, cl["feat"])
-            if os.environ.get("REPRO_GQA_SHARED_SELECT") == "1":
-                scores = jnp.max(scores, axis=2, keepdims=True)
-            idx, gate_tokens = select_blocks(
-                scores, new_len, block=block, k_keep=k_keep, window=window,
-                block_offset=offset // block)
-            m, l, acc = _sparse_stats(cfg, qi, qsc, cl, idx, gate_tokens,
-                                      block, g=h // hkv)
-        else:
-            m, l, acc = _dense_stats(cfg, qi, qsc, cl, new_len, window,
-                                     offset)
+        # the same fused kernel as the local path, shifted to this shard's
+        # global positions; stats come back unnormalized for the merge
+        out, m, l = ops.decode_attention(
+            qi, qsc, cl["k"], cl["v"], cl["k_scale"], cl["v_scale"],
+            cl["feat"], new_len, block=block, k_keep=k_keep, window=window,
+            use_lop=use_lop, shared_select=bool(cfg.gqa_shared_select),
+            pos_offset=offset, return_stats=True)
 
-        # flash-decoding merge across M shards
+        # flash-decoding merge across M shards (out·ℓ recovers the raw
+        # accumulator; empty shards carry m = −inf, ℓ = 0)
         m_g = jax.lax.pmax(m, sp_axes)
         w = jnp.exp(m - m_g)
         l_g = jax.lax.psum(l * w, sp_axes)
-        acc_g = jax.lax.psum(acc * w, sp_axes)
+        acc_g = jax.lax.psum(out * (l * w), sp_axes)
         out = acc_g / jnp.maximum(l_g, 1e-20)
-        return out.reshape(qi.shape[0], h, dh), cl
+        return out, cl
 
     new_tok_spec2 = P(batch_ax, None, None)
     in_specs = (new_tok_spec2, new_tok_spec2, new_tok_spec2, new_tok_spec2,

@@ -1,8 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-  * ``ternary_matmul``  — TINT core: packed-2bit ternary × int8 GEMM
-  * ``lop_scores``      — LOP screen over the packed 4-bit feature cache
-  * ``int8_attention``  — int8 flash prefill + LOP block-sparse decode
+  * ``ternary_matmul``    — TINT core: packed-2bit ternary × int8 GEMM
+  * ``lop_scores``        — LOP screen over the packed 4-bit feature cache
+  * ``int8_attention``    — int8 flash prefill + the single-kv-head
+                            block-sparse decode micro-kernel
+  * ``decode_attention``  — THE serving decode path: one fused batched
+                            kernel (screen → comparison-free top-K →
+                            DMA-gathered exact attention) whose grid spans
+                            every (batch, kv-head) lane in one launch
 
 ``ops`` exposes the jit'd public wrappers (pallas/ref dispatch, padding);
 ``ref`` holds the pure-jnp oracles used by the allclose tests and traced by
@@ -10,5 +15,5 @@ the full-size dry-run.
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import (flash_prefill, lop_screen, sparse_decode,
-                               ternary_matmul)
+from repro.kernels.ops import (decode_attention, flash_prefill, lop_screen,
+                               sparse_decode, ternary_matmul)

@@ -1,0 +1,413 @@
+"""Fused batched decode attention — one Pallas kernel for the whole step.
+
+This is the decode hot path of the paper (§III) as ONE ``pallas_call``
+whose grid spans (batch × kv-head) with a sequential streaming axis,
+replacing the previous per-head small-kernel dispatch (``lop_screen`` +
+jnp block top-K + ``sparse_decode`` under a triple ``vmap``) that TeLLMe
+v2 / HSA-style analyses identify as the utilization killer on edge
+accelerators (PAPERS.md). Per (b, kv-head) lane the streaming axis runs
+three fused phases back to back (DESIGN.md §Fused-decode-kernel):
+
+  screen   steps ``j < NB`` stream the packed 4-bit (sgn‖LO) feature
+           cache block by block: nibbles expand to pot-int8 in VMEM, one
+           int8 MXU dot yields surrogate scores, invalid tokens mask to
+           INT32_MIN, and the per-block maxima land in VMEM scratch
+           (fully-masked blocks score −inf so they can never be picked).
+  select   at step ``j == NB`` the comparison-free bucketized top-K
+           (the ASIC's histogram + prefix-scan selector, mirroring
+           :func:`repro.core.lop.comparison_free_topk` op for op) turns
+           the block scores into an emission *rank* per block — no
+           comparator tree, no sort.
+  exact    steps ``j ≥ NB`` walk the K selected candidates in rank
+           order. Each step resolves its block id from the rank scratch
+           and DMAs ONLY that int8 K/V block (plus scales) from HBM into
+           a double-buffered VMEM slot — candidate c+1's fetch starts
+           *before* candidate c's wait-and-compute, so the HBM latency
+           hides behind MXU work (the paper's head-level pipelining) —
+           then folds it into f32 online-softmax state (m/ℓ/acc scratch,
+           output-stationary like the paper's OS dataflow). Un-selected
+           blocks are never fetched — the LOP traffic win survives
+           fusion.
+
+The final step normalizes with an ``ℓ > 0`` guard, so a lane with
+``new_len == 0`` (a retired slot-pool lane) emits exactly zero.
+
+Scalar-prefetch contract
+------------------------
+``new_len`` int32 [B] (per-lane valid length, 0 = retired lane) and
+``pos_offset`` int32 [1] (global token position of this cache shard —
+the SP quota-sharded path passes ``rank · M_local``) ride in SMEM ahead
+of the grid. They drive validity masking, the in-block live interval
+[start, end) of each candidate, and nothing else — all tensor operands
+are addressed by the grid alone, which is what lets one compiled kernel
+serve every lane population and every SP shard.
+
+Modes (all static):
+
+  * ``use_lop=False``  — dense baseline: the same grid streams every
+    K/V block through the online-softmax phase (no screen, no DMA).
+  * ``shared_select``  — one candidate set per kv head (group max of
+    the surrogate scores) instead of per q-head: K DMA gathers instead
+    of G·K.
+  * ``return_stats``   — also emit the raw (m, ℓ) softmax stats so the
+    SP path can merge shards flash-decoding style without recomputing.
+
+Validated in interpret mode (the container's mandated mode); the
+selection phase uses flat vector ops that Mosaic would want reshaped to
+(sublane, lane) tiles — noted inline where it matters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lop import DEFAULT_N_BUCKETS, comparison_free_rank, pot
+from repro.kernels.lop_scores import _nibbles_to_pot
+
+NEG_INF = -1e30
+INT32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Shared online-softmax update
+# ---------------------------------------------------------------------------
+
+def _online_update(s, v_deq, rows, m_ref, l_ref, acc_ref):
+    """Fold one [R, block] logit tile into the [rows] slice of the state."""
+    m_prev = m_ref[rows, :]
+    l_prev = l_ref[rows, :]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, :1])
+    l_ref[rows, :] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[rows, :] = acc_ref[rows, :] * alpha[:, :1] + jnp.dot(
+        p, v_deq, preferred_element_type=jnp.float32)
+    m_ref[rows, :] = m_new
+
+
+def _flush(o_ref, m_out, l_out, m_ref, l_ref, acc_ref, return_stats):
+    l = l_ref[:, :1]
+    o_ref[0] = acc_ref[...] / jnp.where(l > 0, l, 1.0)
+    if return_stats:
+        m_out[0] = m_ref[:, :1]
+        l_out[0] = l
+
+
+# ---------------------------------------------------------------------------
+# Fused LOP kernel body
+# ---------------------------------------------------------------------------
+
+def _fused_lop_kernel(nl_ref, po_ref, qi_ref, qs_ref, feat_ref,
+                      k_hbm, v_hbm, ks_hbm, vs_hbm,
+                      o_ref, *rest, nb, g, hkv, block, k_keep, window,
+                      softmax_scale, n_buckets, shared_select, return_stats):
+    """Grid (b·hkv, NB + n_cand): screen → select → DMA'd exact attention."""
+    if return_stats:
+        m_out, l_out = rest[0], rest[1]
+        rest = rest[2:]
+    else:
+        m_out = l_out = None
+    (blk_ref, rank_ref, m_ref, l_ref, acc_ref,
+     kb_ref, vb_ref, ksb_ref, vsb_ref, sem) = rest
+
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    nl = nl_ref[bh // hkv]
+    po = po_ref[0]
+    n_cand = k_keep if shared_select else g * k_keep
+
+    @pl.when(j == 0)
+    def _init():
+        blk_ref[...] = jnp.full_like(blk_ref, -jnp.inf)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- screen: surrogate block scores from the packed feature cache ----
+    @pl.when(j < nb)
+    def _screen():
+        qp = pot(qi_ref[0])                              # [G, d] int8
+        kp = _nibbles_to_pot(feat_ref[0], qp.shape[-1])  # [block, d] int8
+        s = jax.lax.dot_general(
+            qp, kp, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)            # [G, block]
+        tpos = po + j * block + jax.lax.broadcasted_iota(jnp.int32,
+                                                         s.shape, 1)
+        tvalid = tpos < nl
+        if window:
+            tvalid &= tpos >= nl - window
+        s = jnp.where(tvalid, s, INT32_MIN)
+        if shared_select:
+            s = jnp.max(s, axis=0, keepdims=True)        # [1, block]
+        score = jnp.max(s, -1, keepdims=True).astype(jnp.float32)
+        # a block with no valid token must never be selectable
+        any_valid = jnp.any(tvalid[:1])
+        blk_ref[:, pl.ds(j, 1)] = jnp.where(any_valid, score, -jnp.inf)
+
+    # ---- select: comparison-free top-K → emission ranks (once). The rank
+    # computation is THE shared implementation from core.lop (also behind
+    # the jnp oracle's comparison_free_topk), running here inside the
+    # kernel body — kernel and oracle cannot drift apart. ----
+    @pl.when(j == nb)
+    def _select():
+        rank_ref[...] = comparison_free_rank(blk_ref[...], k_keep,
+                                             n_buckets)
+
+    # ---- exact: double-buffered candidate DMA + online softmax ----
+    # Candidate c's K/V/scale blocks are fetched into slot c % 2; the copy
+    # for c+1 starts BEFORE the wait-and-compute of c, so the HBM fetch of
+    # the next candidate hides behind the MXU work of the current one —
+    # the head-level pipelining the paper overlaps in silicon.
+    def _resolve(c):
+        """Candidate number → (gated?, selected block id)."""
+        if shared_select:
+            rank_row = rank_ref[0:1, :]
+            kc = c
+        else:
+            rank_row = rank_ref[pl.ds(c // k_keep, 1), :]
+            kc = c % k_keep
+        cols = jax.lax.broadcasted_iota(jnp.int32, rank_row.shape, 1)
+        hit = rank_row == kc
+        return jnp.any(hit), jnp.min(jnp.where(hit, cols, nb))
+
+    def _copies(slot, idx):
+        start = idx * block
+        return [
+            pltpu.make_async_copy(k_hbm.at[bh, pl.ds(start, block), :],
+                                  kb_ref.at[slot], sem.at[slot, 0]),
+            pltpu.make_async_copy(v_hbm.at[bh, pl.ds(start, block), :],
+                                  vb_ref.at[slot], sem.at[slot, 1]),
+            pltpu.make_async_copy(ks_hbm.at[bh, pl.ds(start, block), :],
+                                  ksb_ref.at[slot], sem.at[slot, 2]),
+            pltpu.make_async_copy(vs_hbm.at[bh, pl.ds(start, block), :],
+                                  vsb_ref.at[slot], sem.at[slot, 3]),
+        ]
+
+    @pl.when(j >= nb)
+    def _cand():
+        c = j - nb
+        slot = jax.lax.rem(c, 2)
+        gate, idx = _resolve(c)
+
+        @pl.when((c == 0) & gate)
+        def _warmup():
+            for cp in _copies(slot, idx):
+                cp.start()
+
+        if n_cand > 1:
+            @pl.when(c + 1 < n_cand)
+            def _prefetch_next():
+                gate_n, idx_n = _resolve(c + 1)
+
+                @pl.when(gate_n)
+                def _():
+                    for cp in _copies(jax.lax.rem(c + 1, 2), idx_n):
+                        cp.start()
+
+        @pl.when(gate)
+        def _attend():
+            for cp in _copies(slot, idx):
+                cp.wait()
+            kb = kb_ref[pl.ds(slot, 1)][0]               # [block, d]
+            ksb = ksb_ref[pl.ds(slot, 1)][0]             # [block, 1]
+
+            if shared_select:
+                rows = slice(None)
+                q = qi_ref[0]                            # [G, d]
+                qs = qs_ref[0]                           # [G, 1]
+            else:
+                rows = pl.ds(c // k_keep, 1)
+                q = qi_ref[0, rows, :]                   # [1, d]
+                qs = qs_ref[0, rows, :]
+            s = jax.lax.dot_general(
+                q, kb, dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32).astype(jnp.float32)
+            s = s * qs * ksb.reshape(1, block) * softmax_scale
+            # in-block live interval [start, end): suffix cut by the cache
+            # length, prefix cut by the SWA window
+            blk_start = po + idx * block
+            end = jnp.clip(nl - blk_start, 0, block)
+            tstart = jnp.clip(nl - window - blk_start, 0, block) if window \
+                else 0
+            t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where((t >= tstart) & (t < end), s, NEG_INF)
+            v_deq = (vb_ref[pl.ds(slot, 1)][0].astype(jnp.float32)
+                     * vsb_ref[pl.ds(slot, 1)][0])
+            _online_update(s, v_deq, rows, m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nb + n_cand - 1)
+    def _finish():
+        _flush(o_ref, m_out, l_out, m_ref, l_ref, acc_ref, return_stats)
+
+
+# ---------------------------------------------------------------------------
+# Fused dense kernel body (no-LOP baseline on the same grid layout)
+# ---------------------------------------------------------------------------
+
+def _fused_dense_kernel(nl_ref, po_ref, qi_ref, qs_ref, k_ref, v_ref,
+                        ks_ref, vs_ref, o_ref, *rest, nb, hkv, block,
+                        window, softmax_scale, return_stats):
+    """Grid (b·hkv, NB): exact attention streamed over every K/V block."""
+    if return_stats:
+        m_out, l_out = rest[0], rest[1]
+        rest = rest[2:]
+    else:
+        m_out = l_out = None
+    m_ref, l_ref, acc_ref = rest
+
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    nl = nl_ref[bh // hkv]
+    po = po_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tpos0 = po + j * block + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (1, block), 1)
+    tvalid0 = tpos0 < nl
+    if window:
+        tvalid0 &= tpos0 >= nl - window
+
+    @pl.when(jnp.any(tvalid0))
+    def _tile():
+        s = jax.lax.dot_general(
+            qi_ref[0], k_ref[0], dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        s = s * qs_ref[0] * ks_ref[0].reshape(1, block) * softmax_scale
+        s = jnp.where(tvalid0, s, NEG_INF)
+        v_deq = v_ref[0].astype(jnp.float32) * vs_ref[0]
+        _online_update(s, v_deq, slice(None), m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        _flush(o_ref, m_out, l_out, m_ref, l_ref, acc_ref, return_stats)
+
+
+# ---------------------------------------------------------------------------
+# Entry
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "hkv", "block", "k_keep", "window", "softmax_scale", "use_lop",
+    "shared_select", "return_stats", "n_buckets", "interpret"))
+def fused_decode_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale,
+                           feat, new_len, pos_off, *, hkv: int, block: int,
+                           k_keep: int, window: int, softmax_scale: float,
+                           use_lop: bool = True, shared_select: bool = False,
+                           return_stats: bool = False,
+                           n_buckets: int = DEFAULT_N_BUCKETS,
+                           interpret: bool = False):
+    """One fused decode-attention step over every (batch, kv-head) lane.
+
+    qi        int8   [BH, G, d]    new-token queries (BH = B·Hkv, grouped)
+    qsc       f32    [BH, G, 1]    per-head absmax query scales
+    k/v_cache int8   [BH, M, d]    exact caches (HBM-resident; only the
+                                   selected candidate blocks are fetched)
+    k/v_scale f32    [BH, M, 1]    per-token absmax scales
+    feat      uint8  [BH, M, d/2]  packed (sgn‖LO) feature cache
+    new_len   int32  [B]           valid tokens per lane (0 = retired slot)
+    pos_off   int32  [1]           global position of cache row 0 (SP shard)
+    → f32 [BH, G, d]; with ``return_stats`` also (m, ℓ) f32 [BH, G, 1].
+    """
+    bhg, g, d = qi.shape
+    m = k_cache.shape[1]
+    assert m % block == 0, (m, block)
+    nb = m // block
+    nbp = _round_up(nb, 128)                 # lane-padded score scratch
+    g_sel = 1 if shared_select else g
+
+    outs = [jax.ShapeDtypeStruct((bhg, g, d), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, g, d), lambda bh, j, nl, po: (bh, 0, 0))]
+    if return_stats:
+        outs += [jax.ShapeDtypeStruct((bhg, g, 1), jnp.float32)] * 2
+        out_specs += [pl.BlockSpec((1, g, 1),
+                                   lambda bh, j, nl, po: (bh, 0, 0))] * 2
+
+    if not use_lop:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(bhg, nb),
+            in_specs=[
+                pl.BlockSpec((1, g, d), lambda bh, j, nl, po: (bh, 0, 0)),
+                pl.BlockSpec((1, g, 1), lambda bh, j, nl, po: (bh, 0, 0)),
+                pl.BlockSpec((1, block, d),
+                             lambda bh, j, nl, po: (bh, j, 0)),
+                pl.BlockSpec((1, block, d),
+                             lambda bh, j, nl, po: (bh, j, 0)),
+                pl.BlockSpec((1, block, 1),
+                             lambda bh, j, nl, po: (bh, j, 0)),
+                pl.BlockSpec((1, block, 1),
+                             lambda bh, j, nl, po: (bh, j, 0)),
+            ],
+            out_specs=out_specs if return_stats else out_specs[0],
+            scratch_shapes=[
+                pltpu.VMEM((g, 128), jnp.float32),
+                pltpu.VMEM((g, 128), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        )
+        out = pl.pallas_call(
+            functools.partial(_fused_dense_kernel, nb=nb, hkv=hkv,
+                              block=block, window=window,
+                              softmax_scale=softmax_scale,
+                              return_stats=return_stats),
+            grid_spec=grid_spec,
+            out_shape=outs if return_stats else outs[0],
+            interpret=interpret,
+        )(new_len, pos_off, qi, qsc, k_cache, v_cache, k_scale, v_scale)
+        return out
+
+    n_cand = k_keep * (1 if shared_select else g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bhg, nb + n_cand),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, j, nl, po: (bh, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda bh, j, nl, po: (bh, 0, 0)),
+            # feature stream (clamped once the candidate phase starts)
+            pl.BlockSpec((1, block, d // 2),
+                         lambda bh, j, nl, po: (bh, jnp.minimum(j, nb - 1),
+                                                0)),
+            # exact caches stay in HBM; candidates are DMA'd by block id
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=out_specs if return_stats else out_specs[0],
+        scratch_shapes=[
+            pltpu.VMEM((g_sel, nbp), jnp.float32),   # block scores
+            pltpu.VMEM((g_sel, nbp), jnp.int32),     # emission ranks
+            pltpu.VMEM((g, 128), jnp.float32),       # running max
+            pltpu.VMEM((g, 128), jnp.float32),       # running sum-exp
+            pltpu.VMEM((g, d), jnp.float32),         # output accumulator
+            pltpu.VMEM((2, block, d), jnp.int8),     # K blocks (2 slots)
+            pltpu.VMEM((2, block, d), jnp.int8),     # V blocks (2 slots)
+            pltpu.VMEM((2, block, 1), jnp.float32),  # K scales (2 slots)
+            pltpu.VMEM((2, block, 1), jnp.float32),  # V scales (2 slots)
+            pltpu.SemaphoreType.DMA((2, 4)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_lop_kernel, nb=nb, g=g, hkv=hkv,
+                          block=block, k_keep=k_keep, window=window,
+                          softmax_scale=softmax_scale, n_buckets=n_buckets,
+                          shared_select=shared_select,
+                          return_stats=return_stats),
+        grid_spec=grid_spec,
+        out_shape=outs if return_stats else outs[0],
+        interpret=interpret,
+    )(new_len, pos_off, qi, qsc, feat, k_cache, v_cache, k_scale, v_scale)

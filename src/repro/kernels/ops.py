@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.lop import pot
 from repro.core.ternary import TernaryWeight
+from repro.kernels import decode_attention as _dec
 from repro.kernels import int8_attention as _attn
 from repro.kernels import lop_scores as _lop
 from repro.kernels import ref as _ref
@@ -138,7 +139,12 @@ def flash_prefill(q, k, v, q_scale, k_scale, v_scale, *,
 def sparse_decode(q, k_cache, v_cache, q_scale, k_scale, v_scale,
                   block_idx, gate_tokens, *, block: int,
                   softmax_scale: float, impl: str = "auto") -> jax.Array:
-    """Single-kv-head LOP-sparse decode; see kernel docstring for shapes."""
+    """Single-kv-head LOP-sparse decode micro-kernel.
+
+    Kept as a standalone building block (microbenchmarks, kernel tests,
+    the legacy-dispatch baseline in benchmarks/fig8_lop.py); the serving
+    decode path dispatches through :func:`decode_attention` instead.
+    """
     if _resolve(impl) == "ref":
         return _ref.sparse_decode_attention_ref(
             q, k_cache, v_cache, q_scale, k_scale, v_scale, block_idx,
@@ -147,3 +153,80 @@ def sparse_decode(q, k_cache, v_cache, q_scale, k_scale, v_scale,
         q, k_cache, v_cache, q_scale, k_scale, v_scale, block_idx,
         gate_tokens, block=block, softmax_scale=softmax_scale,
         interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Fused batched decode attention — THE decode entry point
+# ---------------------------------------------------------------------------
+
+def decode_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale, feat,
+                     new_len, *, block: int, k_keep: int, window: int = 0,
+                     softmax_scale: float | None = None,
+                     use_lop: bool = True, shared_select: bool = False,
+                     pos_offset=None, return_stats: bool = False,
+                     impl: str = "auto"):
+    """Single entry for every decode-attention flavour (DESIGN.md
+    §Fused-decode-kernel).
+
+    Serves the dense baseline (``use_lop=False``), the LOP-sparse path,
+    group-shared selection (``shared_select``) and the SP-sharded path
+    (``pos_offset`` + ``return_stats``) from one call:
+
+    qi        int8  [B, H, dh]     new-token queries
+    qsc       f32   [B, H, 1]      per-head absmax query scales
+    k/v_cache int8  [B, Hkv, M, dh]
+    k/v_scale f32   [B, Hkv, M]
+    feat      uint8 [B, Hkv, M, dh//2]  packed (sgn‖LO) feature cache
+    new_len   int32 [B]            valid tokens per lane; 0 = retired
+                                   slot-pool lane (emits exactly zero)
+    pos_offset     traced int32 scalar or None — global token position of
+                   cache row 0 (the SP quota-sharded path passes its
+                   shard offset; must be a multiple of ``block``)
+    return_stats   also return the unnormalized softmax stats (m, ℓ)
+                   f32 [B, H, 1] for the flash-decoding shard merge
+
+    → f32 [B, H, dh]  (or ``(out, m, ℓ)`` with ``return_stats``).
+
+    ``impl="pallas"`` runs the fused kernel
+    (:mod:`repro.kernels.decode_attention`): one ``pallas_call`` whose
+    grid spans (B·Hkv, stream) — screen, comparison-free top-K, and
+    DMA-gathered exact attention in a single launch. ``impl="ref"`` runs
+    the jnp oracle, which XLA fuses well enough for the dry-run traces.
+    """
+    b, h, dh = qi.shape
+    hkv, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    assert h == g * hkv, (h, hkv)
+    assert m % block == 0, (m, block)
+    if softmax_scale is None:
+        softmax_scale = dh ** -0.5
+
+    if _resolve(impl) == "ref":
+        return _ref.decode_attention_ref(
+            qi, qsc, k_cache, v_cache, k_scale, v_scale, feat, new_len,
+            block=block, k_keep=k_keep, window=window,
+            softmax_scale=softmax_scale, use_lop=use_lop,
+            shared_select=shared_select, pos_offset=pos_offset,
+            return_stats=return_stats)
+
+    # flatten (B, Hkv) → the kernel's batched lane axis
+    bh = b * hkv
+    qig = qi.reshape(b, hkv, g, dh).reshape(bh, g, dh)
+    qsg = qsc.reshape(b, hkv, g, 1).reshape(bh, g, 1)
+    kf = k_cache.reshape(bh, m, dh)
+    vf = v_cache.reshape(bh, m, dh)
+    ksf = k_scale.reshape(bh, m, 1)
+    vsf = v_scale.reshape(bh, m, 1)
+    featf = feat.reshape(bh, m, dh // 2)
+    po = jnp.full((1,), 0 if pos_offset is None else pos_offset, jnp.int32)
+    out = _dec.fused_decode_attention(
+        qig, qsg, kf, vf, ksf, vsf, featf, new_len.astype(jnp.int32), po,
+        hkv=hkv, block=block, k_keep=k_keep, window=window,
+        softmax_scale=softmax_scale, use_lop=use_lop,
+        shared_select=shared_select, return_stats=return_stats,
+        interpret=_interpret())
+    if return_stats:
+        o, ms, ls = out
+        return (o.reshape(b, h, dh), ms.reshape(b, h, 1),
+                ls.reshape(b, h, 1))
+    return out.reshape(b, h, dh)

@@ -9,6 +9,7 @@ from repro.core.lop import features_to_pot, pot, unpack_features
 from repro.core.ternary import unpack_ternary
 
 NEG_INF = -1e30
+INT32_MIN = jnp.iinfo(jnp.int32).min
 
 
 def ternary_matmul_ref(x: jax.Array, packed: jax.Array,
@@ -81,3 +82,112 @@ def sparse_decode_attention_ref(q, k_cache, v_cache, q_scale, k_scale,
     logits = jnp.where(valid[None, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     return jnp.dot(p, v_sel.astype(jnp.float32) * vs_sel)
+
+
+# ---------------------------------------------------------------------------
+# Fused batched decode attention (oracle for kernels/decode_attention.py)
+# ---------------------------------------------------------------------------
+
+def _gather_blocks(arr, idx, block):
+    """arr [B,Hkv,M,...] , idx [B,Hkv,G',K] → [B,Hkv,G',K·block,...]."""
+    b, hkv, m = arr.shape[:3]
+    k = idx.shape[-1]
+    blocks = arr.reshape(b, hkv, m // block, block, *arr.shape[3:])
+
+    def per_bh(blocks_bh, idx_bh):                       # [NB,block,...],[G,K]
+        return blocks_bh[idx_bh]                         # [G,K,block,...]
+
+    out = jax.vmap(jax.vmap(per_bh))(blocks, idx)
+    return out.reshape(b, hkv, idx.shape[2], k * block, *arr.shape[3:])
+
+
+def _stats_to_out(m, l, acc, b, h, dh, return_stats):
+    out = (acc / jnp.where(l > 0, l, 1.0)).reshape(b, h, dh)
+    if return_stats:
+        return out, m.reshape(b, h, 1), l.reshape(b, h, 1)
+    return out
+
+
+def decode_attention_ref(qi, qsc, k_cache, v_cache, k_scale, v_scale, feat,
+                         new_len, *, block: int, k_keep: int, window: int,
+                         softmax_scale: float, use_lop: bool = True,
+                         shared_select: bool = False, pos_offset=None,
+                         return_stats: bool = False):
+    """Batched decode-attention oracle (screen → select → exact, or dense).
+
+    qi int8 [B,H,dh]; qsc f32 [B,H,1]; caches int8/f32 [B,Hkv,M,...];
+    feat uint8 [B,Hkv,M,dh//2]; new_len int32 [B] (0 = retired lane —
+    those rows emit exactly zero); ``pos_offset`` maps cache row 0 to a
+    global token position (SP shards; must be block-aligned).
+    → f32 [B,H,dh]; with ``return_stats`` also the unnormalized softmax
+    (m, ℓ) f32 [B,H,1] for the flash-decoding shard merge.
+    """
+    from repro.serving.lop_select import select_blocks, token_valid_mask
+
+    b, h, dh = qi.shape
+    hkv, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    po = 0 if pos_offset is None else pos_offset
+    qg = qi.reshape(b, hkv, g, dh)
+    qs = qsc.reshape(b, hkv, g, 1)
+
+    if not use_lop:
+        s = jnp.einsum("bhgd,bhmd->bhgm", qg, k_cache,
+                       preferred_element_type=jnp.int32).astype(jnp.float32)
+        s = s * qs * k_scale[:, :, None, :] * softmax_scale
+        valid = token_valid_mask(m, new_len, window, pos_offset=po)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        mx = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jnp.maximum(mx, -1e29))
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        vf = v_cache.astype(jnp.float32) * v_scale[..., None]
+        acc = jnp.einsum("bhgm,bhmd->bhgd", p, vf)
+        return _stats_to_out(mx, l, acc, b, h, dh, return_stats)
+
+    # 1./2. screen over the packed feature cache + comparison-free top-K
+    kp = features_to_pot(unpack_features(feat))          # [B,Hkv,M,dh] int8
+    scores = jnp.einsum("bhgd,bhmd->bhgm", pot(qg), kp,
+                        preferred_element_type=jnp.int32)
+    if shared_select:
+        scores = jnp.max(scores, axis=2, keepdims=True)  # [B,Hkv,1,M]
+    idx, gate_tokens = select_blocks(scores, new_len, block=block,
+                                     k_keep=k_keep, window=window,
+                                     block_offset=po // block)
+
+    # 3./4. gather the candidate blocks + exact masked attention stats
+    gsel = idx.shape[2]
+    k_sel = _gather_blocks(k_cache, idx, block)          # [B,Hkv,G',K·bl,dh]
+    v_sel = _gather_blocks(v_cache, idx, block)
+    ks_sel = _gather_blocks(k_scale, idx, block)         # [B,Hkv,G',K·bl]
+    vs_sel = _gather_blocks(v_scale, idx, block)
+
+    if gsel == 1:
+        s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_sel[:, :, 0],
+                       preferred_element_type=jnp.int32).astype(jnp.float32)
+        s = s * qs * ks_sel[:, :, 0][:, :, None] * softmax_scale
+    else:
+        s = jnp.einsum("bhgd,bhgkd->bhgk", qg, k_sel,
+                       preferred_element_type=jnp.int32).astype(jnp.float32)
+        s = s * qs * ks_sel * softmax_scale
+
+    kk = idx.shape[-1]
+    gate = gate_tokens[..., :kk] > 0                     # [B,Hkv,G',K]
+    end = gate_tokens[..., kk:2 * kk]
+    start = gate_tokens[..., 2 * kk:]
+    t = jnp.arange(block)[None, None, None, None, :]
+    live = ((t >= start[..., None]) & (t < end[..., None])
+            & gate[..., None])                           # [B,Hkv,G',K,block]
+    live = live.reshape(b, hkv, gsel, kk * block)        # broadcasts G'=1
+    s = jnp.where(live, s, NEG_INF)
+
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.maximum(mx, -1e29))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    vf = v_sel.astype(jnp.float32) * vs_sel[..., None]
+    if gsel == 1:
+        acc = jnp.einsum("bhgk,bhkd->bhgd", p, vf[:, :, 0])
+    else:
+        acc = jnp.einsum("bhgk,bhgkd->bhgd", p, vf)
+    return _stats_to_out(mx, l, acc, b, h, dh, return_stats)

@@ -4,15 +4,25 @@ This is the paper's full pipeline on TPU terms (DESIGN.md §2):
 
   prefill   — BitLinear projections (TINT) → rope → absmax barrier → int8
               flash attention; K/V/LOP-feature cache written per layer.
-  decode    — one token: project/rope/quantize, append to cache, **LOP
-              screen** over the 4-bit feature cache, comparison-free block
-              top-K, exact int8 attention confined to the K candidate
-              blocks, BitLinear FFN/MoE.
+  decode    — one token: project/rope/quantize, append to cache, then ONE
+              fused attention dispatch (:func:`repro.kernels.ops.
+              decode_attention`): the LOP screen over the 4-bit feature
+              cache, the comparison-free block top-K, and exact int8
+              attention over the K candidate blocks run as a single
+              batched head-pipelined kernel spanning every (batch,
+              kv-head) lane — then BitLinear FFN/MoE.
 
 Attention-free layers (Mamba/RWKV) carry recurrent state instead. With an
 active mesh the decode attention runs the SP quota-sharded core
 (:mod:`repro.distributed.sp_decode`) — the cache's token axis lives sharded
-across the model axis and softmax stats merge flash-decoding style.
+across the model axis; each shard calls the same fused kernel with its
+``pos_offset`` and softmax stats merge flash-decoding style.
+
+Beyond-paper decode variants (group-shared selection, integer-domain
+prefill logits) are ``ModelConfig`` fields pinned once per entry call by
+:func:`repro.configs.base.resolve_decode_flags`; the legacy
+``REPRO_GQA_SHARED_SELECT`` / ``REPRO_INT8_LOGITS`` env flags remain as
+fallbacks for unset fields.
 
 Slot-paged decode: when the cache carries a per-lane ``active`` mask (a
 :func:`repro.serving.cache.init_cache_pool` pool), ``serve_step`` decodes
@@ -29,6 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import resolve_decode_flags
 from repro.core.lop import lop_features, pack_features
 from repro.core.qlinear import qlinear
 from repro.core.quantization import quantize
@@ -40,8 +51,7 @@ from repro.models.layers import (embedding_apply, head_apply, norm_apply,
 from repro.models.mamba import mamba_decode_step, mamba_forward
 from repro.models.moe import ffn_apply, moe_apply
 from repro.serving.cache import init_cache, round_up
-from repro.serving.lop_select import (k_keep_blocks, select_blocks,
-                                      token_valid_mask)
+from repro.serving.lop_select import k_keep_blocks
 
 NEG_INF = -1e30
 
@@ -76,12 +86,18 @@ def _shard_batch(x, *rest):
 def int8_chunked_attention(qi, ki, vi, qs, ks, vs, *, causal: bool,
                            window: int = 0, q_offset=0, kv_len=None,
                            chunk: int = 256,
-                           softmax_scale: float | None = None):
+                           softmax_scale: float | None = None,
+                           int8_logits: bool = False):
     """GQA int8 attention, streamed over query chunks.
 
     qi int8 [B, H, Sq, dh]; ki/vi int8 [B, Hkv, Skv, dh];
     qs f32 [B, H, Sq]; ks/vs f32 [B, Hkv, Skv]; kv_len int32 [B] or None.
     → f32 [B, H, Sq, dh]. Sq is padded to the chunk size internally.
+
+    ``int8_logits`` keeps the QKᵀ einsum in the integer domain
+    (int8×int8→int32, BoothFlex-faithful; 2× MXU throughput on TPU) —
+    an explicit parameter resolved from ``cfg.int8_logits`` at the engine
+    entry, not an env read inside the traced function.
 
     K/V are repeated to the flat H dim so TP head sharding survives (see
     models/attention.py); with non-divisible H the chunk rows SP-shard.
@@ -113,9 +129,6 @@ def int8_chunked_attention(qi, ki, vi, qs, ks, vs, *, causal: bool,
     qg = qi.reshape(b, h, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
     qsg = qs.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
     kpos = jnp.arange(skv)
-    # beyond-paper hillclimb flag: keep the QKᵀ einsum in the integer domain
-    # (int8×int8→int32, BoothFlex-faithful; 2× MXU throughput on TPU)
-    int8_logits = os.environ.get("REPRO_INT8_LOGITS") == "1"
     vf = vi.astype(jnp.float32) * vs[..., None]
     if int8_logits:
         kk = ki
@@ -207,7 +220,7 @@ def attn_prefill(cfg, lp, h, *, capacity: int, cross_src=None):
     o = int8_chunked_attention(qi, ki, vi, qsc, ksc, vsc,
                                causal=cross_src is None,
                                window=cfg.swa_window if cross_src is None
-                               else 0)
+                               else 0, int8_logits=bool(cfg.int8_logits))
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
     out = qlinear(lp["wo"], o.astype(jnp.float32))
 
@@ -244,7 +257,7 @@ def cross_attn_prefill(cfg, lp, h, cross_cache, cross_len):
     o = int8_chunked_attention(
         qi, cross_cache["k"], cross_cache["v"], qsc,
         cross_cache["k_scale"], cross_cache["v_scale"],
-        causal=False, kv_len=cross_len)
+        causal=False, kv_len=cross_len, int8_logits=bool(cfg.int8_logits))
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
     return qlinear(lp["wo"], o.astype(jnp.float32))
 
@@ -255,72 +268,26 @@ def cross_attn_prefill(cfg, lp, h, cross_cache, cross_len):
 
 def lop_decode_attention(cfg, qi, qsc, cl, new_len, *, window: int,
                          use_lop: bool = True):
-    """Local (non-SP) decode attention core.
+    """Local (non-SP) decode attention core — one fused-kernel dispatch.
 
     qi int8 [B, H, dh]; qsc f32 [B, H, 1]; cl = cache layer; new_len [B].
     → f32 [B, H, dh].
+
+    The dense baseline, the LOP screen → comparison-free block top-K →
+    exact candidate attention, and group-shared selection all route
+    through :func:`repro.kernels.ops.decode_attention`: one batched
+    kernel whose grid spans every (batch, kv-head) lane, replacing the
+    per-head ``lop_screen``/``sparse_decode`` small-kernel dispatch under
+    a triple ``vmap`` (DESIGN.md §Fused-decode-kernel). Retired slot-pool
+    lanes arrive with ``new_len == 0`` and emit exactly zero.
     """
-    b, h, dh = qi.shape
-    hkv = cl["k"].shape[1]
-    g = h // hkv
+    cfg = resolve_decode_flags(cfg)
     m = cl["k"].shape[2]
-    sm = dh ** -0.5
-
-    if not use_lop:
-        # dense baseline: exact int8 attention over all M cached tokens
-        qg = qi.reshape(b, hkv, g, dh)
-        s = jnp.einsum("bhgd,bhmd->bhgm", qg, cl["k"],
-                       preferred_element_type=jnp.int32).astype(jnp.float32)
-        s = (s * qsc.reshape(b, hkv, g, 1) * cl["k_scale"][:, :, None, :]
-             * sm)
-        valid = token_valid_mask(m, new_len, window)
-        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        vf = cl["v"].astype(jnp.float32) * cl["v_scale"][..., None]
-        return jnp.einsum("bhgm,bhmd->bhgd", p, vf).reshape(b, h, dh)
-
-    import os
-    block = cfg.lop_block
-    k_keep = k_keep_blocks(cfg, m)
-    qg = qi.reshape(b, hkv, g, dh)
-    # 1. screen — surrogate scores from the packed 4-bit feature cache
-    screen = jax.vmap(jax.vmap(ops.lop_screen))          # over (B, Hkv)
-    scores = screen(qg, cl["feat"])                      # [B, Hkv, G, M]
-    # beyond-paper: group-shared selection — one candidate set per KV head
-    # (max of the group's surrogate scores) cuts gather volume G×
-    shared = os.environ.get("REPRO_GQA_SHARED_SELECT") == "1"
-    if shared:
-        scores = jnp.max(scores, axis=2, keepdims=True)  # [B, Hkv, 1, M]
-    # 2. comparison-free block top-K
-    idx, gate_tokens = select_blocks(scores, new_len, block=block,
-                                     k_keep=k_keep, window=window)
-    qsc_g = qsc.reshape(b, hkv, g)
-
-    if shared:
-        # 3./4. one gather + one g-wide exact attention per KV head
-        def one_kv(qv, qs, kc, vc, ks, vs, bi, gt):
-            return ops.sparse_decode(qv, kc, vc, qs[:, None], ks[:, None],
-                                     vs[:, None], bi, gt, block=block,
-                                     softmax_scale=sm)
-
-        per_kv = jax.vmap(one_kv)
-        per_b = jax.vmap(per_kv)
-        out = per_b(qg, qsc_g, cl["k"], cl["v"], cl["k_scale"],
-                    cl["v_scale"], idx[:, :, 0], gate_tokens[:, :, 0])
-        return out.reshape(b, h, dh)
-
-    # 3./4. gather candidates + exact attention (per q-head, paper-faithful)
-    def one(qv, qs, kc, vc, ks, vs, bi, gt):
-        return ops.sparse_decode(qv[None], kc, vc, qs.reshape(1, 1),
-                                 ks[:, None], vs[:, None], bi, gt,
-                                 block=block, softmax_scale=sm)[0]
-
-    per_g = jax.vmap(one, in_axes=(0, 0, None, None, None, None, 0, 0))
-    per_kv = jax.vmap(per_g)
-    per_b = jax.vmap(per_kv)
-    out = per_b(qg, qsc_g, cl["k"], cl["v"], cl["k_scale"], cl["v_scale"],
-                idx, gate_tokens)                        # [B, Hkv, G, dh]
-    return out.reshape(b, h, dh)
+    return ops.decode_attention(
+        qi, qsc, cl["k"], cl["v"], cl["k_scale"], cl["v_scale"], cl["feat"],
+        new_len, block=cfg.lop_block, k_keep=k_keep_blocks(cfg, m),
+        window=window, use_lop=use_lop,
+        shared_select=bool(cfg.gqa_shared_select))
 
 
 def _write_token(cl, ki, vi, ksc, vsc, feat, lengths, active=None):
@@ -511,6 +478,7 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
     into the answer row); recurrent families (hybrid/ssm) must pass
     unpadded prompts since their state integrates every position.
     """
+    cfg = resolve_decode_flags(cfg)
     b = tokens.shape[0]
     x = _embed(cfg, qp, tokens, patches)
     s_total = x.shape[1]
@@ -573,7 +541,8 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
             ki, vi, ksc, vsc, _ = _quantize_kv(k, v)
             o = int8_chunked_attention(
                 qi.transpose(0, 2, 1, 3), ki, vi,
-                qsc[..., 0].transpose(0, 2, 1), ksc, vsc, causal=False)
+                qsc[..., 0].transpose(0, 2, 1), ksc, vsc, causal=False,
+                int8_logits=bool(cfg.int8_logits))
             o = o.transpose(0, 2, 1, 3).reshape(e.shape[0], e.shape[1],
                                                 cfg.q_dim)
             e = e + qlinear(lp["attn"]["wo"], o)
@@ -609,6 +578,7 @@ def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
     inactive lanes write nothing, keep their ``lengths``, and their logits
     are meaningless (the scheduler never reads them).
     """
+    cfg = resolve_decode_flags(cfg)
     lengths = cache["lengths"]
     active = cache.get("active")
     x = _embed(cfg, qp, tokens)

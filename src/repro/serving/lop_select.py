@@ -3,8 +3,23 @@
 Wraps the core selector (:mod:`repro.core.lop`) for the engine's decode
 shapes: scores arrive per (batch, kv-head, group-head), selection is at
 *block* granularity (paper: "only those candidate blocks are requested"),
-and the output is the (block_idx, gate_tokens) contract the sparse-decode
-kernel consumes.
+and the output is the (block_idx, gate_tokens) scalar-prefetch contract of
+the decode kernels.
+
+Scalar-prefetch contract (DESIGN.md §Fused-decode-kernel)
+---------------------------------------------------------
+``select_blocks`` emits, per selection set, ``block_idx`` int32 [K] plus
+``gate_tokens`` int32 [3K] = [gate(0/1) ‖ end ‖ start] — gate says the
+candidate is live, and tokens [start, end) inside its block survive the
+cache-length suffix cut and the SWA-window prefix cut. This is exactly
+what rides ahead of a Pallas grid as scalar prefetch: the single-kv-head
+micro-kernel (:func:`repro.kernels.int8_attention.sparse_decode_attention`)
+consumes it verbatim via ``PrefetchScalarGridSpec``, and the fused batched
+kernel (:mod:`repro.kernels.decode_attention`) re-derives the same ranks,
+gates and intervals *in kernel* from its prefetched ``new_len``/
+``pos_offset`` scalars — mirroring this module op for op (same bucketized
+selector, same ``n_buckets``) so the jnp oracle and the fused kernel pick
+identical candidate sets. Change one side only in lockstep with the other.
 
 Slot-paged pools reuse the same masking contract: a retired or empty lane
 is passed with ``new_len == 0``, which makes :func:`token_valid_mask` all
@@ -18,7 +33,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.lop import block_reduce_scores, comparison_free_topk
+from repro.core.lop import (DEFAULT_N_BUCKETS, block_reduce_scores,
+                            comparison_free_topk)
 
 INT32_MIN = jnp.iinfo(jnp.int32).min
 
@@ -37,13 +53,19 @@ def token_valid_mask(m: int, new_len: jax.Array, window: int,
 
 
 def select_blocks(scores: jax.Array, new_len: jax.Array, *, block: int,
-                  k_keep: int, window: int = 0, n_buckets: int = 64,
+                  k_keep: int, window: int = 0,
+                  n_buckets: int = DEFAULT_N_BUCKETS,
                   block_offset: int = 0):
     """scores int32 [B, Hkv, G, M]; new_len int32 [B] →
     (block_idx [B,Hkv,G,K], gate_tokens [B,Hkv,G,3K] = [gate ‖ end ‖ start]).
 
     ``block_offset`` shifts block ids to global numbering when scoring an
-    M-shard (the SP quota-sharded path).
+    M-shard (the SP quota-sharded path). ``n_buckets`` defaults to
+    :data:`repro.core.lop.DEFAULT_N_BUCKETS`, shared with the fused
+    kernel's in-kernel selector — both sides derive their emission order
+    from the same :func:`repro.core.lop.comparison_free_rank`, so they
+    pick identical candidate sets by construction; override ``n_buckets``
+    only in lockstep with the kernel call.
     """
     b, hkv, g, m = scores.shape
     nb = m // block

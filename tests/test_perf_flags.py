@@ -1,4 +1,11 @@
-"""Hillclimb flags must preserve exactness (§Perf beyond-paper variants)."""
+"""Hillclimb flags must preserve exactness (§Perf beyond-paper variants).
+
+The decode variants are ModelConfig fields now (``gqa_shared_select``,
+``int8_logits``), resolved once per engine entry by
+:func:`repro.configs.base.resolve_decode_flags`; the env vars exercised
+here remain as fallbacks for unset fields — both spellings must steer the
+same code path (checked below and in tests/test_decode_attention.py).
+"""
 import os
 
 import jax
@@ -48,6 +55,11 @@ def test_shared_select_exact_at_keep_one(flag_env):
     rel = float(jnp.max(jnp.abs(flag_dec - base_dec))
                 / (jnp.max(jnp.abs(base_dec)) + 1e-9))
     assert rel < 1e-5, rel
+    # the config-field spelling takes the identical path as the env flag
+    del os.environ["REPRO_GQA_SHARED_SELECT"]
+    _, field_dec = _run_cell(cfg.replace(gqa_shared_select=True), qp, tokens)
+    np.testing.assert_array_equal(np.asarray(field_dec),
+                                  np.asarray(flag_dec))
 
 
 def test_int8_logits_matches_f32_path(flag_env):
