@@ -16,12 +16,14 @@ def main() -> None:
                     help="substring filter on module name")
     args = ap.parse_args()
 
-    from benchmarks import fig8_lop, fig9_schedule, kernels_micro, table1_e2e
+    from benchmarks import (fig8_lop, fig9_schedule, kernels_micro,
+                            prefill_interleave, table1_e2e)
     modules = [
         ("fig8_lop", fig8_lop),
         ("fig9_schedule", fig9_schedule),
         ("table1_e2e", table1_e2e),
         ("kernels_micro", kernels_micro),
+        ("prefill_interleave", prefill_interleave),
     ]
     print("name,value,derived")
     failed = 0

@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Docs honesty check: internal links and referenced paths must resolve.
+
+    python scripts/check_docs.py [files...]
+
+Defaults to README.md, DESIGN.md, ROADMAP.md, CHANGES.md. Two rules:
+
+  1. every relative markdown link target ``[text](path#anchor)`` must
+     exist on disk (http(s) links are not fetched);
+  2. every backtick-quoted repo path that *looks* like a file
+     (contains "/" and ends in a known extension, or is a top-level
+     *.md / *.sh / *.py) must exist — either from the repo root or via
+     the docs' ``src/repro``-relative shorthand (``core/lop.py``) — so
+     the README's paper-section → module map cannot drift from the tree.
+
+Exit code 1 with a per-file report if anything dangles; the CI runs this
+after the test suite (scripts/ci_tier1.sh).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md"]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`([^`\n]+)`")
+PATH_EXTS = (".py", ".md", ".sh", ".txt", ".json", ".yaml", ".yml")
+
+
+def _is_pathlike(span: str) -> bool:
+    """A backtick span we hold to existing on disk."""
+    if any(ch in span for ch in " ()[]{}<>=*,:$"):
+        return False
+    if not span.endswith(PATH_EXTS):
+        return False
+    # bare filenames are claims only when they name top-level docs/scripts;
+    # module-ish spans like ``ops.py`` alone stay informal
+    return "/" in span or (ROOT / span).suffix == ".md"
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (path.parent / rel).exists():
+            errors.append(f"dangling link: ({target})")
+    for m in CODE_SPAN.finditer(text):
+        span = m.group(1)
+        if _is_pathlike(span) and not (ROOT / span).exists() \
+                and not (ROOT / "src" / "repro" / span).exists():
+            errors.append(f"referenced path missing: `{span}`")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] if argv else \
+        [ROOT / f for f in DEFAULT_FILES]
+    failed = 0
+    for f in files:
+        if not f.exists():
+            print(f"check_docs: {f} does not exist")
+            failed += 1
+            continue
+        try:
+            label = f.resolve().relative_to(ROOT)
+        except ValueError:          # CLI arg outside the repo root
+            label = f
+        errs = check_file(f)
+        for e in errs:
+            print(f"check_docs: {label}: {e}")
+        failed += len(errs)
+    if failed:
+        print(f"check_docs: {failed} problem(s)")
+        return 1
+    print(f"check_docs: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

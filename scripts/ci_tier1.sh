@@ -21,8 +21,14 @@ fi
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 
-KERNEL_TESTS="tests/test_kernels.py tests/test_decode_attention.py"
+KERNEL_TESTS="tests/test_kernels.py tests/test_decode_attention.py \
+tests/test_prefill_attention.py"
 for impl in ref pallas; do
     echo "ci_tier1: kernel tests under REPRO_KERNEL_IMPL=${impl}" >&2
     REPRO_KERNEL_IMPL="${impl}" python -m pytest -x -q ${KERNEL_TESTS}
 done
+
+# docs honesty: README/DESIGN/ROADMAP/CHANGES internal links and referenced
+# paths must resolve (the paper-section → module map cannot drift)
+echo "ci_tier1: markdown link/path check" >&2
+python scripts/check_docs.py

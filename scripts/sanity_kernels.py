@@ -89,4 +89,27 @@ for use_lop in (True, False):
     print(f"decode_attention use_lop={use_lop} max abs err: {err:.2e}")
     assert err < 1e-3
     assert float(jnp.max(jnp.abs(o_k[1]))) == 0.0, "retired lane leaked"
+
+# --- fused batched prefill (the serving prefill entry) ---
+C = 16
+qp_ = jnp.asarray(rng.integers(-60, 61, size=(B, H, C, D)).astype(np.int8))
+qps = jnp.asarray(rng.uniform(0.005, 0.02, size=(B, H, C)).astype(np.float32))
+kv_len = jnp.asarray([M - 100, 0], jnp.int32)       # lane 1 empty
+o_k = ops.prefill_attention(qp_, qps, kb, vb, kbs, vbs, kv_len,
+                            q_offset=M - 100 - C, causal=True,
+                            impl="pallas")
+o_r = ops.prefill_attention(qp_, qps, kb, vb, kbs, vbs, kv_len,
+                            q_offset=M - 100 - C, causal=True, impl="ref")
+err = float(jnp.max(jnp.abs(o_k - o_r)))
+print(f"prefill_attention max abs err: {err:.2e}")
+assert err < 1e-3
+assert float(jnp.max(jnp.abs(o_k[1]))) == 0.0, "empty prefill lane leaked"
+# chunk-carry: two half chunks == the whole chunk, bitwise
+halves = [ops.prefill_attention(
+    qp_[:, :, i * 8:(i + 1) * 8], qps[:, :, i * 8:(i + 1) * 8], kb, vb,
+    kbs, vbs, kv_len, q_offset=M - 100 - C + i * 8, causal=True,
+    impl="pallas") for i in range(2)]
+assert (np.asarray(jnp.concatenate(halves, 2)) == np.asarray(o_k)).all(), \
+    "chunk-carry not bitwise"
+print("prefill_attention chunked == whole (bitwise)")
 print("ALL KERNEL SANITY OK")

@@ -8,6 +8,11 @@
                             kernel (screen → comparison-free top-K →
                             DMA-gathered exact attention) whose grid spans
                             every (batch, kv-head) lane in one launch
+  * ``prefill_attention`` — THE serving prefill path: one fused batched
+                            causal int8 flash kernel over fixed-size token
+                            chunks with online-softmax carry, shared by
+                            whole-prompt, chunked, encoder and
+                            cross-attention prefill
 
 ``ops`` exposes the jit'd public wrappers (pallas/ref dispatch, padding);
 ``ref`` holds the pure-jnp oracles used by the allclose tests and traced by
@@ -16,4 +21,5 @@ the full-size dry-run.
 
 from repro.kernels import ops, ref
 from repro.kernels.ops import (decode_attention, flash_prefill, lop_screen,
-                               sparse_decode, ternary_matmul)
+                               prefill_attention, sparse_decode,
+                               ternary_matmul)

@@ -31,6 +31,7 @@ from repro.core.ternary import TernaryWeight
 from repro.kernels import decode_attention as _dec
 from repro.kernels import int8_attention as _attn
 from repro.kernels import lop_scores as _lop
+from repro.kernels import prefill_attention as _pf
 from repro.kernels import ref as _ref
 from repro.kernels import ternary_matmul as _tmm
 
@@ -153,6 +154,76 @@ def sparse_decode(q, k_cache, v_cache, q_scale, k_scale, v_scale,
         q, k_cache, v_cache, q_scale, k_scale, v_scale, block_idx,
         gate_tokens, block=block, softmax_scale=softmax_scale,
         interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Fused batched prefill attention — THE prefill entry point
+# ---------------------------------------------------------------------------
+
+def prefill_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale, kv_len, *,
+                      q_offset=None, causal: bool = True, window: int = 0,
+                      softmax_scale: float | None = None,
+                      int8_logits: bool = False, impl: str = "auto"):
+    """Single entry for every prefill-attention flavour (DESIGN.md
+    §Chunked-prefill): whole-prompt prefill, chunked prefill, encoder
+    self-attention (``causal=False``) and decoder cross-attention all
+    route through this one op, so the chunked scheduler and the lockstep
+    reference compute bit-identical rows under either dispatch arm.
+
+    qi        int8  [B, H, C, dh]   chunk (or whole-prompt) queries
+    qsc       f32   [B, H, C]       per-token-head absmax query scales
+    k/v_cache int8  [B, Hkv, M, dh] caches with K/V written at [0, kv_len)
+    k/v_scale f32   [B, Hkv, M]     per-token absmax scales
+    kv_len    int32 [B]             valid cache tokens (incl. this chunk)
+    q_offset       traced int32 scalar or None — global position of query
+                   column 0 (chunked prefill passes its chunk start)
+    → f32 [B, H, C, dh]
+
+    ``impl="pallas"`` runs the fused kernel
+    (:mod:`repro.kernels.prefill_attention`): one ``pallas_call`` whose
+    grid spans (B·Hkv, kv-block stream) with f32 online-softmax carry in
+    VMEM scratch. ``impl="ref"`` runs the jnp oracle, streamed over query
+    chunks so dry-run traces stay memory-bounded. The wrapper pads M to
+    the kernel block size; padded tokens sit beyond ``kv_len`` and fold
+    as bitwise no-ops.
+    """
+    b, h, c, dh = qi.shape
+    hkv, m = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    assert h == g * hkv, (h, hkv)
+    if softmax_scale is None:
+        softmax_scale = dh ** -0.5
+    kv_len = kv_len.astype(jnp.int32)
+
+    if _resolve(impl) == "ref":
+        return _ref.prefill_attention_ref(
+            qi, qsc, k_cache, v_cache, k_scale, v_scale, kv_len,
+            0 if q_offset is None else q_offset, causal=causal,
+            window=window, softmax_scale=softmax_scale,
+            int8_logits=int8_logits)
+
+    bk = min(_pf.DEFAULT_BK, m)
+    pad = (-m) % bk
+    if pad:
+        widths = [(0, 0), (0, 0), (0, pad)]
+        k_cache = jnp.pad(k_cache, widths + [(0, 0)])
+        v_cache = jnp.pad(v_cache, widths + [(0, 0)])
+        k_scale = jnp.pad(k_scale, widths)
+        v_scale = jnp.pad(v_scale, widths)
+        m += pad
+
+    # flatten (B, Hkv) → the kernel's batched lane axis; rows g-major
+    bh = b * hkv
+    qig = qi.reshape(b, hkv, g, c, dh).reshape(bh, g * c, dh)
+    qsg = qsc.reshape(b, hkv, g, c).reshape(bh, g * c, 1)
+    po = jnp.full((1,), 0 if q_offset is None else q_offset, jnp.int32)
+    out = _pf.fused_prefill_attention(
+        qig, qsg, k_cache.reshape(bh, m, dh), v_cache.reshape(bh, m, dh),
+        k_scale.reshape(bh, m, 1), v_scale.reshape(bh, m, 1), kv_len, po,
+        hkv=hkv, chunk=c, block=bk, causal=causal, window=window,
+        softmax_scale=softmax_scale, int8_logits=int8_logits,
+        interpret=_interpret())
+    return out.reshape(b, h, c, dh)
 
 
 # ---------------------------------------------------------------------------

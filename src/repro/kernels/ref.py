@@ -50,6 +50,104 @@ def flash_prefill_ref(q, k, v, q_scale, k_scale, v_scale, *,
     return jnp.dot(p, v.astype(jnp.float32) * v_scale)
 
 
+def prefill_attention_ref(qi, qsc, k_cache, v_cache, k_scale, v_scale,
+                          kv_len, q_off=0, *, causal: bool = True,
+                          window: int = 0, softmax_scale: float,
+                          int8_logits: bool = False,
+                          chunk: int = 256) -> jax.Array:
+    """Batched GQA prefill-chunk attention oracle (streamed over q chunks).
+
+    qi int8 [B, H, C, dh]; qsc f32 [B, H, C]; caches int8/f32
+    [B, Hkv, M, ...]; kv_len int32 [B]; ``q_off`` (scalar, may be traced)
+    is the global position of query column 0. → f32 [B, H, C, dh].
+
+    Per query row the masked logits, the guarded softmax and the
+    normalization are independent of C and of every other row, so running
+    a prompt through this oracle in chunks against the same
+    capacity-padded cache is *bitwise* identical to one whole-prompt call
+    — the invariant the chunked scheduler's token-exactness rests on
+    (DESIGN.md §Chunked-prefill). ``int8_logits`` keeps QKᵀ in the
+    integer domain (int8×int8→int32, BoothFlex-faithful); the default
+    dequantizes K once and streams f32 MXU dots. The inner scan over
+    query chunks (``REPRO_ATTN_CHUNK`` raises it for accounting probes)
+    bounds the materialized logits to [B, H, chunk, M] at dry-run shapes.
+    """
+    import os
+
+    from repro.distributed.partitioning import shard
+    from repro.models.attention import _model_axis_size
+    from repro.models.scan_utils import accounting_unroll
+
+    b, h, sq, dh = qi.shape
+    hkv, m = k_cache.shape[1], k_cache.shape[2]
+    chunk = min(int(os.environ.get("REPRO_ATTN_CHUNK", chunk)), sq)
+    if hkv != h:
+        rep = h // hkv
+        # repeat K/V to the flat H dim so TP head sharding survives (see
+        # models/attention.py); with non-divisible H the q chunks SP-shard
+        k_cache = jnp.repeat(k_cache, rep, axis=1)
+        v_cache = jnp.repeat(v_cache, rep, axis=1)
+        k_scale = jnp.repeat(k_scale, rep, axis=1)
+        v_scale = jnp.repeat(v_scale, rep, axis=1)
+    head_sharded = h % _model_axis_size() == 0
+
+    pad = (-sq) % chunk
+    if pad:
+        qi = jnp.pad(qi, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        qsc = jnp.pad(qsc, ((0, 0), (0, 0), (0, pad)))
+    nc = qi.shape[2] // chunk
+    qg = qi.reshape(b, h, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    qsg = qsc.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+
+    kpos = jnp.arange(m)
+    vf = v_cache.astype(jnp.float32) * v_scale[..., None]
+    # Both QKᵀ branches dequantize AFTER the dot: int8 products summed in
+    # f32 stay exact below 2²⁴ (|s| ≤ 127²·dh), so the f32 branch is
+    # bitwise identical to the int32 branch on CPU — the flag only picks
+    # the MXU datapath (int8 2× throughput) on real TPUs. Scaling before
+    # the dot would differ at ~1e-7, which repeated absmax requantization
+    # across layers can amplify into a rounding flip (knife-edge).
+    kk = k_cache if int8_logits else k_cache.astype(jnp.float32)
+    if head_sharded:
+        kk = shard(kk, "dp", "tp", None, None)
+        vf = shard(vf, "dp", "tp", None, None)
+
+    def body(_, args):
+        qc, qsc_c, ci = args                             # [B, H, C, dh]
+        if head_sharded:
+            qc = shard(qc, "dp", "tp", None, None)
+        else:
+            qc = shard(qc, "dp", None, "sp", None)
+        if int8_logits:
+            s = jnp.einsum("bhcd,bhmd->bhcm", qc, kk,
+                           preferred_element_type=jnp.int32)
+            s = s.astype(jnp.float32)
+        else:
+            s = jnp.einsum("bhcd,bhmd->bhcm", qc.astype(jnp.float32), kk,
+                           preferred_element_type=jnp.float32)
+        s = s * k_scale[:, :, None, :] * qsc_c[..., None] * softmax_scale
+        qpos = q_off + ci * chunk + jnp.arange(chunk)
+        mask = kpos[None, None, :] < kv_len[:, None, None]   # [B, C, M]
+        if causal:
+            mask &= qpos[None, :, None] >= kpos[None, None, :]
+            if window:
+                mask &= (qpos[None, :, None] - kpos[None, None, :]) < window
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        # guarded softmax: fully-masked rows emit exact zero, matching the
+        # kernel's ℓ > 0 flush guard
+        mx = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jnp.maximum(mx, -1e29))
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhcm,bhmd->bhcd", p, vf)
+        return None, o / jnp.where(l > 0, l, 1.0)
+
+    _, oc = jax.lax.scan(body, None, (qg, qsg, jnp.arange(nc)),
+                         unroll=accounting_unroll(nc))
+    o = oc.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * chunk, dh)
+    return o[:, :, :sq]
+
+
 def sparse_decode_attention_ref(q, k_cache, v_cache, q_scale, k_scale,
                                 v_scale, block_idx, gate_tokens, *,
                                 block: int, softmax_scale: float) -> jax.Array:

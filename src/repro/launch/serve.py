@@ -10,6 +10,14 @@ per-request latency percentiles (TTFT, end-to-end) alongside aggregate
 tokens/s and the modeled LOP KV-traffic reduction. ``--verify`` replays
 every request alone through the lockstep path and checks the continuous-
 batching run emitted identical greedy tokens.
+
+Chunked prefill (DESIGN.md §Chunked-prefill) is ON by default for dense/
+vlm archs: each serve cycle advances one fixed-shape prefill chunk AND one
+decode step, so TTFT is measured *under interleaving* — a long prompt's
+prefill overlaps other lanes' decoding instead of stalling them, and its
+own TTFT includes the cycles it shared. ``--no-chunked`` restores
+run-to-completion prefill (the ablation baseline); ``--chunk-tokens``
+overrides the chunk size (default: the arch's ``lop_block``).
 """
 
 from __future__ import annotations
@@ -55,7 +63,9 @@ def make_requests(cfg, *, n_requests: int, min_prompt: int, max_prompt: int,
 def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                min_prompt: int = 8, max_prompt: int = 48, gen: int = 16,
                arrival_period: float = 0.0, seed: int = 0,
-               use_lop: bool = True, verify: bool = False):
+               use_lop: bool = True, verify: bool = False,
+               chunked: bool | None = None,
+               chunk_tokens: int | None = None):
     """Continuous-batching run over staggered arrivals. → stats dict.
 
     ``arrival_period`` (seconds) spaces request arrivals; requests that
@@ -71,7 +81,8 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
     if cfg.family == "vlm":
         max_len += cfg.n_img_tokens       # image prefix shares the cache
     sched = Scheduler(cfg, qp, n_slots=n_slots, max_len=max_len,
-                      use_lop=use_lop)
+                      use_lop=use_lop, chunked=chunked,
+                      chunk_tokens=chunk_tokens)
 
     t0 = time.monotonic()
     pending = list(reqs)
@@ -84,7 +95,7 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
             sched.submit(req)
             now = time.monotonic() - t0
         sched.admit()
-        if sched.n_active:
+        if sched.n_active or sched.n_prefilling:
             sched.step()
             n_steps += 1
         elif pending:
@@ -108,7 +119,11 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
         "latency_p99": float(np.percentile(lat, 99)),
         "ttft_p50": float(np.percentile(ttft, 50)),
         "ttft_p90": float(np.percentile(ttft, 90)),
+        "ttft_p99": float(np.percentile(ttft, 99)),
         "prefill_compiles": sched.prefill_compiles,
+        "chunked": sched.chunked,
+        "interleaved_decode_steps": sched.interleaved_decode_steps,
+        "full_prefill_stalls": sched.full_prefill_stalls,
     }
 
     if verify:
@@ -136,6 +151,11 @@ def main():
     ap.add_argument("--arrival-period", type=float, default=0.0,
                     help="seconds between request arrivals (staggered)")
     ap.add_argument("--no-lop", action="store_true")
+    ap.add_argument("--no-chunked", action="store_true",
+                    help="run-to-completion prefill (disable chunked "
+                         "prefill/decode interleaving)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="prefill chunk size (default: arch lop_block)")
     ap.add_argument("--verify", action="store_true",
                     help="replay each request alone (lockstep) and check "
                          "token-exact agreement")
@@ -148,7 +168,9 @@ def main():
     out = serve_loop(cfg, n_slots=args.slots, n_requests=args.requests,
                      min_prompt=args.min_prompt, max_prompt=args.max_prompt,
                      gen=args.gen, arrival_period=args.arrival_period,
-                     use_lop=not args.no_lop, verify=args.verify)
+                     use_lop=not args.no_lop, verify=args.verify,
+                     chunked=not args.no_chunked,
+                     chunk_tokens=args.chunk_tokens)
 
     print(f"{'rid':>4} {'plen':>5} {'toks':>5} {'ttft_ms':>8} "
           f"{'latency_ms':>10}  finish")
@@ -156,9 +178,14 @@ def main():
         print(f"{r.rid:>4} {r.prompt_len:>5} {len(r.tokens):>5} "
               f"{r.ttft * 1e3:>8.1f} {r.latency * 1e3:>10.1f}  "
               f"{r.finish_reason}")
-    print(f"wall {out['wall_s']:.2f}s, {out['decode_steps']} decode steps, "
+    mode = ("chunked prefill (interleaved; "
+            f"{out['interleaved_decode_steps']} decode steps taken while "
+            "a prompt was mid-prefill)" if out["chunked"] else
+            f"run-to-completion prefill ({out['full_prefill_stalls']} "
+            "full-batch stalls)")
+    print(f"wall {out['wall_s']:.2f}s, {out['decode_steps']} serve cycles, "
           f"{out['tokens_per_s']:.1f} tok/s, "
-          f"{out['prefill_compiles']} prefill bucket compiles")
+          f"{out['prefill_compiles']} prefill compiles, {mode}")
     print(f"latency p50/p90/p99: {out['latency_p50'] * 1e3:.1f} / "
           f"{out['latency_p90'] * 1e3:.1f} / "
           f"{out['latency_p99'] * 1e3:.1f} ms; "

@@ -125,14 +125,27 @@ def attention_init(key, cfg):
 
 
 def attention_apply(cfg, p, x, *, kv_x=None, causal=True, positions=None,
-                    use_rope=True):
-    """Self-attention (kv_x=None) or cross-attention over ``kv_x``.
+                    use_rope=True, chunk_carry: bool = False,
+                    q_offset: int = 0):
+    """Self-attention (kv_x=None), cross-attention, or chunk-carry.
 
     x [B, S, D] → [B, S, D]. Projections are BitLinear under QAT.
+
+    Chunk-carry (the float-path mirror of the engine's chunked prefill,
+    DESIGN.md §Chunked-prefill) is an explicit opt-in: when ``x`` is a
+    *suffix chunk* of a longer self-attention stream, pass the full
+    stream (prefix ‖ chunk) as ``kv_x`` with ``chunk_carry=True`` and
+    the chunk's absolute start as ``q_offset`` — keys rope at positions
+    [0, S_kv), queries at [q_offset, q_offset + S), and the causal/SWA
+    mask runs in global positions, so the chunk rows equal the same rows
+    of one full-stream call. Without the flag, ``kv_x`` keeps its
+    original invariant: plain cross-attention (non-causal, no rope,
+    no window), whatever ``use_rope`` says.
     """
     b, sq, _ = x.shape
     src = x if kv_x is None else kv_x
     skv = src.shape[1]
+    self_like = kv_x is None or chunk_carry
 
     q = linear_apply(p["wq"], x, quant=cfg.quant)
     k = linear_apply(p["wk"], src, quant=cfg.quant)
@@ -141,17 +154,19 @@ def attention_apply(cfg, p, x, *, kv_x=None, causal=True, positions=None,
     k = k.reshape(b, skv, cfg.n_kv_heads, cfg.hd)
     v = v.reshape(b, skv, cfg.n_kv_heads, cfg.hd)
 
-    if use_rope and kv_x is None:
+    if use_rope and self_like:
         if positions is None:
-            positions = jnp.arange(sq)[None, :]
+            positions = q_offset + jnp.arange(sq)[None, :]
         q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
+        k = rope(k, jnp.arange(skv)[None, :] if chunk_carry else positions,
+                 cfg.rope_theta)
 
     q = shard_heads_or_seq(q, cfg.n_heads)
     k = shard_heads_or_seq(k, cfg.n_kv_heads)
     v = shard_heads_or_seq(v, cfg.n_kv_heads)
 
-    o = chunked_attention(q, k, v, causal=causal and kv_x is None,
-                          window=cfg.swa_window if kv_x is None else 0)
+    o = chunked_attention(q, k, v, causal=causal and self_like,
+                          window=cfg.swa_window if self_like else 0,
+                          q_offset=q_offset)
     o = o.reshape(b, sq, cfg.q_dim)
     return linear_apply(p["wo"], o, quant=cfg.quant)

@@ -45,11 +45,25 @@ def decoder_layer_init(key, cfg, *, moe: bool, cross: bool = False):
     return p, s
 
 
-def decoder_layer_apply(cfg, p, x, *, positions, causal=True, cross_kv=None):
+def decoder_layer_apply(cfg, p, x, *, positions, causal=True, cross_kv=None,
+                        chunk_ctx=None):
+    """One decoder layer. ``chunk_ctx`` is the float-path chunk-carry
+    (DESIGN.md §Chunked-prefill): when ``x`` is the suffix chunk of a
+    longer stream, pass the full pre-layer stream (prefix ‖ chunk) — the
+    layer norms it through the same ln1 and lets the chunk's queries
+    attend the whole context at their global offset, so the output equals
+    the same rows of a full-stream call (no KV cache needed in the
+    training/eval path)."""
     x = shard(x, "dp", None, None)
     h = norm_apply(p["ln1"], x, cfg.norm)
-    x = x + attention_apply(cfg, p["attn"], h, positions=positions,
-                            causal=causal)
+    if chunk_ctx is None:
+        x = x + attention_apply(cfg, p["attn"], h, positions=positions,
+                                causal=causal)
+    else:
+        hk = norm_apply(p["ln1"], chunk_ctx, cfg.norm)
+        x = x + attention_apply(cfg, p["attn"], h, kv_x=hk, causal=causal,
+                                positions=positions, chunk_carry=True,
+                                q_offset=chunk_ctx.shape[1] - x.shape[1])
     if cross_kv is not None:
         h = norm_apply(p["ln_x"], x, cfg.norm)
         x = x + attention_apply(cfg, p["xattn"], h, kv_x=cross_kv,

@@ -5,10 +5,10 @@ Lifecycle (see :mod:`repro.serving.scheduler`): admit → prefill → insert →
 decode → evict over ``n_slots`` persistent decode lanes.
 """
 
-from repro.serving.cache import (evict_slot, free_slot, free_slots,
-                                 init_cache, init_cache_pool, insert_slot,
-                                 pool_capacity)
-from repro.serving.engine import prefill, serve_step
+from repro.serving.cache import (evict_slot, extract_slot, free_slot,
+                                 free_slots, init_cache, init_cache_pool,
+                                 insert_slot, pool_capacity)
+from repro.serving.engine import prefill, prefill_chunk, serve_step
 from repro.serving.quantize import quantize_params
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      lockstep_generate)

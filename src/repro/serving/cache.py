@@ -16,10 +16,14 @@ Slot-paged pool (continuous batching)
 :mod:`repro.serving.scheduler` is::
 
     admit    a queued request once a lane is free,
-    prefill  it alone (length-bucketed compile) into a batch-1 cache,
-    insert   that cache into the free lane (``insert_slot``,
-             one ``dynamic_update_slice`` per leaf) while the other lanes
-             keep decoding,
+    prefill  it — chunked families interleave one fixed-shape chunk per
+             serve cycle (extract_slot → prefill_chunk → partial
+             insert_slot with ``active=False``); the legacy path runs the
+             whole prompt at once (length-bucketed compile) into a
+             batch-1 cache,
+    insert   that cache into the lane (``insert_slot``, one
+             ``dynamic_update_slice`` per leaf) while the other lanes
+             keep decoding; the final chunk's insert activates the lane,
     decode   all active lanes together; inactive lanes are masked out of
              the LOP screen, block top-K and cache writes,
     evict    the lane on EOS/max-len (``evict_slot``) — the lane's bytes go
@@ -185,7 +189,7 @@ def pool_capacity(pool) -> int:
     return caps[0] if caps else 0
 
 
-def insert_slot(pool, slot, req_cache):
+def insert_slot(pool, slot, req_cache, active=True):
     """Write a single-request (batch-1) prefill cache into lane ``slot``.
 
     One ``dynamic_update_slice`` per leaf at that leaf's slot axis — the
@@ -194,6 +198,14 @@ def insert_slot(pool, slot, req_cache):
     serves every lane). The request cache's token capacity may be smaller
     than the pool's; positions above it go stale and are masked by
     ``lengths``.
+
+    ``active`` (static bool or traced scalar) is the *partial-insert*
+    switch for chunked prefill: a mid-prefill lane is written back with
+    ``active=False`` after every chunk — its K/V for [0, lengths) are
+    real, but the decode step must not advance it — and the final chunk
+    flips it live. The scheduler keeps such a lane out of its free-lane
+    deque (note: :func:`free_slots` reports by ``active`` alone and does
+    NOT know about reservations — DESIGN.md §Chunked-prefill).
     """
     def walk(path, dst, src):
         if isinstance(dst, dict):
@@ -205,8 +217,28 @@ def insert_slot(pool, slot, req_cache):
 
     new = walk((), {k: v for k, v in pool.items() if k != "active"},
                req_cache)
-    new["active"] = pool["active"].at[slot].set(True)
+    new["active"] = pool["active"].at[slot].set(active)
     return new
+
+
+def extract_slot(pool, slot):
+    """Batch-1 view of lane ``slot`` — the inverse of :func:`insert_slot`.
+
+    One ``dynamic_slice`` per leaf (``slot`` may be traced). Chunked
+    prefill round-trips extract → ``prefill_chunk`` → partial
+    ``insert_slot`` once per chunk, so the in-flight prompt's K/V lives
+    in the pool between chunks rather than in host-side side state.
+    """
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()
+                    if k != "active"}
+        ax = slot_axis(path, node)
+        start = (0,) * ax + (slot,) + (0,) * (node.ndim - ax - 1)
+        sizes = node.shape[:ax] + (1,) + node.shape[ax + 1:]
+        return jax.lax.dynamic_slice(node, start, sizes)
+
+    return walk((), pool)
 
 
 def evict_slot(pool, slot):

@@ -2,8 +2,16 @@
 
 This is the paper's full pipeline on TPU terms (DESIGN.md §2):
 
-  prefill   — BitLinear projections (TINT) → rope → absmax barrier → int8
-              flash attention; K/V/LOP-feature cache written per layer.
+  prefill   — BitLinear projections (TINT) → rope → absmax barrier → ONE
+              fused attention dispatch (:func:`repro.kernels.ops.
+              prefill_attention`): batched causal int8 flash attention
+              over the capacity-padded cache with f32 online-softmax
+              carry; K/V/LOP-feature cache written per layer. Two entry
+              shapes share the op: :func:`prefill` (whole prompt) and
+              :func:`prefill_chunk` (one fixed-size chunk of a prompt
+              against the cache written so far — the chunked-prefill
+              tentpole, DESIGN.md §Chunked-prefill), bit-identical per
+              query row by construction.
   decode    — one token: project/rope/quantize, append to cache, then ONE
               fused attention dispatch (:func:`repro.kernels.ops.
               decode_attention`): the LOP screen over the 4-bit feature
@@ -80,100 +88,7 @@ def _shard_batch(x, *rest):
 
 
 # ===========================================================================
-# int8 chunked attention (prefill path; jnp/MXU form of the flash kernel)
-# ===========================================================================
-
-def int8_chunked_attention(qi, ki, vi, qs, ks, vs, *, causal: bool,
-                           window: int = 0, q_offset=0, kv_len=None,
-                           chunk: int = 256,
-                           softmax_scale: float | None = None,
-                           int8_logits: bool = False):
-    """GQA int8 attention, streamed over query chunks.
-
-    qi int8 [B, H, Sq, dh]; ki/vi int8 [B, Hkv, Skv, dh];
-    qs f32 [B, H, Sq]; ks/vs f32 [B, Hkv, Skv]; kv_len int32 [B] or None.
-    → f32 [B, H, Sq, dh]. Sq is padded to the chunk size internally.
-
-    ``int8_logits`` keeps the QKᵀ einsum in the integer domain
-    (int8×int8→int32, BoothFlex-faithful; 2× MXU throughput on TPU) —
-    an explicit parameter resolved from ``cfg.int8_logits`` at the engine
-    entry, not an env read inside the traced function.
-
-    K/V are repeated to the flat H dim so TP head sharding survives (see
-    models/attention.py); with non-divisible H the chunk rows SP-shard.
-    """
-    import os
-
-    from repro.models.attention import _model_axis_size
-
-    b, h, sq, dh = qi.shape
-    hkv, skv = ki.shape[1], ki.shape[2]
-    if softmax_scale is None:
-        softmax_scale = dh ** -0.5
-    # accounting probes raise the chunk (tiling-invariant — see
-    # models/attention.py)
-    chunk = int(os.environ.get("REPRO_ATTN_CHUNK", chunk))
-    if hkv != h:
-        rep = h // hkv
-        ki = jnp.repeat(ki, rep, axis=1)
-        vi = jnp.repeat(vi, rep, axis=1)
-        ks = jnp.repeat(ks, rep, axis=1)
-        vs = jnp.repeat(vs, rep, axis=1)
-    head_sharded = h % _model_axis_size() == 0
-    chunk = min(chunk, sq)
-    pad = (-sq) % chunk
-    if pad:
-        qi = jnp.pad(qi, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        qs = jnp.pad(qs, ((0, 0), (0, 0), (0, pad)))
-    nc = qi.shape[2] // chunk
-    qg = qi.reshape(b, h, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
-    qsg = qs.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
-    kpos = jnp.arange(skv)
-    vf = vi.astype(jnp.float32) * vs[..., None]
-    if int8_logits:
-        kk = ki
-    else:
-        kk = ki.astype(jnp.float32) * ks[..., None]      # dequant once
-    if head_sharded:
-        kk = shard(kk, "dp", "tp", None, None)
-        vf = shard(vf, "dp", "tp", None, None)
-
-    def body(_, args):
-        qc, qsc, ci = args                               # [B, H, C, dh]
-        if head_sharded:
-            qc = shard(qc, "dp", "tp", None, None)
-        else:
-            qc = shard(qc, "dp", None, "sp", None)
-        if int8_logits:
-            s = jnp.einsum("bhcd,bhmd->bhcm", qc, kk,
-                           preferred_element_type=jnp.int32)
-            s = s.astype(jnp.float32) * ks[:, :, None, :]
-        else:
-            s = jnp.einsum("bhcd,bhmd->bhcm", qc.astype(jnp.float32), kk,
-                           preferred_element_type=jnp.float32)
-        s = s * qsc[..., None] * softmax_scale
-        qpos = q_offset + ci * chunk + jnp.arange(chunk)
-        mask = jnp.ones((b, chunk, skv), bool)
-        if causal:
-            mask &= qpos[None, :, None] >= kpos[None, None, :]
-            if window:
-                mask &= (qpos[None, :, None] - kpos[None, None, :]) < window
-        if kv_len is not None:
-            mask &= kpos[None, None, :] < kv_len[:, None, None]
-        s = jnp.where(mask[:, None], s, NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhcm,bhmd->bhcd", p, vf)
-        return None, o
-
-    from repro.models.scan_utils import accounting_unroll
-    _, oc = jax.lax.scan(body, None, (qg, qsg, jnp.arange(nc)),
-                         unroll=accounting_unroll(nc))
-    o = oc.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * chunk, dh)
-    return o[:, :, :sq]
-
-
-# ===========================================================================
-# Attention layer — prefill
+# Attention layer — prefill (whole prompt and chunked, one fused dispatch)
 # ===========================================================================
 
 def _project_qkv(cfg, lp, h, src=None):
@@ -204,25 +119,25 @@ def _pad_cache(arr, cap: int, axis: int = 2):
     return jnp.pad(arr, pad)
 
 
-def attn_prefill(cfg, lp, h, *, capacity: int, cross_src=None):
-    """→ (attn_out [B,S,D], cache_layer). Caches K/V/features at [0, S)."""
+def attn_prefill(cfg, lp, h, *, capacity: int):
+    """→ (attn_out [B,S,D], cache_layer). Caches K/V/features at [0, S).
+
+    The whole prompt is one maximal chunk: K/V/features are written into
+    the capacity-padded cache first and attention runs over THAT cache
+    through :func:`repro.kernels.ops.prefill_attention` (``q_offset=0``,
+    ``kv_len=S``) — the same op, operand shapes and masking as
+    :func:`attn_prefill_chunk`, which is what makes chunked prefill
+    bit-identical per query row (DESIGN.md §Chunked-prefill).
+    """
     b, s, _ = h.shape
-    q, k, v = _project_qkv(cfg, lp, h, src=cross_src)
-    if cross_src is None:
-        positions = jnp.arange(s)[None, :]
-        q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
+    q, k, v = _project_qkv(cfg, lp, h)
+    positions = jnp.arange(s)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
     qi, qsc = _q(q)
     ki, vi, ksc, vsc, feat = _quantize_kv(k, v)
     qi = qi.transpose(0, 2, 1, 3)                        # [B, H, S, dh]
     qsc = qsc[..., 0].transpose(0, 2, 1)
-
-    o = int8_chunked_attention(qi, ki, vi, qsc, ksc, vsc,
-                               causal=cross_src is None,
-                               window=cfg.swa_window if cross_src is None
-                               else 0, int8_logits=bool(cfg.int8_logits))
-    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
-    out = qlinear(lp["wo"], o.astype(jnp.float32))
 
     cache_l = {
         "k": _pad_cache(ki, capacity), "v": _pad_cache(vi, capacity),
@@ -230,7 +145,75 @@ def attn_prefill(cfg, lp, h, *, capacity: int, cross_src=None):
                                                                     capacity),
         "feat": _pad_cache(feat, capacity),
     }
+    # dense/vlm must attend the FULL capacity so chunked rows (which see
+    # the pool lane at capacity) stay bitwise equal; run-to-completion
+    # families (moe/hybrid/encdec self-attn) never chunk, so their
+    # attention view trims to the prompt's block roundup — cost scales
+    # with S, not pool capacity
+    m_att = capacity if cfg.family in ("dense", "vlm") \
+        else min(capacity, round_up(s, cfg.lop_block))
+    o = ops.prefill_attention(
+        qi, qsc, cache_l["k"][:, :, :m_att], cache_l["v"][:, :, :m_att],
+        cache_l["k_scale"][:, :, :m_att], cache_l["v_scale"][:, :, :m_att],
+        jnp.full((b,), s, jnp.int32), causal=True,
+        window=cfg.swa_window, int8_logits=bool(cfg.int8_logits))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    out = qlinear(lp["wo"], o.astype(jnp.float32))
     return out, cache_l
+
+
+def _write_chunk(cl, ki, vi, ksc, vsc, feat, start):
+    """Write a C-token quantized chunk into the cache at [start, start+C).
+
+    One ``dynamic_update_slice`` per leaf at the (possibly traced) chunk
+    start — the cache-pool analogue of the per-token ``_write_token``.
+    Padded tail tokens of a final chunk land here too; they sit above
+    ``lengths`` and are stale-masked like every other dead byte
+    (DESIGN.md §Chunked-prefill partial-insert invariants).
+    """
+    def wr(arr, val):
+        return jax.lax.dynamic_update_slice(
+            arr, val, (0, 0, start) + (0,) * (arr.ndim - 3))
+
+    cl = dict(cl)
+    cl["k"] = wr(cl["k"], ki)
+    cl["v"] = wr(cl["v"], vi)
+    cl["feat"] = wr(cl["feat"], feat)
+    cl["k_scale"] = wr(cl["k_scale"], ksc)
+    cl["v_scale"] = wr(cl["v_scale"], vsc)
+    return cl
+
+
+def attn_prefill_chunk(cfg, lp, h, cl, *, start, kv_len):
+    """One C-token prefill chunk against an existing cache layer.
+
+    h [B, C, D] are the chunk's hidden states at global positions
+    [start, start+C); ``cl`` holds every earlier chunk's K/V at
+    [0, start). The chunk's quantized K/V/features are written at
+    [start, start+C) and its queries attend causally over [0, kv_len)
+    through the same fused dispatch as :func:`attn_prefill` — the
+    chunk-carry is the cache itself plus (start, kv_len); no softmax
+    state crosses chunk boundaries (it lives in the kernel's VMEM
+    scratch within one call).
+    """
+    b, c, _ = h.shape
+    q, k, v = _project_qkv(cfg, lp, h)
+    positions = start + jnp.arange(c)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    qi, qsc = _q(q)
+    ki, vi, ksc, vsc, feat = _quantize_kv(k, v)
+    qi = qi.transpose(0, 2, 1, 3)                        # [B, H, C, dh]
+    qsc = qsc[..., 0].transpose(0, 2, 1)
+
+    cl = _write_chunk(cl, ki, vi, ksc, vsc, feat, start)
+    o = ops.prefill_attention(
+        qi, qsc, cl["k"], cl["v"], cl["k_scale"], cl["v_scale"], kv_len,
+        q_offset=start, causal=True, window=cfg.swa_window,
+        int8_logits=bool(cfg.int8_logits))
+    o = o.transpose(0, 2, 1, 3).reshape(b, c, cfg.q_dim)
+    out = qlinear(lp["wo"], o.astype(jnp.float32))
+    return out, cl
 
 
 def build_cross_cache(cfg, lp, enc, capacity: int):
@@ -247,17 +230,23 @@ def build_cross_cache(cfg, lp, enc, capacity: int):
     }
 
 
-def cross_attn_prefill(cfg, lp, h, cross_cache, cross_len):
-    """Decoder-side cross attention over a prequantized encoder cache."""
+def cross_attn_prefill(cfg, lp, h, cross_cache, cross_len, kv_max=None):
+    """Decoder-side cross attention over a prequantized encoder cache.
+
+    ``kv_max`` (static) trims the attention view of the cross cache to
+    the encoder length's block roundup — encdec never chunks, so the
+    cost scales with the actual frames, not ``cross_ctx`` capacity.
+    """
     b, s, _ = h.shape
+    m = kv_max or cross_cache["k"].shape[2]
     q = qlinear(lp["wq"], h).reshape(b, s, cfg.n_heads, cfg.hd)
     qi, qsc = _q(q)
     qi = qi.transpose(0, 2, 1, 3)
     qsc = qsc[..., 0].transpose(0, 2, 1)
-    o = int8_chunked_attention(
-        qi, cross_cache["k"], cross_cache["v"], qsc,
-        cross_cache["k_scale"], cross_cache["v_scale"],
-        causal=False, kv_len=cross_len, int8_logits=bool(cfg.int8_logits))
+    o = ops.prefill_attention(
+        qi, qsc, cross_cache["k"][:, :, :m], cross_cache["v"][:, :, :m],
+        cross_cache["k_scale"][:, :, :m], cross_cache["v_scale"][:, :, :m],
+        cross_len, causal=False, int8_logits=bool(cfg.int8_logits))
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
     return qlinear(lp["wo"], o.astype(jnp.float32))
 
@@ -398,8 +387,9 @@ def _decoder_layer_prefill(cfg, lp, x, *, capacity, enc=None, cross_cap=None,
     if enc is not None:
         cross_cache = build_cross_cache(cfg, lp["xattn"], enc, cross_cap)
         h = norm_apply(lp["ln_x"], x, cfg.norm)
-        x = x + cross_attn_prefill(cfg, lp["xattn"], h, cross_cache,
-                                   cross_len)
+        x = x + cross_attn_prefill(
+            cfg, lp["xattn"], h, cross_cache, cross_len,
+            kv_max=min(cross_cap, round_up(enc.shape[1], cfg.lop_block)))
         out["cross"] = cross_cache
     return _mlp(cfg, lp, x), out
 
@@ -539,10 +529,11 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
             q, k, v = _project_qkv(cfg, lp["attn"], h)
             qi, qsc = _q(q)
             ki, vi, ksc, vsc, _ = _quantize_kv(k, v)
-            o = int8_chunked_attention(
-                qi.transpose(0, 2, 1, 3), ki, vi,
-                qsc[..., 0].transpose(0, 2, 1), ksc, vsc, causal=False,
-                int8_logits=bool(cfg.int8_logits))
+            o = ops.prefill_attention(
+                qi.transpose(0, 2, 1, 3), qsc[..., 0].transpose(0, 2, 1),
+                ki, vi, ksc, vsc,
+                jnp.full((e.shape[0],), e.shape[1], jnp.int32),
+                causal=False, int8_logits=bool(cfg.int8_logits))
             o = o.transpose(0, 2, 1, 3).reshape(e.shape[0], e.shape[1],
                                                 cfg.q_dim)
             e = e + qlinear(lp["attn"]["wo"], o)
@@ -569,6 +560,55 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
                                           keepdims=False)
     logits = _logits(cfg, qp, x_last)
     return logits, cache
+
+
+def prefill_chunk(cfg, qp, tokens, cache, *, start, seq_end, patches=None):
+    """One fixed-shape chunk of chunked prefill. → (logits [B,V], cache).
+
+    tokens [B, C] cover global stream positions [start, start+C) (for vlm
+    the stream is [image prefix ‖ text] and the first chunk additionally
+    carries ``patches``, so its embedded length is n_img + C at
+    ``start = 0``). ``cache`` holds every earlier chunk's K/V at
+    [0, start); this call writes positions [start, start+C) per layer and
+    sets ``lengths = seq_end`` — the true end of the written prompt so
+    far, which trails start+C only on a right-padded final chunk. The
+    returned logits come from stream position ``seq_end - 1`` and are
+    meaningful on the final chunk only (they seed the first decode
+    token). ``start`` and ``seq_end`` may be traced, so ONE compile
+    serves every chunk index of every prompt at this chunk shape.
+
+    Supported for the causal-attention families whose per-token compute
+    is independent of how the prompt is split (dense, vlm, and — router
+    caveats aside, DESIGN.md §Chunked-prefill — moe). Recurrent families
+    (hybrid/ssm) integrate state over every position and encdec couples
+    the compile to the encoder frames; they keep whole-prompt prefill.
+    """
+    cfg = resolve_decode_flags(cfg)
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"chunked prefill is undefined for family "
+                         f"{cfg.family!r} (needs causal attention with "
+                         f"split-invariant per-token compute)")
+    b = tokens.shape[0]
+    x = _embed(cfg, qp, tokens, patches)
+    c_total = x.shape[1]
+    kv_len = jnp.full((b,), start + c_total, jnp.int32)
+
+    def body(x, inp):
+        lp, cl = inp
+        x = _shard_batch(x)
+        h = norm_apply(lp["ln1"], x, cfg.norm)
+        attn_out, ncl = attn_prefill_chunk(cfg, lp["attn"], h, cl,
+                                           start=start, kv_len=kv_len)
+        return _mlp(cfg, lp, x + attn_out), ncl
+
+    x, layers_cache = _layer_scan(body, x, (qp["layers"], cache["layers"]))
+    new_cache = dict(cache)
+    new_cache["layers"] = layers_cache
+    new_cache["lengths"] = jnp.full((b,), seq_end, jnp.int32)
+    idx = jnp.clip(seq_end - 1 - start, 0, c_total - 1)
+    x_last = jax.lax.dynamic_index_in_dim(x, idx, axis=1, keepdims=False)
+    logits = _logits(cfg, qp, x_last)
+    return logits, new_cache
 
 
 def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):

@@ -8,29 +8,46 @@ lifecycle per request is
 
   admit    — a queued request is taken once a lane is free; the other lanes
              keep decoding in the meantime.
-  prefill  — the request runs alone (batch 1) through ``engine.prefill``.
-             Prompts are right-padded to a power-of-two *length bucket* so
-             compilation is bounded to a handful of shapes instead of one
-             per distinct prompt length; ``true_len`` keeps the padded
-             positions out of the logits and the cache length. Recurrent
-             families (hybrid/ssm) integrate state over every position, so
-             they use exact-length buckets (one compile per length).
-  insert   — the batch-1 cache is written into the free lane with one
-             ``dynamic_update_slice`` per leaf (``insert_slot``), and the
-             prefill's argmax becomes the lane's first generated token.
+  prefill  — two regimes (DESIGN.md §Chunked-prefill):
+
+             *chunked* (dense/vlm, the default): the prompt is split into
+             fixed-size token chunks (``chunk_tokens``, default
+             ``lop_block``) and ONE chunk is advanced per ``step()``,
+             interleaved with the running decode batch — decode lanes
+             never stall behind a long prompt, and prefill compiles
+             collapse from one-per-pow2-bucket to one fixed chunk shape.
+             Each chunk round-trips extract_slot → ``engine.prefill_chunk``
+             → partial ``insert_slot`` (``active=False``), so the
+             in-flight K/V lives in the reserved lane; the final chunk
+             activates it and its argmax becomes the first token.
+
+             *run-to-completion* (moe/hybrid/ssm/encdec): the request
+             runs alone (batch 1) through ``engine.prefill``. Recurrent
+             families (hybrid/ssm) integrate state over every position,
+             encdec ties the compile to its encoder frames, and MoE
+             routers rank tokens per forward call — all three use
+             exact-length compiles (one per distinct prompt length; for
+             MoE this also keeps pad tokens out of the router, which
+             would otherwise shift per-group expert capacity).
+  insert   — the batch-1 cache is written into the lane with one
+             ``dynamic_update_slice`` per leaf (``insert_slot``).
   decode   — one jit'd ``serve_step`` advances *all* active lanes; retired
              lanes are masked out of the LOP screen, block top-K and cache
-             writes by the per-slot ``active`` mask.
+             writes by the per-slot ``active`` mask; mid-prefill lanes are
+             inactive and therefore skipped the same way.
   evict    — on EOS or the request's token budget the lane is retired
              (``evict_slot``) and immediately reusable; stale bytes are
              masked by ``lengths`` so the next occupant is unaffected.
 
 Determinism note: lanes are independent through every attention/FFN path,
-so a request decodes the same tokens whether it shares the pool or runs
-alone (``lockstep_generate``) — the equivalence the tests pin down. The
-exception is MoE capacity dropping, which ranks tokens across the batch;
-with a generous ``capacity_factor`` the paths agree, but bit-exactness is
-only guaranteed for dense/vlm/recurrent families.
+and a chunked prefill is bit-identical per query row to the whole-prompt
+prefill (both run :func:`repro.kernels.ops.prefill_attention` over the
+same capacity-padded cache — DESIGN.md §Chunked-prefill), so a request
+decodes the same tokens whether it shares the pool, prefills in chunks,
+or runs alone (``lockstep_generate``) — the equivalence the tests pin
+down. The exception is MoE capacity dropping, which ranks tokens across
+the batch; with a generous ``capacity_factor`` the paths agree, but
+bit-exactness is only guaranteed for dense/vlm/recurrent families.
 """
 
 from __future__ import annotations
@@ -43,9 +60,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.cache import (evict_slot, init_cache_pool, insert_slot,
-                                 pool_capacity)
-from repro.serving.engine import prefill, serve_step
+from repro.serving.cache import (evict_slot, extract_slot, init_cache_pool,
+                                 insert_slot, pool_capacity)
+from repro.serving.engine import prefill, prefill_chunk, serve_step
+
+# Families whose prompts are split into fixed-shape chunks and interleaved
+# with decode. moe is excluded: the router ranks tokens per forward call,
+# so splitting a prompt regroups its capacity competition (same class of
+# caveat as the batch-determinism note above); hybrid/ssm carry recurrent
+# state (no chunk-carry without threading it); encdec couples the compile
+# to its encoder frames.
+CHUNKED_FAMILIES = ("dense", "vlm")
 
 
 @dataclass
@@ -89,10 +114,22 @@ class _Lane:
     eos_id: int | None
 
 
+@dataclass
+class _Prefill:
+    """Host-side state of one lane mid-way through chunked prefill."""
+    slot: int
+    req: Request
+    chunks: list[np.ndarray]           # [1, C_k] int32 token chunks
+    starts: list[int]                  # global stream position of chunk k
+    seq_ends: list[int]                # true end written after chunk k
+    t_admit: float
+    next_chunk: int = 0
+
+
 def pow2_bucket(n: int, *, lo: int = 16, hi: int | None = None) -> int:
     """Smallest power-of-two ≥ n (clamped to [lo, hi]) — the prefill
-    compilation bucket. A few buckets cover every prompt length, bounding
-    recompiles regardless of traffic mix."""
+    compilation bucket of the run-to-completion path. A few buckets cover
+    every prompt length, bounding recompiles regardless of traffic mix."""
     b = lo
     while b < n:
         b *= 2
@@ -103,13 +140,21 @@ class Scheduler:
     """Continuous-batching engine front-end (greedy decoding).
 
     Drives the admit → prefill → insert → decode → evict lifecycle over a
-    slot-paged pool. ``step()`` advances every active lane one token and
-    returns the requests that completed; ``admit()`` fills free lanes from
-    the queue. The driver (``launch/serve.py``) interleaves the two.
+    slot-paged pool. ``step()`` advances ONE prefill chunk of the oldest
+    mid-prefill lane (chunked regime), then every active decode lane one
+    token, and returns the requests that completed; ``admit()`` fills free
+    lanes from the queue. The driver (``launch/serve.py``) interleaves the
+    two.
+
+    ``chunked=None`` (default) enables chunked prefill for the families in
+    :data:`CHUNKED_FAMILIES`; ``False`` forces run-to-completion prefill
+    everywhere (the pre-chunking behaviour, kept for the interleaving
+    ablation in ``benchmarks/prefill_interleave.py``).
     """
 
     def __init__(self, cfg, qp, *, n_slots: int, max_len: int,
                  use_lop: bool = True, bucket_min: int = 16,
+                 chunked: bool | None = None, chunk_tokens: int | None = None,
                  clock=time.monotonic):
         self.cfg = cfg
         self.qp = qp
@@ -123,16 +168,25 @@ class Scheduler:
         # encdec: cross-attention lanes have their own (cross_ctx) capacity
         self.cross_capacity = (self.pool["cross"]["k"].shape[3]
                                if "cross" in self.pool else 0)
+        self.chunked = ((chunked is None or chunked)
+                        and cfg.family in CHUNKED_FAMILIES)
+        self.chunk_tokens = chunk_tokens or cfg.lop_block
 
         self.queue: deque[Request] = deque()
         self.lanes: list[_Lane | None] = [None] * n_slots
         self._free: deque[int] = deque(range(n_slots))
+        self._prefilling: deque[_Prefill] = deque()
         # pending next-token per lane, fed to the next decode step
         self._next_tok = np.zeros((n_slots, 1), np.int32)
         self.results: list[RequestResult] = []
         self.prefill_compiles = 0
+        # interleaving telemetry (benchmarks/prefill_interleave.py):
+        # decode steps taken while some prompt was mid-prefill, and
+        # whole-prompt prefills that ran while decode lanes sat idle
+        self.interleaved_decode_steps = 0
+        self.full_prefill_stalls = 0
 
-        self._prefill_fns: dict[int, object] = {}
+        self._prefill_fns: dict = {}
         self._step_fn = jax.jit(
             lambda qp, c, t: serve_step(cfg, qp, c, t, use_lop=use_lop),
             donate_argnums=(1,))
@@ -162,15 +216,22 @@ class Scheduler:
     def n_active(self) -> int:
         return sum(l is not None for l in self.lanes)
 
+    @property
+    def n_prefilling(self) -> int:
+        return len(self._prefilling)
+
     def has_work(self) -> bool:
-        return bool(self.queue) or self.n_active > 0
+        return bool(self.queue) or bool(self._prefilling) \
+            or self.n_active > 0
 
     # ---------------- admit / prefill / insert ----------------
 
     def _bucket(self, prompt_len: int) -> int:
-        if self.cfg.family in ("hybrid", "ssm", "encdec"):
+        if self.cfg.family in ("hybrid", "ssm", "encdec", "moe"):
             # recurrent state integrates every position; encdec frames tie
-            # the compile to the prompt anyway → exact-length, no padding
+            # the compile to the prompt anyway; MoE routers rank tokens per
+            # group, so pad tokens would shift expert capacity and break
+            # the lockstep equivalence → exact-length, no padding
             return prompt_len
         return pow2_bucket(prompt_len, lo=self.bucket_min,
                            hi=self.max_len)
@@ -186,12 +247,75 @@ class Scheduler:
             self.prefill_compiles += 1
         return fn
 
+    def _chunk_fn_for(self, key):
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            cfg = self.cfg
+
+            def run(qp, pool, slot, toks, start, seq_end, activate, kw):
+                lane = extract_slot(pool, slot)
+                logits, lane = prefill_chunk(cfg, qp, toks, lane,
+                                             start=start, seq_end=seq_end,
+                                             **kw)
+                pool = insert_slot(pool, slot, lane, active=activate)
+                return logits, pool
+
+            fn = jax.jit(run, donate_argnums=(1,))
+            self._prefill_fns[key] = fn
+            self.prefill_compiles += 1
+        return fn
+
+    def _plan_chunks(self, req: Request):
+        """Host-side chunk grid of one prompt (fixed C-token shapes).
+
+        The final chunk is right-padded to the same C so every chunk of
+        every prompt hits ONE compiled shape; ``seq_end`` keeps the pad
+        out of ``lengths`` and the causal mask keeps it out of every real
+        query row. Only when the padded end would spill past the pool
+        capacity (a near-capacity prompt) does the tail fall back to its
+        exact length.
+        """
+        plen = len(req.prompt)
+        prefix = (len(req.patches)
+                  if self.cfg.family == "vlm" and req.patches is not None
+                  else 0)
+        c = self.chunk_tokens
+        n = max(1, -(-plen // c))
+        chunks, starts, seq_ends = [], [], []
+        for k in range(n):
+            lo, hi = k * c, min(plen, k * c + c)
+            width = c
+            if self.capacity and prefix + lo + c > self.capacity:
+                width = hi - lo                 # near-capacity exact tail
+            buf = np.zeros((1, width), np.int32)
+            buf[0, :hi - lo] = req.prompt[lo:hi]
+            chunks.append(buf)
+            starts.append(prefix + lo if k else 0)
+            seq_ends.append(prefix + hi)
+        return chunks, starts, seq_ends
+
     def admit(self) -> int:
-        """Admit queued requests into free lanes. Returns #admitted."""
+        """Admit queued requests into free lanes. Returns #admitted.
+
+        Chunked regime: the lane is *reserved* and the prompt's chunk grid
+        queued — no forward pass runs here; ``step()`` advances one chunk
+        per cycle. Run-to-completion regime: the whole prompt prefills
+        synchronously (stalling any active decode lanes — counted in
+        ``full_prefill_stalls``) and the lane activates immediately.
+        """
         n = 0
         while self.queue and self._free:
             req = self.queue.popleft()
             slot = self._free.popleft()
+            if self.chunked:
+                chunks, starts, seq_ends = self._plan_chunks(req)
+                self._prefilling.append(_Prefill(
+                    slot=slot, req=req, chunks=chunks, starts=starts,
+                    seq_ends=seq_ends, t_admit=self.clock()))
+                n += 1
+                continue
+            if self.n_active:
+                self.full_prefill_stalls += 1
             plen = len(req.prompt)
             bucket = max(self._bucket(plen), plen)
             t_admit = self.clock()
@@ -210,31 +334,64 @@ class Scheduler:
                 self.qp, jnp.asarray(padded), jnp.int32(true_len), kw)
             self.pool = self._insert_fn(self.pool, jnp.int32(slot),
                                         req_cache)
-            first = int(jnp.argmax(logits[0]))
-            res = RequestResult(rid=req.rid, prompt_len=plen,
-                                tokens=[first], t_arrival=req.arrival,
-                                t_admit=t_admit, t_first=self.clock())
-            lane = _Lane(result=res, remaining=req.max_new_tokens - 1,
-                         eos_id=req.eos_id)
-            self.lanes[slot] = lane
-            self._next_tok[slot, 0] = first
-            if (req.eos_id is not None and first == req.eos_id) \
-                    or lane.remaining <= 0:
-                self._finish(slot, "eos" if req.eos_id is not None
-                             and first == req.eos_id else "length")
+            self._start_lane(slot, req, logits, t_admit)
             n += 1
         return n
+
+    def _start_lane(self, slot: int, req: Request, logits, t_admit: float,
+                    done: list | None = None) -> None:
+        """Prefill finished: seed the lane with the prompt's argmax."""
+        first = int(jnp.argmax(logits[0]))
+        res = RequestResult(rid=req.rid, prompt_len=len(req.prompt),
+                            tokens=[first], t_arrival=req.arrival,
+                            t_admit=t_admit, t_first=self.clock())
+        lane = _Lane(result=res, remaining=req.max_new_tokens - 1,
+                     eos_id=req.eos_id)
+        self.lanes[slot] = lane
+        self._next_tok[slot, 0] = first
+        if (req.eos_id is not None and first == req.eos_id) \
+                or lane.remaining <= 0:
+            result = self._finish(slot, "eos" if req.eos_id is not None
+                                  and first == req.eos_id else "length")
+            if done is not None:
+                done.append(result)
+
+    def _step_prefill(self, done: list) -> bool:
+        """Advance ONE chunk of the oldest mid-prefill lane."""
+        if not self._prefilling:
+            return False
+        pf = self._prefilling[0]
+        k = pf.next_chunk
+        final = k == len(pf.chunks) - 1
+        kw = {}
+        if k == 0 and self.cfg.family == "vlm" and pf.req.patches is not None:
+            kw["patches"] = jnp.asarray(pf.req.patches)[None]
+        key = ("chunk", pf.chunks[k].shape[1]) + tuple(sorted(
+            (k2, v2.shape) for k2, v2 in kw.items()))
+        logits, self.pool = self._chunk_fn_for(key)(
+            self.qp, self.pool, jnp.int32(pf.slot),
+            jnp.asarray(pf.chunks[k]), jnp.int32(pf.starts[k]),
+            jnp.int32(pf.seq_ends[k]), jnp.asarray(final), kw)
+        pf.next_chunk += 1
+        if final:
+            self._prefilling.popleft()
+            self._start_lane(pf.slot, pf.req, logits, pf.t_admit, done)
+        return True
 
     # ---------------- decode / evict ----------------
 
     def step(self) -> list[RequestResult]:
-        """One decode step over every active lane; returns completions."""
+        """One serve cycle: ≤1 prefill chunk + one decode step over every
+        active lane; returns completions."""
+        done: list[RequestResult] = []
+        prefilling = self._step_prefill(done)
         if self.n_active == 0:
-            return []
+            return done
+        if prefilling or self._prefilling:
+            self.interleaved_decode_steps += 1
         logits, self.pool = self._step_fn(
             self.qp, self.pool, jnp.asarray(self._next_tok))
         toks = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-        done = []
         for slot, lane in enumerate(self.lanes):
             if lane is None:
                 continue
@@ -289,10 +446,12 @@ def lockstep_generate(cfg, qp, prompt, max_new_tokens: int, *,
                       max_len: int, use_lop: bool = True,
                       eos_id: int | None = None, frames=None,
                       patches=None) -> list[int]:
-    """Single-request lockstep reference path: prefill + greedy decode.
+    """Single-request lockstep reference path: whole-prompt prefill +
+    greedy decode.
 
     ``max_len`` must match the pool's (same cache capacity → same LOP
-    block top-K budget) for token-exact agreement with the scheduler.
+    block top-K budget AND the same prefill-attention operand shapes the
+    chunked path sees) for token-exact agreement with the scheduler.
     """
     prefill_fn, step = _lockstep_fns(cfg, use_lop, max_len)
     kw = {}

@@ -95,6 +95,27 @@ def test_capacity_guard_rejects_oversized_request():
         sched.submit(Request(rid=0, prompt=p, max_new_tokens=30))
 
 
+def test_moe_exact_length_prefill_matches_lockstep():
+    """MoE routers rank tokens per group for expert capacity, so pad
+    tokens entering the router shift who gets dropped — ``_bucket`` must
+    use exact lengths for moe like the recurrent families (ROADMAP open
+    item from the PR 2 review). 17 would land in the pow2 bucket 32 and
+    pad; with the fix it compiles at exactly 17 and the pooled run stays
+    token-identical to the unpadded lockstep reference."""
+    cfg, qp = _setup("granite-moe-1b-a400m")
+    prompts = _prompts(cfg, [17, 23], seed=11)
+    sched = Scheduler(cfg, qp, n_slots=2, max_len=MAX_LEN)
+    assert not sched.chunked          # router caveat: run-to-completion
+    for rid, p in enumerate(prompts):
+        sched.submit(Request(rid=rid, prompt=p, max_new_tokens=5))
+    results = sched.run_to_completion()
+    assert sched.prefill_compiles == 2           # exact lengths, no buckets
+    for rid, p in enumerate(prompts):
+        got = next(r for r in results if r.rid == rid)
+        ref = lockstep_generate(cfg, qp, p, 5, max_len=MAX_LEN)
+        assert got.tokens == ref, (rid, got.tokens, ref)
+
+
 def test_recurrent_family_uses_exact_length_prefill():
     """rwkv6 state integrates every position — the scheduler must not pad
     its prompts, and pooled decode must still match the solo path."""
