@@ -2,13 +2,27 @@
 
 CPU wall times cover the *ref* path (what the dry-run traces); the Pallas
 kernels are validated in interpret mode (bit-exact vs ref — see
-tests/test_kernels.py) and their value on real TPU is the traffic model
-reported here: packed ternary = 4× less weight HBM than int8, LOP feature
-screen = 16× less than bf16 K reads.
+tests/test_kernels.py, tests/test_qlinear_fused.py) and their value on
+real TPU is the traffic model reported here: packed ternary = 4× less
+weight HBM than int8, LOP feature screen = 16× less than bf16 K reads.
+
+Fused-vs-legacy projection dispatch
+-----------------------------------
+The projection path used to launch the absmax quantize, the standalone
+``ternary_matmul`` kernel and the dequant/bias/activation as separate
+dispatches per projection — 7+ per decoder layer (q, k, v, o, gate, up,
+down), each round-tripping HBM. It is now ≤ 3 fused dispatches (QKV = 1,
+O = 1, whole FFN = 1; a MoE layer's expert FFNs = 1 grouped dispatch).
+This module keeps a local copy of the legacy per-projection dispatch and
+reports both per-layer step costs plus the Pallas call-site count of each
+path (jaxpr equation count — the portable proxy for kernel launch
+boundaries, as in benchmarks/fig8_lop.py), emitting the numbers to
+``BENCH_proj.json`` for the driver.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -16,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lop import lop_features, pack_features
+from repro.core.quantization import quantize
 from repro.core.ternary import make_ternary_weight
 from repro.kernels import ops
 
@@ -27,6 +42,149 @@ def _time(fn, *args, iters=10):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6
+
+
+def _count_pallas(jaxpr) -> int:
+    """pallas_call equations per INVOCATION: recurse into call primitives
+    (pjit/scan/...) so two same-shape projections count as two launches —
+    a plain ``str(jaxpr).count`` would dedupe them to one shared subjaxpr."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for v in vals:
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    n += _count_pallas(inner)
+                elif hasattr(v, "eqns"):
+                    n += _count_pallas(v)
+    return n
+
+
+def _pallas_call_sites(fn, *args) -> int:
+    """Kernel launch boundaries in the traced program (portable proxy)."""
+    return _count_pallas(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def _legacy_qlinear(tw, x):
+    """The pre-fusion projection chain: jnp absmax quantize → standalone
+    ternary_matmul dispatch → jnp dequant (kept verbatim as baseline)."""
+    xq = quantize(x)
+    acc = ops.ternary_matmul(xq.values, tw, impl="pallas")
+    return acc.astype(jnp.float32) * xq.scale * jnp.asarray(
+        tw.scale, jnp.float32).reshape(())
+
+
+def _layer_shapes(d=2048, hd=128, h=16, hkv=4, f=5632, m=4):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    tws = {
+        "wq": make_ternary_weight(
+            jnp.asarray(rng.standard_normal((d, h * hd)), jnp.float32) * 0.02),
+        "wk": make_ternary_weight(
+            jnp.asarray(rng.standard_normal((d, hkv * hd)), jnp.float32) * 0.02),
+        "wv": make_ternary_weight(
+            jnp.asarray(rng.standard_normal((d, hkv * hd)), jnp.float32) * 0.02),
+        "wo": make_ternary_weight(
+            jnp.asarray(rng.standard_normal((h * hd, d)), jnp.float32) * 0.02),
+        "w_gate": make_ternary_weight(
+            jnp.asarray(rng.standard_normal((d, f)), jnp.float32) * 0.02),
+        "w_up": make_ternary_weight(
+            jnp.asarray(rng.standard_normal((d, f)), jnp.float32) * 0.02),
+        "w_down": make_ternary_weight(
+            jnp.asarray(rng.standard_normal((f, d)), jnp.float32) * 0.02),
+    }
+    return x, tws, (d, hd, h, hkv, f)
+
+
+def _fused_nodes(tws, dims):
+    d, hd, h, hkv, f = dims
+
+    def col(tw):
+        return jnp.broadcast_to(
+            jnp.asarray(tw.scale, jnp.float32).reshape(1, 1),
+            (1, tw.shape[1]))
+
+    qkv_packed = jnp.concatenate(
+        [tws[k].packed for k in ("wq", "wk", "wv")], -1)
+    qkv_scale = jnp.concatenate([col(tws[k]) for k in ("wq", "wk", "wv")],
+                                -1)
+    gu_packed = jnp.concatenate(
+        [tws["w_gate"].packed, tws["w_up"].packed], -1)
+    gu_scale = jnp.concatenate([col(tws["w_gate"]), col(tws["w_up"])], -1)
+    return {
+        "qkv": (qkv_packed, qkv_scale),
+        "wo": (tws["wo"].packed,
+               jnp.asarray(tws["wo"].scale, jnp.float32).reshape(1, 1)),
+        "gu": (gu_packed, gu_scale),
+        "down": (tws["w_down"].packed,
+                 jnp.asarray(tws["w_down"].scale,
+                             jnp.float32).reshape(1, 1)),
+    }
+
+
+def _run_projection_paths():
+    x, tws, dims = _layer_shapes()
+    d, hd, h, hkv, f = dims
+    nodes = _fused_nodes(tws, dims)
+
+    # both paths RETURN the K/V projections (a real layer consumes them
+    # for the cache write) so XLA cannot dead-code-eliminate them and the
+    # step costs cover all 7 projections
+    def fused_layer(x):
+        qkv = ops.qlinear_fused(x, *nodes["qkv"], impl="pallas")
+        o = ops.qlinear_fused(qkv[:, : h * hd], *nodes["wo"],
+                              impl="pallas")
+        y = ops.ffn_fused(o, *nodes["gu"], *nodes["down"], gated=True,
+                          act="silu", impl="pallas")
+        return y, qkv[:, h * hd:]
+
+    def legacy_layer(x):
+        q = _legacy_qlinear(tws["wq"], x)
+        k = _legacy_qlinear(tws["wk"], x)
+        v = _legacy_qlinear(tws["wv"], x)
+        o = _legacy_qlinear(tws["wo"], q)
+        g = jax.nn.silu(_legacy_qlinear(tws["w_gate"], o))
+        u = _legacy_qlinear(tws["w_up"], o)
+        return _legacy_qlinear(tws["w_down"], g * u), k, v
+
+    sites_fused = _pallas_call_sites(fused_layer, x)
+    sites_legacy = _pallas_call_sites(legacy_layer, x)
+
+    # CPU step cost on ref semantics (what the dry-run traces)
+    def fused_ref(x):
+        qkv = ops.qlinear_fused(x, *nodes["qkv"], impl="ref")
+        o = ops.qlinear_fused(qkv[:, : h * hd], *nodes["wo"], impl="ref")
+        y = ops.ffn_fused(o, *nodes["gu"], *nodes["down"], gated=True,
+                          act="silu", impl="ref")
+        return y, qkv[:, h * hd:]
+
+    def legacy_ref(x):
+        def lin(tw, xx):
+            xq = quantize(xx)
+            acc = ops.ternary_matmul(xq.values, tw, impl="ref")
+            return acc.astype(jnp.float32) * xq.scale * jnp.asarray(
+                tw.scale, jnp.float32).reshape(())
+        q = lin(tws["wq"], x)
+        k = lin(tws["wk"], x)
+        v = lin(tws["wv"], x)
+        o = lin(tws["wo"], q)
+        g = jax.nn.silu(lin(tws["w_gate"], o))
+        u = lin(tws["w_up"], o)
+        return lin(tws["w_down"], g * u), k, v
+
+    t_fused = _time(jax.jit(fused_ref), x)
+    t_legacy = _time(jax.jit(legacy_ref), x)
+    return {
+        "proj_dispatches_fused": sites_fused,
+        "proj_dispatches_legacy": sites_legacy,
+        "proj_layer_step_fused_us": t_fused,
+        "proj_layer_step_legacy_us": t_legacy,
+        "shapes": {"d_model": d, "q_dim": h * hd, "kv_dim": hkv * hd,
+                   "d_ff": f, "decode_rows": int(x.shape[0])},
+    }
 
 
 def run():
@@ -51,6 +209,10 @@ def run():
     t_exact = _time(jax.jit(
         lambda a: jax.lax.dot(a, kc.T, preferred_element_type=jnp.int32)), q)
 
+    proj = _run_projection_paths()
+    with open("BENCH_proj.json", "w") as fh:
+        json.dump(proj, fh, indent=2)
+
     rows = [
         ("kernels/ternary_matmul_ref_us", t_tern,
          f"{m}x{k}x{n} packed-2bit x int8"),
@@ -63,5 +225,17 @@ def run():
         ("kernels/exact_scores_us", t_exact, "exact int8 qk over cache"),
         ("kernels/screen_bytes", mcache * d // 2, "4-bit features"),
         ("kernels/exact_bytes", mcache * d, "int8 keys (2x screen)"),
+        ("kernels/proj_dispatches_fused", proj["proj_dispatches_fused"],
+         "pallas_call sites, decoder-layer projections (target: 3)"),
+        ("kernels/proj_dispatches_legacy", proj["proj_dispatches_legacy"],
+         "pre-fusion per-projection dispatch (7)"),
+        ("kernels/proj_layer_step_fused_us",
+         proj["proj_layer_step_fused_us"],
+         "per-layer projection step, fused entries (CPU ref semantics; "
+         "the wide concat GEMM is cache-bound on CPU — the fused win is "
+         "launches + HBM round-trips, realized on TPU)"),
+        ("kernels/proj_layer_step_legacy_us",
+         proj["proj_layer_step_legacy_us"],
+         "per-layer projection step, legacy chain (CPU ref semantics)"),
     ]
     return rows

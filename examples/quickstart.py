@@ -29,9 +29,9 @@ def main():
     # 1. init master weights, 2. convert to deployment format
     params, _ = init_params(cfg, jax.random.PRNGKey(0))
     qp = quantize_params(cfg, params)
-    wq = qp["layers"]["attn"]["wq"]
-    print(f"wq deployed as packed uint8 {wq['packed'].shape} "
-          f"(2 bit/weight) + scale γ")
+    wqkv = qp["layers"]["attn"]["wqkv"]
+    print(f"QKV deployed as ONE packed uint8 {wqkv['packed'].shape} "
+          f"(2 bit/weight, fused at quantize time) + per-column γ")
 
     # 3. serve a batch of prompts
     rng = np.random.default_rng(0)

@@ -1,8 +1,10 @@
 """Quick manual sanity for the Pallas kernels (interpret mode on CPU)."""
+import jax
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.lop import lop_features, pack_features, pot
+from repro.core.quantization import quantize
 from repro.core.ternary import make_ternary_weight
 from repro.kernels import ops, ref
 
@@ -16,6 +18,60 @@ y_k = ops.ternary_matmul(x, tw, impl="pallas")
 y_r = ops.ternary_matmul(x, tw, impl="ref")
 assert (np.asarray(y_k) == np.asarray(y_r)).all(), "ternary matmul mismatch"
 print("ternary_matmul kernel == ref (exact int32)")
+
+# --- fused projection (barrier + GEMM + dequant in ONE dispatch) ---
+xf = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+sc = jnp.asarray(tw.scale, jnp.float32).reshape(1, 1)
+
+
+def _unfused(xx):
+    xq = quantize(xx)
+    acc = ops.ternary_matmul(xq.values, tw, impl="ref")
+    return acc.astype(jnp.float32) * xq.scale * sc.reshape(())
+
+
+y_u = jax.jit(_unfused)(xf)
+for impl in ("ref", "pallas"):
+    y_f = jax.jit(lambda a, impl=impl: ops.qlinear_fused(
+        a, tw.packed, sc, impl=impl))(xf)
+    assert (np.asarray(y_f) == np.asarray(y_u)).all(), \
+        f"fused qlinear ({impl}) not bitwise vs unfused"
+print("qlinear_fused ref == pallas == unfused chain (bitwise)")
+
+# --- fused whole-FFN (gate·up → in-VMEM re-barrier → down) ---
+d_m, d_f = 256, 384
+twg = make_ternary_weight(
+    jnp.asarray(rng.normal(size=(d_m, d_f)).astype(np.float32)) * 0.05)
+twu = make_ternary_weight(
+    jnp.asarray(rng.normal(size=(d_m, d_f)).astype(np.float32)) * 0.05)
+twd = make_ternary_weight(
+    jnp.asarray(rng.normal(size=(d_f, d_m)).astype(np.float32)) * 0.05)
+gu_p = jnp.concatenate([twg.packed, twu.packed], -1)
+gu_s = jnp.concatenate(
+    [jnp.broadcast_to(jnp.asarray(t.scale, jnp.float32).reshape(1, 1),
+                      (1, d_f)) for t in (twg, twu)], -1)
+d_s = jnp.asarray(twd.scale, jnp.float32).reshape(1, 1)
+xm = jnp.asarray(rng.normal(size=(3, d_m)).astype(np.float32))
+
+
+def _ffn_unfused(xx):
+    def lin(t, h):
+        hq = quantize(h)
+        acc = ops.ternary_matmul(hq.values, t, impl="ref")
+        return acc.astype(jnp.float32) * hq.scale * jnp.asarray(
+            t.scale, jnp.float32).reshape(())
+    h = jax.nn.silu(lin(twg, xx)) * lin(twu, xx)
+    return lin(twd, h)
+
+
+y_u = jax.jit(_ffn_unfused)(xm)
+for impl in ("ref", "pallas"):
+    y_f = jax.jit(lambda a, impl=impl: ops.ffn_fused(
+        a, gu_p, gu_s, twd.packed, d_s, gated=True, act="silu",
+        impl=impl))(xm)
+    assert (np.asarray(y_f) == np.asarray(y_u)).all(), \
+        f"fused ffn ({impl}) not bitwise vs unfused"
+print("ffn_fused ref == pallas == unfused gate/up/down chain (bitwise)")
 
 # --- lop screen ---
 q = jnp.asarray(rng.integers(-127, 128, size=(12, 128)).astype(np.int8))

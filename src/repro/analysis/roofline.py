@@ -93,8 +93,9 @@ def active_params(cfg, n_params: int, params_tree=None) -> int:
     flat = jax.tree_util.tree_flatten_with_path(params_tree)[0]
     for path, leaf in flat:
         ks = jax.tree_util.keystr(path)
-        if any(n in ks for n in ("w_gate", "w_up", "w_down")) and \
-           "moe" in ks:
+        if any(n in ks for n in ("w_gate", "w_up", "w_down", "gu_packed",
+                                 "gu_scale", "down_packed", "down_scale")) \
+           and "moe" in ks:
             expert += int(np.prod(leaf.shape))
     dense = n_params - expert
     return int(dense + expert * cfg.top_k / cfg.n_experts)

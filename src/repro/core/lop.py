@@ -99,6 +99,24 @@ def unpack_features(packed: jax.Array) -> jax.Array:
 DEFAULT_N_BUCKETS = 64
 
 
+def _cumsum_lanes(x: jax.Array) -> jax.Array:
+    """Inclusive prefix sum along the LANE axis of a 2-D (sublane, lane)
+    tile, expressed as one f32 MXU dot against an upper-triangular ones
+    matrix — the Mosaic-friendly retile of ``jnp.cumsum(x, -1)``.
+
+    ``cumsum[r, j] = Σ_{i ≤ j} x[r, i] = (x @ T)[r, j]`` with
+    ``T[i, j] = (i ≤ j)``. Counts are integers far below 2²⁴, so the f32
+    accumulation is exact and the result is bitwise the integer cumsum.
+    """
+    m = x.shape[-1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    tri = (rows <= cols).astype(jnp.float32)
+    out = jax.lax.dot(x.astype(jnp.float32), tri,
+                      preferred_element_type=jnp.float32)
+    return out.astype(jnp.int32)
+
+
 def comparison_free_rank(s: jax.Array, k: int,
                          n_buckets: int = DEFAULT_N_BUCKETS) -> jax.Array:
     """Emission ranks of the bucketized selector: f32 [R, M] → int32 [R, M].
@@ -110,14 +128,22 @@ def comparison_free_rank(s: jax.Array, k: int,
     any non-finite) are invalid and never selected. Per row:
 
     1. bucketize scores into ``n_buckets`` linear ranges,
-    2. histogram + high-to-low prefix scan → cut bin where cum-count ≥ k,
+    2. per-bucket ≥-counts + cut bin where the high-to-low cumulative
+       count first reaches K,
     3. entries above the cut bin rank first in ascending index order, then
        the cut bin fills the remainder (the ASIC's k-wide priority
        encoders).
 
     ``rank < k`` ⇔ selected; everything else gets the sentinel M + k + 1.
-    Uses only broadcast-compare/cumsum vector ops so it stays valid inside
-    a kernel body (interpret-mode validated).
+
+    Every op keeps 2-D (sublane, lane) shape so Mosaic can tile it on
+    real TPU: the histogram's high-to-low cumulative count is computed
+    directly as ``cnt_ge[r, b] = #{m : bucket[r, m] ≥ b}`` — a static
+    loop over the ``n_buckets`` lanes of [R, M] broadcast-compares
+    (replacing the old rank-3 [R, M, n_buckets] one-hot + flat cumsum) —
+    and the index-order prefix sums run as f32 MXU dots against a
+    triangular ones matrix (:func:`_cumsum_lanes`). All counts are exact
+    in f32 (≪ 2²⁴), so the ranks are bitwise the flat-op ranks.
     """
     m = s.shape[-1]
     finite = jnp.isfinite(s)
@@ -128,11 +154,12 @@ def comparison_free_rank(s: jax.Array, k: int,
                       0, n_buckets - 1)
     bucket = jnp.where(finite, bucket, -1)          # invalid → below range
 
-    bins = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_buckets), 2)
-    hist = jnp.sum((bucket[:, :, None] == bins).astype(jnp.int32), axis=1)
-    # high-to-low cumulative count; cut = lowest bucket kept at all
-    cum_hi = jnp.cumsum(hist[:, ::-1], -1)[:, ::-1]  # [R, n_buckets]
-    reach = cum_hi >= k
+    # high-to-low cumulative count per bucket, 2-D throughout: one
+    # [R, 1] lane-reduction per (static) bucket id
+    cnt_ge = jnp.concatenate(
+        [jnp.sum((bucket >= b).astype(jnp.int32), -1, keepdims=True)
+         for b in range(n_buckets)], axis=-1)        # [R, n_buckets]
+    reach = cnt_ge >= k
     bin_ids = jax.lax.broadcasted_iota(jnp.int32, reach.shape, 1)
     cut = jnp.where(jnp.any(reach, -1, keepdims=True),
                     jnp.max(jnp.where(reach, bin_ids, -1), -1, keepdims=True),
@@ -141,8 +168,8 @@ def comparison_free_rank(s: jax.Array, k: int,
     above = bucket > cut
     at_cut = bucket == cut
     n_above = jnp.sum(above.astype(jnp.int32), -1, keepdims=True)
-    rank_above = jnp.cumsum(above.astype(jnp.int32), -1) - 1
-    rank_cut = n_above + jnp.cumsum(at_cut.astype(jnp.int32), -1) - 1
+    rank_above = _cumsum_lanes(above.astype(jnp.float32)) - 1
+    rank_cut = n_above + _cumsum_lanes(at_cut.astype(jnp.float32)) - 1
     big = m + k + 1
     rank = jnp.where(above, rank_above,
                      jnp.where(at_cut, rank_cut, big))

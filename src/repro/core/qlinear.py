@@ -1,11 +1,19 @@
-"""Serving-format linear: absmax barrier → TINT integer GEMM → fused dequant.
+"""Serving-format linears: one fused dispatch per projection group.
 
-A "packed" linear node is ``{"packed": uint8 [k//4, n], "scale": f32 [1,1],
-"b"?}`` — the deployment format produced by
-:func:`repro.serving.quantize.quantize_params`. ``qlinear`` implements the
-paper's cross-core contract: quantize once per vector (the barrier), run the
-GEMM entirely in the integer domain, dequantize once at the output by
-(activation scale × weight γ).
+A "packed" linear node is ``{"packed": uint8 [k//4, n], "scale", "b"?}`` —
+the deployment format produced by
+:func:`repro.serving.quantize.quantize_params`. ``scale`` is the absmean γ:
+scalar ``[1, 1]`` for a single projection, or a per-column row ``[1, n]``
+when several projections share one packed weight (fused QKV / KV — each
+column carries its segment's γ, so the fused dequant is bitwise the
+per-projection scalar dequant).
+
+Every packed apply routes through the fused entries in
+:mod:`repro.kernels.ops` (DESIGN.md §TINT-projection-fusion): the absmax
+barrier, the packed-2-bit ternary GEMM and the dequant/bias/activation
+epilogue run as ONE dispatch — the paper's cross-core contract (quantize
+once per vector, integer-domain GEMM, one output-side dequant) with the
+barrier *inside* the kernel instead of a jnp round-trip through HBM.
 """
 
 from __future__ import annotations
@@ -13,8 +21,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import quantize
-from repro.core.ternary import TernaryWeight
 from repro.kernels import ops
 
 
@@ -22,33 +28,56 @@ def is_packed(node) -> bool:
     return isinstance(node, dict) and "packed" in node
 
 
+def is_fused_ffn(node) -> bool:
+    """A whole-FFN serving node (gate‖up + down streams, one dispatch)."""
+    return isinstance(node, dict) and "gu_packed" in node
+
+
 def qlinear(node, x: jax.Array) -> jax.Array:
-    """x f32/bf16 [..., k] → f32 [..., n]."""
+    """x f32/bf16 [..., k] → f32 [..., n] — one fused dispatch."""
     if is_packed(node):
-        k = node["packed"].shape[-2] * 4
-        n = node["packed"].shape[-1]
-        xq = quantize(x)                                   # the barrier
-        tw = TernaryWeight(packed=node["packed"], scale=1.0, shape=(k, n))
-        acc = ops.ternary_matmul(xq.values, tw)
-        y = acc.astype(jnp.float32) * xq.scale * node["scale"].reshape(())
-    else:
-        y = x.astype(jnp.float32) @ node["w"].astype(jnp.float32)
+        return ops.qlinear_fused(x, node["packed"], node["scale"],
+                                 node.get("b"))
+    y = x.astype(jnp.float32) @ node["w"].astype(jnp.float32)
     if "b" in node:
         y = y + node["b"]
     return y
 
 
+def qlinear_split(node, x: jax.Array, widths) -> tuple:
+    """Fused multi-projection node → per-projection outputs.
+
+    One dispatch computes the concatenated output; the split is a free
+    view. ``widths`` are the static segment sizes (e.g. (q_dim, kv_dim,
+    kv_dim) for a fused QKV node) — re-derived from the config at the
+    call site, since packed nodes carry no static metadata.
+    """
+    y = qlinear(node, x)
+    outs, off = [], 0
+    for w in widths:
+        outs.append(y[..., off:off + w])
+        off += w
+    assert off == y.shape[-1], (widths, y.shape)
+    return tuple(outs)
+
+
+def ffn_node_apply(node, x: jax.Array, *, gated: bool, act: str) -> jax.Array:
+    """Whole-FFN serving node → one dispatch (act(x·Wg)·(x·Wu) → barrier
+    → ·Wd). Expert-stacked nodes ([E, ...] leaves with x [E, C, d]) run
+    every expert in the same launch."""
+    return ops.ffn_fused(x, node["gu_packed"], node["gu_scale"],
+                         node["down_packed"], node["down_scale"],
+                         gated=gated, act=act)
+
+
 def qlinear_expert(node, x: jax.Array) -> jax.Array:
-    """Per-expert linear: x [E, C, k]; node packed [E, k//4, n] (or fp w)."""
+    """Per-expert linear: x [E, C, k]; node packed [E, k//4, n] (or fp w).
+
+    The packed path is a grouped expert GEMM — expert is a grid axis of
+    one fused launch (barrier + GEMM + dequant), not a vmap of one
+    pallas_call per expert.
+    """
     if is_packed(node):
-        k = node["packed"].shape[-2] * 4
-
-        def one(xe, pe, se):
-            xq = quantize(xe)
-            tw = TernaryWeight(packed=pe, scale=1.0, shape=(k, pe.shape[-1]))
-            acc = ops.ternary_matmul(xq.values, tw)
-            return acc.astype(jnp.float32) * xq.scale * se.reshape(())
-
-        return jax.vmap(one)(x, node["packed"], node["scale"])
+        return ops.qlinear_fused(x, node["packed"], node["scale"])
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                       node["w"].astype(jnp.float32))

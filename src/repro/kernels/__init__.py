@@ -1,6 +1,12 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
   * ``ternary_matmul``    — TINT core: packed-2bit ternary × int8 GEMM
+  * ``qlinear``           — THE projection path: fused absmax barrier →
+                            packed-ternary GEMM → dequant/bias/activation
+                            epilogue (``fused_qlinear``), and the whole
+                            gate·up → re-barrier → down FFN as one launch
+                            (``fused_ffn``), both with an optional
+                            grouped-expert grid axis
   * ``lop_scores``        — LOP screen over the packed 4-bit feature cache
   * ``int8_attention``    — int8 flash prefill + the single-kv-head
                             block-sparse decode micro-kernel
@@ -20,6 +26,6 @@ the full-size dry-run.
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import (decode_attention, flash_prefill, lop_screen,
-                               prefill_attention, sparse_decode,
-                               ternary_matmul)
+from repro.kernels.ops import (decode_attention, ffn_fused, flash_prefill,
+                               lop_screen, prefill_attention, qlinear_fused,
+                               sparse_decode, ternary_matmul)

@@ -52,9 +52,13 @@ Modes (all static):
   * ``return_stats``   — also emit the raw (m, ℓ) softmax stats so the
     SP path can merge shards flash-decoding style without recomputing.
 
-Validated in interpret mode (the container's mandated mode); the
-selection phase uses flat vector ops that Mosaic would want reshaped to
-(sublane, lane) tiles — noted inline where it matters.
+Validated in interpret mode (the container's mandated mode). The
+selection phase is tiled for real-TPU compilation: every op in
+:func:`repro.core.lop.comparison_free_rank` keeps 2-D (sublane, lane)
+shape — the histogram runs as per-bucket lane-reductions over [R, M]
+broadcast-compares and the index-order prefix sums as f32 MXU dots
+against a triangular ones matrix — with ranks bitwise the flat-op
+implementation it replaced.
 """
 
 from __future__ import annotations

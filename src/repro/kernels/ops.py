@@ -32,6 +32,7 @@ from repro.kernels import decode_attention as _dec
 from repro.kernels import int8_attention as _attn
 from repro.kernels import lop_scores as _lop
 from repro.kernels import prefill_attention as _pf
+from repro.kernels import qlinear as _ql
 from repro.kernels import ref as _ref
 from repro.kernels import ternary_matmul as _tmm
 
@@ -86,6 +87,112 @@ def ternary_matmul(x: jax.Array, tw: TernaryWeight, *,
     out = _tmm.ternary_matmul(xp, tw.packed, k, bm=bm, bk=bk, bn=bn,
                               interpret=_interpret())
     return out[:m0].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# Fused TINT projections — THE linear entry points (DESIGN.md
+# §TINT-projection-fusion): the absmax barrier, the packed-ternary GEMM
+# and the dequant/bias/activation epilogue run as ONE dispatch.
+# ---------------------------------------------------------------------------
+
+def _pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is ≤ target (no weight-column padding)."""
+    if n <= target:
+        return n
+    for b in range(target, 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _col_scale(scale: jax.Array, n: int) -> jax.Array:
+    """Per-node γ (scalar or per-column row) → per-column f32 row [.., 1, n]."""
+    return jnp.broadcast_to(scale.astype(jnp.float32),
+                            scale.shape[:-2] + (1, n))
+
+
+def qlinear_fused(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                  bias: jax.Array | None = None, *, act: str | None = None,
+                  impl: str = "auto") -> jax.Array:
+    """f32/bf16 activations [..., k] × packed ternary [k//4, n] → f32 [..., n].
+
+    One dispatch replaces the quantize → ``ternary_matmul`` → dequant
+    chain: the absmax row-quantize runs in VMEM inside the same kernel
+    (the barrier), the epilogue fuses dequant by (x-scale · γ), bias and
+    the optional activation. A 3-D ``packed`` [E, k//4, n] with x
+    [E, C, k] runs the grouped-expert form — expert is a grid axis of
+    the same launch, not a vmap of launches. ``scale`` is the node's γ:
+    scalar [.., 1, 1] or per-column row [.., 1, n] (fused QKV).
+    """
+    expert = packed.ndim == 3
+    k = packed.shape[-2] * 4
+    n = packed.shape[-1]
+    scale_row = _col_scale(scale, n)
+    if _resolve(impl) == "ref":
+        return _ref.qlinear_ref(x, packed, scale_row, bias, act=act)
+
+    if expert:
+        assert x.ndim == 3, x.shape
+        x3, p3, s3 = x.astype(jnp.float32), packed, scale_row
+        b3 = None if bias is None else bias.reshape(bias.shape[0], 1, n)
+    else:
+        x3 = x.reshape(-1, k).astype(jnp.float32)[None]
+        p3, s3 = packed[None], scale_row[None]
+        b3 = None if bias is None else bias.reshape(1, 1, n)
+    m0 = x3.shape[1]
+    bm = min(_tmm.DEFAULT_BM, _round_up(max(m0, 1), 8))
+    pad = (-m0) % bm
+    if pad:
+        x3 = jnp.pad(x3, ((0, 0), (0, pad), (0, 0)))
+    out = _ql.fused_qlinear(x3, p3, s3, b3, bm=bm, bn=_pick_block(n),
+                            act=act, interpret=_interpret())[:, :m0]
+    if expert:
+        return out
+    return out.reshape(*x.shape[:-1], n)
+
+
+def ffn_fused(x: jax.Array, gu_packed: jax.Array, gu_scale: jax.Array,
+              down_packed: jax.Array, down_scale: jax.Array, *,
+              gated: bool, act: str, impl: str = "auto") -> jax.Array:
+    """The whole FFN — act(x·Wg)·(x·Wu) → absmax barrier → ·Wd — as ONE
+    dispatch. x [..., d]; gu_packed [(E,) d//4, 2f] (gate ‖ up columns;
+    [(E,) d//4, f] ungated); down_packed [(E,) f//4, d_out]. A leading
+    expert dim with x [E, C, d] runs every expert of a MoE layer in the
+    same launch (expert = third grid axis). → f32 [..., d_out].
+    """
+    expert = gu_packed.ndim == 3
+    k = gu_packed.shape[-2] * 4
+    f = down_packed.shape[-2] * 4
+    d_out = down_packed.shape[-1]
+    gu_row = _col_scale(gu_scale, gu_packed.shape[-1])
+    down_row = _col_scale(down_scale, d_out)
+    if _resolve(impl) == "ref":
+        return _ref.ffn_fused_ref(x, gu_packed, gu_row, down_packed,
+                                  down_row, gated=gated, act=act)
+
+    if expert:
+        assert x.ndim == 3, x.shape
+        x3, gu3, gs3 = x.astype(jnp.float32), gu_packed, gu_row
+        d3, ds3 = down_packed, down_row
+    else:
+        x3 = x.reshape(-1, k).astype(jnp.float32)[None]
+        gu3, gs3 = gu_packed[None], gu_row[None]
+        d3, ds3 = down_packed[None], down_row[None]
+    m0 = x3.shape[1]
+    bm = min(_tmm.DEFAULT_BM, _round_up(max(m0, 1), 8))
+    pad = (-m0) % bm
+    if pad:
+        x3 = jnp.pad(x3, ((0, 0), (0, pad), (0, 0)))
+    out = _ql.fused_ffn(x3, gu3, gs3, d3, ds3, bm=bm, bf=_pick_block(f),
+                        bn=_pick_block(d_out), act=act, gated=gated,
+                        interpret=_interpret())[:, :m0]
+    if expert:
+        return out
+    return out.reshape(*x.shape[:-1], d_out)
 
 
 # ---------------------------------------------------------------------------

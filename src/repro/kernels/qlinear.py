@@ -1,0 +1,265 @@
+"""Fused TINT projection kernels: absmax barrier → ternary GEMM → epilogue.
+
+The standalone pipeline (jnp absmax quantize → ``ternary_matmul``
+pallas_call → jnp dequant + bias + activation) round-trips HBM three
+times per projection. The paper's system integration (§III) hinges on
+exactly this seam: the absmax barrier *is* the cross-core interface, so
+the quantize belongs inside the same kernel that consumes the int8
+vector, and the nonlinear epilogue overlaps with the linear tiles. These
+kernels run the whole chain in one ``pallas_call``:
+
+``fused_qlinear``
+    grid (E, m, n): at the first n-step of every (expert, m-block) the
+    f32 activation tile is absmax-quantized **in VMEM** (bitwise
+    :func:`repro.core.quantization.quantize` — the same function runs
+    inside the kernel body, so kernel and oracle cannot drift); every
+    n-step then unpacks a 2-bit code tile, runs the int8 MXU dot, and
+    applies the fused epilogue — dequant by (x-scale · per-column γ),
+    bias, optional activation — before the tile ever leaves VMEM.
+
+``fused_ffn``
+    grid (E, m, n_f + n_d): the whole FFN as ONE kernel. Steps j < n_f
+    stream gate/up column blocks (two code streams over the same
+    activation tile), apply act(gate)·up into a [bm, f] VMEM scratch;
+    step j == n_f re-runs the absmax barrier on that scratch (the
+    hidden vector's cross-core interface); steps j ≥ n_f stream the
+    down-projection code blocks against the re-quantized hidden tile.
+    No intermediate touches HBM.
+
+Both kernels take a leading **expert grid axis** (E = 1 for plain
+linears): MoE expert stacks ride the same packed-code stream with the
+expert id as a third grid coordinate, replacing the one-pallas_call-per-
+expert ``vmap`` dispatch.
+
+Tiling is decode-shaped: ``bm`` follows the true row count (multiples of
+8, not 128), so a GEMV-shaped decode step (m = B ≤ 8) stops padding its
+batch rows to an MXU tile — the k-reduction runs as one full-width VMEM
+dot per (m, n) cell, which is what makes the in-kernel barrier exact
+(the row absmax needs the whole vector before any column block starts).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantization import quantize
+from repro.kernels.ternary_matmul import _unpack_codes
+
+DEFAULT_BN = 128
+
+
+def apply_act(y: jax.Array, act: str | None) -> jax.Array:
+    """Fused epilogue nonlinearity (shared by kernel and oracle)."""
+    if act is None:
+        return y
+    if act == "silu":
+        return jax.nn.silu(y)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    if act == "squared_relu":
+        r = jnp.maximum(y, 0.0)
+        return r * r
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _barrier(x, xq_ref, xs_ref):
+    """In-VMEM absmax barrier — THE quantize, running inside the kernel."""
+    qt = quantize(x)
+    xq_ref[...] = qt.values
+    xs_ref[...] = qt.scale
+
+
+# ---------------------------------------------------------------------------
+# fused_qlinear: quantize → GEMM → dequant(+bias)(+act), one pallas_call
+# ---------------------------------------------------------------------------
+
+def _qlinear_kernel(x_ref, wp_ref, sc_ref, *rest, k, act, has_bias):
+    b_ref = rest[0] if has_bias else None
+    o_ref, xq_ref, xs_ref = rest[-3:]
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _quantize_tile():
+        _barrier(x_ref[0], xq_ref, xs_ref)
+
+    w = _unpack_codes(wp_ref[0], k)                    # [k, bn] int8
+    acc = jax.lax.dot(xq_ref[...], w, preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * xs_ref[...] * sc_ref[0]
+    if has_bias:
+        y = y + b_ref[0]
+    o_ref[0] = apply_act(y, act)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "act", "interpret"))
+def fused_qlinear(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                  bias: jax.Array | None = None, *, bm: int,
+                  bn: int = DEFAULT_BN, act: str | None = None,
+                  interpret: bool = False) -> jax.Array:
+    """f32 x [E, m, k] × packed ternary [E, k//4, n] → f32 [E, m, n].
+
+    ``scale`` f32 [E, 1, n] is the per-column weight γ row (a plain node
+    broadcasts its scalar γ; a fused-QKV node carries one γ per segment);
+    ``bias`` f32 [E, 1, n] or None. E = 1 for non-expert projections —
+    the expert axis is the leading grid coordinate of one launch, not a
+    vmap of launches. m and n must be multiples of (bm, bn); ops.py pads
+    m and picks bn to divide n.
+    """
+    e, m, k = x.shape
+    n = packed.shape[-1]
+    assert packed.shape[-2] * 4 == k, (packed.shape, k)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((1, bm, k), lambda e, i, j: (e, i, 0)),
+        pl.BlockSpec((1, k // 4, bn), lambda e, i, j: (e, 0, j)),
+        pl.BlockSpec((1, 1, bn), lambda e, i, j: (e, 0, j)),
+    ]
+    operands = [x, packed, scale]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, 1, bn), lambda e, i, j: (e, 0, j)))
+        operands.append(bias)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        functools.partial(_qlinear_kernel, k=k, act=act, has_bias=has_bias),
+        grid=(e, m // bm, n // bn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, k), jnp.int8),       # barriered activation tile
+            pltpu.VMEM((bm, 1), jnp.float32),    # its absmax scales
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# fused_ffn: act(x·Wg)·(x·Wu) → barrier → ·Wd, one pallas_call
+# ---------------------------------------------------------------------------
+
+def _ffn_kernel(x_ref, up_ref, usc_ref, *rest, k, f, bf, nf, nd, act,
+                gated):
+    if gated:
+        g_ref, gsc_ref = rest[0], rest[1]
+        rest = rest[2:]
+    d_ref, dsc_ref = rest[0], rest[1]
+    o_ref, xq_ref, xs_ref, h_ref, hq_ref, hs_ref = rest[2:]
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _quantize_x():
+        _barrier(x_ref[0], xq_ref, xs_ref)
+
+    # ---- gate/up phase: one hidden column block per step, into scratch ----
+    @pl.when(j < nf)
+    def _gate_up():
+        uw = _unpack_codes(up_ref[0], k)
+        u = jax.lax.dot(xq_ref[...], uw, preferred_element_type=jnp.int32)
+        u = u.astype(jnp.float32) * xs_ref[...] * usc_ref[0]
+        if gated:
+            gw = _unpack_codes(g_ref[0], k)
+            g = jax.lax.dot(xq_ref[...], gw,
+                            preferred_element_type=jnp.int32)
+            g = g.astype(jnp.float32) * xs_ref[...] * gsc_ref[0]
+            hblk = apply_act(g, act) * u
+        else:
+            hblk = apply_act(u, act)
+        h_ref[:, pl.ds(j * bf, bf)] = hblk
+
+    # ---- the hidden vector's own absmax barrier, still in VMEM ----
+    @pl.when(j == nf)
+    def _quantize_h():
+        _barrier(h_ref[...], hq_ref, hs_ref)
+
+    # ---- down phase: re-quantized hidden tile × down code stream ----
+    @pl.when(j >= nf)
+    def _down():
+        dw = _unpack_codes(d_ref[0], f)
+        y = jax.lax.dot(hq_ref[...], dw, preferred_element_type=jnp.int32)
+        o_ref[0] = y.astype(jnp.float32) * hs_ref[...] * dsc_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf", "bn", "act",
+                                             "gated", "interpret"))
+def fused_ffn(x: jax.Array, gu_packed: jax.Array, gu_scale: jax.Array,
+              down_packed: jax.Array, down_scale: jax.Array, *, bm: int,
+              bf: int, bn: int, act: str, gated: bool,
+              interpret: bool = False) -> jax.Array:
+    """The whole FFN as one launch: x [E, m, k] → f32 [E, m, d_out].
+
+    gu_packed   uint8 [E, k//4, 2f] (gate cols ‖ up cols; [E, k//4, f]
+                when not gated) — passed twice with offset index maps so
+                a step's gate and up blocks stream from one array
+    gu_scale    f32   [E, 1, 2f]   per-column γ rows (per-stream scalars
+                broadcast at quantize_params time)
+    down_packed uint8 [E, f//4, d_out]; down_scale f32 [E, 1, d_out]
+
+    Grid (E, m//bm, f//bf + d_out//bn). The [bm, f] hidden scratch never
+    leaves VMEM; its absmax barrier runs at the first down step.
+    """
+    e, m, k = x.shape
+    f = down_packed.shape[-2] * 4
+    d_out = down_packed.shape[-1]
+    assert gu_packed.shape[-2] * 4 == k, (gu_packed.shape, k)
+    assert gu_packed.shape[-1] == (2 * f if gated else f), \
+        (gu_packed.shape, f, gated)
+    assert m % bm == 0 and f % bf == 0 and d_out % bn == 0, \
+        (m, f, d_out, bm, bf, bn)
+    nf, nd = f // bf, d_out // bn
+
+    def _up_idx(e, i, j):
+        base = (f // bf) if gated else 0
+        return (e, 0, base + jnp.minimum(j, nf - 1))
+
+    def _down_idx(e, i, j):
+        return (e, 0, jnp.clip(j - nf, 0, nd - 1))
+
+    in_specs = [
+        pl.BlockSpec((1, bm, k), lambda e, i, j: (e, i, 0)),
+        pl.BlockSpec((1, k // 4, bf), _up_idx),
+        pl.BlockSpec((1, 1, bf), _up_idx),
+    ]
+    operands = [x, gu_packed, gu_scale]
+    if gated:
+        gate_idx = lambda e, i, j: (e, 0, jnp.minimum(j, nf - 1))
+        in_specs += [pl.BlockSpec((1, k // 4, bf), gate_idx),
+                     pl.BlockSpec((1, 1, bf), gate_idx)]
+        operands += [gu_packed, gu_scale]
+    in_specs += [pl.BlockSpec((1, f // 4, bn), _down_idx),
+                 pl.BlockSpec((1, 1, bn), _down_idx)]
+    operands += [down_packed, down_scale]
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel, k=k, f=f, bf=bf, nf=nf, nd=nd,
+                          act=act, gated=gated),
+        grid=(e, m // bm, nf + nd),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), _down_idx),
+        out_shape=jax.ShapeDtypeStruct((e, m, d_out), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, k), jnp.int8),       # barriered activation
+            pltpu.VMEM((bm, 1), jnp.float32),
+            pltpu.VMEM((bm, f), jnp.float32),    # hidden act(g)·u scratch
+            pltpu.VMEM((bm, f), jnp.int8),       # its barriered form
+            pltpu.VMEM((bm, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(*operands)

@@ -19,6 +19,65 @@ def ternary_matmul_ref(x: jax.Array, packed: jax.Array,
     return jax.lax.dot(x, w, preferred_element_type=jnp.int32)
 
 
+def _unpack_any(packed: jax.Array, k: int) -> jax.Array:
+    """unpack_ternary over optional leading (expert/layer) dims."""
+    if packed.ndim == 2:
+        return unpack_ternary(packed, k)
+    lead = packed.shape[:-2]
+    flat = packed.reshape((-1,) + packed.shape[-2:])
+    w = jax.vmap(lambda p: unpack_ternary(p, k))(flat)
+    return w.reshape(lead + (k, packed.shape[-1]))
+
+
+def qlinear_ref(x, packed, scale, bias=None, *, act=None):
+    """Oracle of the fused TINT projection (kernels/qlinear.fused_qlinear).
+
+    The unfused chain written out: absmax barrier → integer GEMM →
+    dequant by (x-scale · per-column γ) → bias → activation. x f32/bf16
+    [..., k] with packed [k//4, n], or the grouped-expert form x
+    [E, C, k] with packed [E, k//4, n] — the latter replaces the
+    per-expert vmap with one batched contraction. scale f32 [..., 1, n]
+    per-column γ row. → f32 [..., n].
+    """
+    from repro.core.quantization import quantize
+    from repro.kernels.qlinear import apply_act
+
+    k = packed.shape[-2] * 4
+    xq = quantize(x)
+    w = _unpack_any(packed, k)
+    if packed.ndim == 2:
+        acc = jax.lax.dot_general(
+            xq.values, w,
+            dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:
+        acc = jnp.einsum("eck,ekn->ecn", xq.values, w,
+                         preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * xq.scale * scale
+    if bias is not None:
+        y = y + bias
+    return apply_act(y, act)
+
+
+def ffn_fused_ref(x, gu_packed, gu_scale, down_packed, down_scale, *,
+                  gated: bool, act: str):
+    """Oracle of the one-launch FFN (kernels/qlinear.fused_ffn).
+
+    h = act(x·Wg)·(x·Wu) (or act(x·Wu) ungated), then the hidden vector
+    crosses its own absmax barrier before the down projection — exactly
+    the unfused silu(qlinear(g,x))·qlinear(u,x) → qlinear(d,h) chain.
+    """
+    from repro.kernels.qlinear import apply_act
+
+    f = down_packed.shape[-2] * 4
+    h_all = qlinear_ref(x, gu_packed, gu_scale)
+    if gated:
+        h = apply_act(h_all[..., :f], act) * h_all[..., f:]
+    else:
+        h = apply_act(h_all, act)
+    return qlinear_ref(h, down_packed, down_scale)
+
+
 def lop_scores_ref(q_pot: jax.Array, packed_feat: jax.Array) -> jax.Array:
     """Surrogate scores from the packed feature cache.
 

@@ -63,18 +63,37 @@ def abstract_params(cfg):
 
 
 def qparam_pspecs(pspecs, qparams_sds):
-    """Map original param pspecs onto the quantized (packed) tree."""
+    """Map original param pspecs onto the quantized (packed/fused) tree.
+
+    Fused serving nodes (DESIGN.md §TINT-projection-fusion) inherit the
+    spec of a representative source projection: ``wqkv`` ← ``wq``,
+    ``wkv`` ← ``wk``, the whole-FFN gu/down streams ← ``w_up``/
+    ``w_down``. Scales replicate; segment sizes that no longer divide
+    the mesh axis fall back to replicated via ``_shardings``.
+    """
+    def wspec(sp):
+        return sp["w"] if isinstance(sp, dict) and "w" in sp else sp
+
     def walk(sp, qp):
         if isinstance(qp, dict) and "packed" in qp:
-            wspec = sp["w"] if isinstance(sp, dict) and "w" in sp else sp
-            out = {"packed": wspec,
+            out = {"packed": wspec(sp),
                    "scale": (None,) * qp["scale"].ndim}
             if "b" in qp:
-                out["b"] = sp["b"] if isinstance(sp, dict) else \
-                    (None,) * qp["b"].ndim
+                out["b"] = sp["b"] if isinstance(sp, dict) and "b" in sp \
+                    else (None,) * qp["b"].ndim
+            return out
+        if isinstance(qp, dict) and "gu_packed" in qp:
+            out = {"gu_packed": wspec(sp["w_up"]),
+                   "gu_scale": (None,) * qp["gu_scale"].ndim,
+                   "down_packed": wspec(sp["w_down"]),
+                   "down_scale": (None,) * qp["down_scale"].ndim}
+            for k, v in qp.items():
+                if k not in out:
+                    out[k] = walk(sp[k], v)
             return out
         if isinstance(qp, dict):
-            return {k: walk(sp[k], v) for k, v in qp.items()}
+            src = {"wqkv": "wq", "wkv": "wk"}
+            return {k: walk(sp[src.get(k, k)], v) for k, v in qp.items()}
         return sp
 
     return walk(pspecs, qparams_sds)

@@ -37,8 +37,10 @@ def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
 def linear_apply(params, x, *, quant: str):
     """Linear dispatch on param format:
 
-      * serving nodes (``{"packed", "scale"}``) → integer-domain qlinear
-        (so the same model code serves quantized weights),
+      * serving nodes (``{"packed", "scale"}``) → the fused TINT entry
+        (absmax barrier + packed-ternary GEMM + dequant epilogue in ONE
+        dispatch, DESIGN.md §TINT-projection-fusion — so the same model
+        code serves quantized weights),
       * training nodes (``{"w"}``) → QAT BitLinear (``quant="ternary"``)
         or plain matmul (``"bf16"``).
     """

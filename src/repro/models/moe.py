@@ -16,7 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.qlinear import is_packed, qlinear_expert
+from repro.core.qlinear import (ffn_node_apply, is_fused_ffn, is_packed,
+                                qlinear_expert)
 from repro.core.ternary import ste_ternary
 from repro.distributed.partitioning import shard
 from repro.models.layers import linear_apply, linear_init
@@ -40,6 +41,11 @@ def ffn_init(key, cfg):
 
 
 def ffn_apply(cfg, p, x):
+    if is_fused_ffn(p):
+        # serving format: the whole FFN (gate·up → in-VMEM absmax barrier
+        # → down) is ONE fused dispatch — bitwise the unfused chain below
+        return ffn_node_apply(p, x, gated=cfg.gated_ffn,
+                              act="silu" if cfg.gated_ffn else "gelu")
     if cfg.gated_ffn:
         h = jax.nn.silu(linear_apply(p["w_gate"], x, quant=cfg.quant))
         h = h * linear_apply(p["w_up"], x, quant=cfg.quant)
@@ -141,13 +147,19 @@ def _dispatch_group(cfg, p, x):
         * keep[..., None, None].astype(x.dtype), axis=1)          # weighted
 
     xe = jnp.einsum("tec,td->ecd", disp, x)                       # [E, cap, d]
-    if cfg.gated_ffn:
-        h = jax.nn.silu(_expert_linear(p["w_gate"], xe, cfg.quant))
-        h = h * _expert_linear(p["w_up"], xe, cfg.quant)
+    if is_fused_ffn(p):
+        # serving format: every expert's gate·up → barrier → down runs in
+        # ONE grouped dispatch (expert = grid axis of the fused kernel)
+        ye = ffn_node_apply(p, xe, gated=cfg.gated_ffn,
+                            act="silu" if cfg.gated_ffn else "gelu")
     else:
-        h = jax.nn.gelu(_expert_linear(p["w_up"], xe, cfg.quant))
-    h = shard(h, None, None, "tp")
-    ye = _expert_linear(p["w_down"], h, cfg.quant)                # [E, cap, d]
+        if cfg.gated_ffn:
+            h = jax.nn.silu(_expert_linear(p["w_gate"], xe, cfg.quant))
+            h = h * _expert_linear(p["w_up"], xe, cfg.quant)
+        else:
+            h = jax.nn.gelu(_expert_linear(p["w_up"], xe, cfg.quant))
+        h = shard(h, None, None, "tp")
+        ye = _expert_linear(p["w_down"], h, cfg.quant)            # [E, cap, d]
     y = jnp.einsum("tec,ecd->td", comb, ye)
 
     # load-balancing aux loss (Switch-style)

@@ -20,6 +20,17 @@ This is the paper's full pipeline on TPU terms (DESIGN.md §2):
               batched head-pipelined kernel spanning every (batch,
               kv-head) lane — then BitLinear FFN/MoE.
 
+Projections dispatch through the fused TINT entries (DESIGN.md
+§TINT-projection-fusion): a decoder layer's non-attention hot path is
+THREE dispatches — fused QKV (one packed weight, per-column dequant),
+the O projection, and the whole FFN (gate·up → in-VMEM re-barrier →
+down) — each running the absmax barrier, the packed-ternary GEMM and
+the epilogue inside one kernel, so no f32 activation or int32
+accumulator round-trips HBM between them. MoE layers run every
+expert's FFN as ONE grouped dispatch (expert = grid axis). The fused
+entry owns the barrier dtype: attention outputs feed ``qlinear``
+directly, with no caller-side ``astype`` re-cast.
+
 Attention-free layers (Mamba/RWKV) carry recurrent state instead. With an
 active mesh the decode attention runs the SP quota-sharded core
 (:mod:`repro.distributed.sp_decode`) — the cache's token axis lives sharded
@@ -49,7 +60,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import resolve_decode_flags
 from repro.core.lop import lop_features, pack_features
-from repro.core.qlinear import qlinear
+from repro.core.qlinear import qlinear, qlinear_split
 from repro.core.quantization import quantize
 from repro.distributed.partitioning import current_mesh, shard
 from repro.kernels import ops
@@ -95,9 +106,18 @@ def _project_qkv(cfg, lp, h, src=None):
     b, s, _ = h.shape
     src = h if src is None else src
     skv = src.shape[1]
-    q = qlinear(lp["wq"], h).reshape(b, s, cfg.n_heads, cfg.hd)
-    k = qlinear(lp["wk"], src).reshape(b, skv, cfg.n_kv_heads, cfg.hd)
-    v = qlinear(lp["wv"], src).reshape(b, skv, cfg.n_kv_heads, cfg.hd)
+    if "wqkv" in lp:
+        # fused-at-deployment QKV: ONE dispatch (barrier + ternary GEMM +
+        # per-column dequant inside the kernel), split is a free view
+        q, k, v = qlinear_split(lp["wqkv"], h,
+                                (cfg.q_dim, cfg.kv_dim, cfg.kv_dim))
+    else:
+        q = qlinear(lp["wq"], h)
+        k = qlinear(lp["wk"], src)
+        v = qlinear(lp["wv"], src)
+    q = q.reshape(b, s, cfg.n_heads, cfg.hd)
+    k = k.reshape(b, skv, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, skv, cfg.n_kv_heads, cfg.hd)
     return q, k, v
 
 
@@ -158,7 +178,7 @@ def attn_prefill(cfg, lp, h, *, capacity: int):
         jnp.full((b,), s, jnp.int32), causal=True,
         window=cfg.swa_window, int8_logits=bool(cfg.int8_logits))
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
-    out = qlinear(lp["wo"], o.astype(jnp.float32))
+    out = qlinear(lp["wo"], o)
     return out, cache_l
 
 
@@ -212,15 +232,24 @@ def attn_prefill_chunk(cfg, lp, h, cl, *, start, kv_len):
         q_offset=start, causal=True, window=cfg.swa_window,
         int8_logits=bool(cfg.int8_logits))
     o = o.transpose(0, 2, 1, 3).reshape(b, c, cfg.q_dim)
-    out = qlinear(lp["wo"], o.astype(jnp.float32))
+    out = qlinear(lp["wo"], o)
     return out, cl
 
 
 def build_cross_cache(cfg, lp, enc, capacity: int):
-    """Quantize encoder memory through this layer's K/V projections."""
+    """Quantize encoder memory through this layer's K/V projections.
+
+    A fused ``wkv`` node (quantize-time KV fusion for cross-attention —
+    both consume the encoder memory) projects K and V in one dispatch.
+    """
     b, s, _ = enc.shape
-    k = qlinear(lp["wk"], enc).reshape(b, s, cfg.n_kv_heads, cfg.hd)
-    v = qlinear(lp["wv"], enc).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    if "wkv" in lp:
+        k, v = qlinear_split(lp["wkv"], enc, (cfg.kv_dim, cfg.kv_dim))
+    else:
+        k = qlinear(lp["wk"], enc)
+        v = qlinear(lp["wv"], enc)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
     ki, vi, ksc, vsc, feat = _quantize_kv(k, v)
     return {
         "k": _pad_cache(ki, capacity), "v": _pad_cache(vi, capacity),
@@ -248,7 +277,7 @@ def cross_attn_prefill(cfg, lp, h, cross_cache, cross_len, kv_max=None):
         cross_cache["k_scale"][:, :, :m], cross_cache["v_scale"][:, :, :m],
         cross_len, causal=False, int8_logits=bool(cfg.int8_logits))
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
-    return qlinear(lp["wo"], o.astype(jnp.float32))
+    return qlinear(lp["wo"], o)
 
 
 # ===========================================================================
@@ -342,7 +371,7 @@ def attn_decode(cfg, lp, h, cl, lengths, *, use_lop=True, sp_axes=None,
                                    use_lop=use_lop and cfg.use_lop)
     if active is not None:
         out = jnp.where(active[:, None, None], out, 0.0)
-    out = qlinear(lp["wo"], out.reshape(b, 1, cfg.q_dim).astype(jnp.float32))
+    out = qlinear(lp["wo"], out.reshape(b, 1, cfg.q_dim))
     return out, cl
 
 
@@ -361,7 +390,7 @@ def cross_attn_decode(cfg, lp, h, cross_cl, cross_len, *, use_lop=True,
     else:
         out = lop_decode_attention(cfg, qi, qsc, cross_cl, cross_len,
                                    window=0, use_lop=use_lop and cfg.use_lop)
-    return qlinear(lp["wo"], out.reshape(b, 1, cfg.q_dim).astype(jnp.float32))
+    return qlinear(lp["wo"], out.reshape(b, 1, cfg.q_dim))
 
 
 # ===========================================================================

@@ -7,17 +7,44 @@ tensors stay high-precision (BitNet's convention), as do projections whose
 reduction dim is too small to pack (< 4-aligned, e.g. Mamba's tiny dt_proj
 in reduced configs).
 
+Projection-group fusion (DESIGN.md §TINT-projection-fusion)
+-----------------------------------------------------------
+Deployment is also where projection groups fuse into single packed
+weights so one kernel dispatch replaces several:
+
+  * self-attention ``{"wq","wk","wv","wo"}`` → ``{"wqkv", "wo"}`` — the
+    QKV codes concatenate along the output axis; the node's ``scale`` is
+    a per-column γ row (each column keeps its own projection's scalar γ,
+    so the fused dequant is bitwise the per-projection dequant),
+  * cross-attention ``xattn`` → ``{"wq", "wkv", "wo"}`` (K and V both
+    consume the encoder memory; Q consumes the decoder stream, so it
+    stays its own dispatch),
+  * FFN ``{"w_gate","w_up","w_down"}`` → ``{"gu_packed", "gu_scale",
+    "down_packed", "down_scale"}`` — gate‖up codes share one stream and
+    the down projection rides the SAME launch
+    (:func:`repro.kernels.ops.ffn_fused`), hidden state never touching
+    HBM,
+  * MoE expert stacks [E, k, n] fuse the same way with a leading expert
+    axis — the whole MoE layer's expert FFNs are ONE grouped dispatch.
+
+``fuse=False`` keeps the legacy one-node-per-projection format (every
+consumer still accepts it) — the dispatch-count baseline in
+benchmarks/kernels_micro.py and the fused-vs-unfused equivalence tests.
+
 Stacked layer weights [L, k, n] pack to [L, k//4, n] (scale [L, 1, 1]) so
 the serving stack still scans. Packed dicts carry no static shape metadata
-(ints would become scan-traced leaves); ``k`` is re-derived from
-``packed.shape`` at apply time (see :mod:`repro.core.qlinear`).
+(ints would become scan-traced leaves); ``k`` and segment widths are
+re-derived from ``packed.shape`` / the config at apply time (see
+:mod:`repro.core.qlinear`).
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.core.qlinear import is_packed, qlinear, qlinear_expert  # noqa: F401 (re-export)
+from repro.core.qlinear import (is_fused_ffn, is_packed, qlinear,  # noqa: F401 (re-export)
+                                qlinear_expert)
 from repro.core.ternary import pack_ternary, ternary_quantize
 
 # param-path names that stay high-precision even when 2-D
@@ -37,26 +64,134 @@ def _quantize_linear(w: jax.Array):
         return pack_ternary(wt), gamma.reshape(())
 
     packed, scale = jax.vmap(one)(w2)
-    return {"packed": packed.reshape(*lead, k // 4, n),
-            "scale": scale.reshape(*lead, 1, 1)}
+    out = {"packed": packed.reshape(*lead, k // 4, n),
+           "scale": scale.reshape(*lead, 1, 1)}
+    _check_packed(out, k)
+    return out
+
+
+def _check_packed(node, k: int) -> None:
+    """Deployment-format invariants the fused kernels rely on: packed k
+    is 4-aligned uint8 codes; scales are one scalar γ per code stream
+    (a fused node broadcasts those scalars to a per-column row)."""
+    n = node["packed"].shape[-1]
+    assert node["packed"].dtype == jnp.uint8, node["packed"].dtype
+    assert k % 4 == 0 and node["packed"].shape[-2] * 4 == k, \
+        (node["packed"].shape, k)
+    s = node["scale"]
+    assert s.dtype == jnp.float32 and s.shape[-2] == 1 \
+        and s.shape[-1] in (1, n), (s.dtype, s.shape, n)
+
+
+def _concat_packed(parts):
+    """Per-projection packed nodes → one fused node, γ per column."""
+    packed = jnp.concatenate([p["packed"] for p in parts], axis=-1)
+    scale = jnp.concatenate(
+        [jnp.broadcast_to(p["scale"],
+                          p["scale"].shape[:-1] + (p["packed"].shape[-1],))
+         for p in parts], axis=-1)
+    out = {"packed": packed, "scale": scale}
+    _check_packed(out, packed.shape[-2] * 4)
+    return out
 
 
 def _eligible(name: str, k: int, quant: str) -> bool:
     return quant == "ternary" and name not in _KEEP_FP and k % 4 == 0 and k >= 16
 
 
-def quantize_params(cfg, params):
-    """Training param tree → serving tree (same structure, linears packed)."""
+def _quantize_node(name: str, node, quant: str):
+    """One training linear dict {"w", "b"?} → serving node (packed or fp)."""
+    if _eligible(name, node["w"].shape[-2], quant):
+        out = _quantize_linear(node["w"])
+        if "b" in node:
+            out["b"] = node["b"]
+        return out
+    return dict(node)
+
+
+def _fuse_attn(node, quant: str, fuse_q: bool):
+    """Attention dict → fused serving dict, or None when ineligible."""
+    names = ("wq", "wk", "wv") if fuse_q else ("wk", "wv")
+    subs = [node.get(nm) for nm in names]
+    if not all(isinstance(s, dict) and "w" in s
+               and not isinstance(s["w"], dict) for s in subs):
+        return None
+    k = subs[0]["w"].shape[-2]
+    if not all(s["w"].shape[-2] == k and _eligible(nm, k, quant)
+               for nm, s in zip(names, subs)):
+        return None
+    has_b = ["b" in s for s in subs]
+    if any(has_b) != all(has_b):
+        return None
+    fused = _concat_packed([_quantize_linear(s["w"]) for s in subs])
+    if all(has_b):
+        fused["b"] = jnp.concatenate([s["b"] for s in subs], axis=-1)
+    out = {("wqkv" if fuse_q else "wkv"): fused}
+    if not fuse_q:
+        out["wq"] = _quantize_node("wq", node["wq"], quant)
+    out["wo"] = _quantize_node("wo", node["wo"], quant)
+    return out
+
+
+def _fuse_ffn(node, quant: str):
+    """FFN dict (dense {"w_*": {"w"}} or MoE raw [E, k, n] stacks + router)
+    → whole-FFN serving node, or None when ineligible."""
+    def _w(nm):
+        sub = node.get(nm)
+        if isinstance(sub, dict):
+            return sub["w"] if "w" in sub and "b" not in sub else None
+        return sub
+    wu, wd = _w("w_up"), _w("w_down")
+    if wu is None or wd is None:
+        return None
+    gated = "w_gate" in node
+    wg = _w("w_gate") if gated else None
+    if gated and wg is None:
+        return None
+    d, f = wu.shape[-2], wd.shape[-2]
+    if not (_eligible("w_up", d, quant) and _eligible("w_down", f, quant)
+            and wu.shape[-1] == f and (not gated or wg.shape[-2:] ==
+                                       wu.shape[-2:])):
+        return None
+    parts = ([_quantize_linear(wg)] if gated else []) \
+        + [_quantize_linear(wu)]
+    gu = _concat_packed(parts)
+    down = _quantize_linear(wd)
+    out = {key: val for key, val in node.items() if key not in
+           ("w_gate", "w_up", "w_down")}           # router etc. stay fp
+    out.update({"gu_packed": gu["packed"], "gu_scale": gu["scale"],
+                "down_packed": down["packed"],
+                "down_scale": down["scale"]})
+    return out
+
+
+def quantize_params(cfg, params, *, fuse: bool = True):
+    """Training param tree → serving tree (same structure, linears packed).
+
+    ``fuse=True`` (the default) additionally fuses projection groups —
+    QKV / cross-KV / gate·up·down / grouped experts — into single packed
+    streams so each group is one kernel dispatch (module docstring).
+    """
     def walk(path, node):
         if isinstance(node, dict):
-            if "w" in node and not isinstance(node["w"], dict):
-                name = path[-1] if path else ""
-                if _eligible(name, node["w"].shape[-2], cfg.quant):
-                    out = _quantize_linear(node["w"])
-                    if "b" in node:
-                        out["b"] = node["b"]
+            name = path[-1] if path else ""
+            if fuse and name in ("attn", "xattn"):
+                fused = _fuse_attn(node, cfg.quant, fuse_q=name == "attn")
+                if fused is not None:
+                    # unrecognized attention extras (q/k norms, sinks, …)
+                    # walk through unchanged-structure quantization
+                    out = {key: walk(path + (key,), val)
+                           for key, val in node.items()
+                           if key not in ("wq", "wk", "wv", "wo")}
+                    out.update(fused)
                     return out
-                return dict(node)
+            if fuse and "w_up" in node and "w_down" in node:
+                fused = _fuse_ffn(node, cfg.quant)
+                if fused is not None:
+                    return fused
+            if "w" in node and not isinstance(node["w"], dict):
+                return _quantize_node(path[-1] if path else "", node,
+                                      cfg.quant)
             return {key: walk(path + (key,), val)
                     for key, val in node.items()}
         # raw arrays: MoE expert stacks [L, E, k, n] quantize as well

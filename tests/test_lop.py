@@ -27,6 +27,55 @@ def test_feature_cache_is_half_bytes(rng):
     assert packed.size * packed.dtype.itemsize == k.size // 2
 
 
+def _rank_flat_reference(s, k, n_buckets):
+    """The pre-retile flat-vector-op selector (rank-3 one-hot histogram +
+    plain jnp.cumsum) — kept verbatim as the oracle the Mosaic-tiled
+    implementation in core.lop must match bitwise."""
+    m = s.shape[-1]
+    finite = jnp.isfinite(s)
+    smin = jnp.min(jnp.where(finite, s, jnp.inf), -1, keepdims=True)
+    smax = jnp.max(jnp.where(finite, s, -jnp.inf), -1, keepdims=True)
+    span = jnp.maximum(smax - smin, 1e-9)
+    bucket = jnp.clip(((s - smin) / span * n_buckets).astype(jnp.int32),
+                      0, n_buckets - 1)
+    bucket = jnp.where(finite, bucket, -1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_buckets), 2)
+    hist = jnp.sum((bucket[:, :, None] == bins).astype(jnp.int32), axis=1)
+    cum_hi = jnp.cumsum(hist[:, ::-1], -1)[:, ::-1]
+    reach = cum_hi >= k
+    bin_ids = jax.lax.broadcasted_iota(jnp.int32, reach.shape, 1)
+    cut = jnp.where(jnp.any(reach, -1, keepdims=True),
+                    jnp.max(jnp.where(reach, bin_ids, -1), -1, keepdims=True),
+                    0)
+    above = bucket > cut
+    at_cut = bucket == cut
+    n_above = jnp.sum(above.astype(jnp.int32), -1, keepdims=True)
+    rank_above = jnp.cumsum(above.astype(jnp.int32), -1) - 1
+    rank_cut = n_above + jnp.cumsum(at_cut.astype(jnp.int32), -1) - 1
+    big = m + k + 1
+    rank = jnp.where(above, rank_above, jnp.where(at_cut, rank_cut, big))
+    return jnp.where(rank < k, rank, big).astype(jnp.int32)
+
+
+def test_retiled_rank_matches_flat_reference(rng):
+    """The (sublane, lane) 2-D retile of comparison_free_rank — per-bucket
+    lane-reduction histogram + triangular-dot prefix sums — must emit
+    bitwise the ranks of the flat-op version it replaced (the kernel and
+    the jnp oracle both derive their candidate sets from it)."""
+    from repro.core.lop import comparison_free_rank
+    for r, m, k in [(1, 64, 8), (6, 128, 5), (8, 256, 32), (3, 128, 128)]:
+        s = rng.standard_normal((r, m)).astype(np.float32) * 10
+        s[rng.random((r, m)) < 0.1] = -np.inf       # invalid entries
+        s[0, : m // 4] = s[0, 0]                    # heavy ties
+        got = comparison_free_rank(jnp.asarray(s), k)
+        want = _rank_flat_reference(jnp.asarray(s), k, 64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # fully-invalid rows select nothing
+    s = np.full((2, 64), -np.inf, np.float32)
+    got = np.asarray(comparison_free_rank(jnp.asarray(s), 4))
+    assert (got > 64).all()
+
+
 def test_comparison_free_topk_recall(rng):
     hits = 0
     trials = 20

@@ -275,13 +275,24 @@ def test_quantize_params_packs_linears():
     cfg = _reduced("bitnet-3b")
     params, _ = init_params(cfg, jax.random.PRNGKey(0))
     qp = quantize_params(cfg, params)
-    attn = qp["layers"]["attn"]["wq"]
-    assert "packed" in attn and attn["packed"].dtype == jnp.uint8
+    # QKV fuses into ONE packed weight with a per-column γ row
+    wqkv = qp["layers"]["attn"]["wqkv"]
+    assert "packed" in wqkv and wqkv["packed"].dtype == jnp.uint8
     # packed is 4x smaller on the reduction dim
-    assert attn["packed"].shape[-2] * 4 == params["layers"]["attn"]["wq"][
+    assert wqkv["packed"].shape[-2] * 4 == params["layers"]["attn"]["wq"][
         "w"].shape[-2]
+    assert wqkv["packed"].shape[-1] == cfg.q_dim + 2 * cfg.kv_dim
+    assert wqkv["scale"].shape[-2:] == (1, cfg.q_dim + 2 * cfg.kv_dim)
+    # the FFN becomes one whole-FFN node (gate‖up stream + down stream)
+    ffn = qp["layers"]["ffn"]
+    assert ffn["gu_packed"].shape[-1] == 2 * cfg.d_ff
+    assert ffn["down_packed"].shape[-2] * 4 == cfg.d_ff
     # head/embed stay fp
     assert "w" in qp["head"] and "table" in qp["embed"]
+    # fuse=False keeps the legacy one-node-per-projection format
+    qp_legacy = quantize_params(cfg, params, fuse=False)
+    attn = qp_legacy["layers"]["attn"]["wq"]
+    assert "packed" in attn and attn["scale"].shape[-2:] == (1, 1)
     # bf16 config keeps everything fp
     qp_fp = quantize_params(cfg.replace(quant="bf16"), params)
     assert "w" in qp_fp["layers"]["attn"]["wq"]
