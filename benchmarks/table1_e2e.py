@@ -108,6 +108,26 @@ def run():
                  f"(×{util_cb / util_lock:.2f} vs lockstep on the same "
                  "mixed-length traffic)"))
 
+    # inter-token latency alongside TTFT (the serving-API telemetry,
+    # launch/serve.py reports the measured analogues): p50 is the pure
+    # bandwidth-bound decode step; p99 is a step that shares its serve
+    # cycle with one chunked-prefill chunk (the interleaving tax a lane
+    # pays while another prompt prefills — DESIGN.md §Chunked-prefill)
+    chunk = cfg.lop_block                       # chunk_tokens default
+    bpt1 = decode_bytes_per_token(cfg, n_params, m, 64, with_lop=True)
+    step_s = bpt1 * 64 / HBM_BW_V5E             # whole-batch decode step
+    chunk_s = 2 * n_params * chunk / PEAK_INT8_V5E
+    rows.append(("table1/v5e_itl_p50_ms", step_s * 1e3,
+                 "bandwidth-bound decode step (batch 64, LOP)"))
+    rows.append(("table1/v5e_itl_p99_ms", (step_s + chunk_s) * 1e3,
+                 f"decode step sharing its cycle with a {chunk}-token "
+                 "prefill chunk"))
+    n_chunks = -(-64 // chunk)
+    rows.append(("table1/v5e_ttft64_chunked_s",
+                 n_chunks * (step_s + chunk_s),
+                 f"64-token prompt TTFT under interleaving ({n_chunks} "
+                 "chunked serve cycles; paper ASIC prefill64: 0.88 s)"))
+
     # slot-paged KV memory per lane (capacity M, int8 K/V + scales + feat)
     kv_lane = cfg.n_layers * cfg.n_kv_heads * m * (2 * cfg.hd    # K+V int8
                                                    + 8           # scales f32

@@ -8,6 +8,10 @@ wall time and the modeled KV traffic — the serving-side view of Fig. 8.
 Part 2 pushes a mixed-prompt-length request stream through the slot-paged
 continuous-batching scheduler and checks every request against its solo
 lockstep run — the serving-engine view of the same screen.
+Part 3 exercises the typed serving API (DESIGN.md §Serving-API): seeded
+temperature/top-k sampling through the continuous-batching pool, with
+every request verified token-identical against its lockstep replay and
+inter-token-latency percentiles reported.
 """
 import argparse
 import time
@@ -77,6 +81,22 @@ def continuous_batching_demo(cfg, args):
           f"{out['latency_p99'] * 1e3:.0f} ms")
 
 
+def sampled_api_demo(cfg, args):
+    """Typed-API part: per-request SamplingParams through the pool, each
+    request verified against its same-seed lockstep replay."""
+    from repro.serving.api import SamplingParams
+    out = serve_loop(cfg, n_slots=args.batch, n_requests=args.batch,
+                     min_prompt=max(args.prompt_len // 4, 4),
+                     max_prompt=args.prompt_len, gen=args.gen, verify=True,
+                     sampling=SamplingParams(temperature=0.8, top_k=8,
+                                             seed=7))
+    agree = len(out["results"]) - len(out["mismatched_rids"])
+    print(f"sampled serving (T=0.8 top_k=8, per-request seeds): "
+          f"{agree}/{len(out['results'])} pool == same-seed lockstep; "
+          f"itl p50 {out['itl_p50'] * 1e3:.0f} ms, p99 "
+          f"{out['itl_p99'] * 1e3:.0f} ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mistral-nemo-12b")
@@ -90,6 +110,7 @@ def main():
     qp = quantize_params(base, params)
     keep_ablation(base, qp, args)
     continuous_batching_demo(base, args)
+    sampled_api_demo(base, args)
 
 
 if __name__ == "__main__":

@@ -6,10 +6,11 @@
 # (property-based modules importorskip hypothesis); install
 # requirements-dev.txt to run the full property suite.
 #
-# After the main suite, the kernel test modules re-run under BOTH dispatch
-# arms — REPRO_KERNEL_IMPL=ref (jnp oracles) and REPRO_KERNEL_IMPL=pallas
-# (interpret-mode Pallas kernels) — so neither side of the ops.py dispatch
-# can rot while the other stays green.
+# After the main suite, the kernel test modules AND the serving-API tests
+# re-run under BOTH dispatch arms — REPRO_KERNEL_IMPL=ref (jnp oracles) and
+# REPRO_KERNEL_IMPL=pallas (interpret-mode Pallas kernels) — so neither
+# side of the ops.py dispatch can rot while the other stays green, and the
+# sampler's pool-vs-lockstep equivalence holds on both.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,7 +23,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 
 KERNEL_TESTS="tests/test_kernels.py tests/test_decode_attention.py \
-tests/test_prefill_attention.py tests/test_qlinear_fused.py"
+tests/test_prefill_attention.py tests/test_qlinear_fused.py \
+tests/test_serving_api.py"
 for impl in ref pallas; do
     echo "ci_tier1: kernel tests under REPRO_KERNEL_IMPL=${impl}" >&2
     REPRO_KERNEL_IMPL="${impl}" python -m pytest -x -q ${KERNEL_TESTS}

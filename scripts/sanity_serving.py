@@ -1,8 +1,13 @@
-"""Serving consistency sanity: prefill(S)+decode(1) == prefill(S+1).
+"""Serving consistency sanity: prefill(S)+decode(1) == prefill(S+1),
+plus a typed-API smoke check (streaming + sampled generation).
 
 With lop_keep=1.0 the LOP screen selects every valid block, so the sparse
 decode path must agree with the dense prefill path bit-for-bit (modulo f32
-accumulation order).
+accumulation order). The API smoke drives the scheduler through the
+InferenceEngine protocol with per-request SamplingParams: a greedy and a
+seeded sampled request stream their tokens through on_token, and both
+must match their lockstep replays token-for-token (DESIGN.md
+§Serving-API).
 """
 import importlib
 
@@ -59,5 +64,40 @@ for mod_name in MODULES:
                     / (jnp.linalg.norm(logits_full) + 1e-9))
         print(f"{'':38s} lop_keep=0.5 rel err {rel:.3f}")
         assert np.isfinite(np.asarray(logits_sp)).all()
+
+# ---------------------------------------------------------------------------
+# Typed serving API smoke: streaming callback + sampled generation
+# ---------------------------------------------------------------------------
+
+from repro.configs.bitnet_3b import REDUCED as BITNET_R
+from repro.serving.api import GenerateRequest, SamplingParams
+from repro.serving.scheduler import Scheduler, lockstep_generate
+
+cfg = BITNET_R
+params, _ = init_params(cfg, key)
+qp = quantize_params(cfg, params)
+rng = np.random.default_rng(2)
+prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+           for n in (10, 23)]
+sps = [SamplingParams(),                                     # greedy
+       SamplingParams(temperature=0.9, top_k=8, seed=13)]    # sampled
+streamed: dict = {0: [], 1: []}
+sched = Scheduler(cfg, qp, n_slots=2, max_len=40)
+for rid, (p, sp) in enumerate(zip(prompts, sps)):
+    sched.submit(GenerateRequest(
+        rid=rid, prompt=p, max_new_tokens=6, sampling=sp,
+        on_token=lambda sr: streamed[sr.rid].append(sr)))
+results = sched.run_to_completion()
+for rid, (p, sp) in enumerate(zip(prompts, sps)):
+    res = next(r for r in results if r.rid == rid)
+    srs = streamed[rid]
+    assert [sr.token for sr in srs] == res.tokens, rid
+    assert [sr.index for sr in srs] == list(range(len(res.tokens)))
+    assert srs[-1].finished and not any(sr.finished for sr in srs[:-1])
+    ref = lockstep_generate(cfg, qp, p, 6, max_len=40, sampling=sp)
+    assert res.tokens == ref, (rid, res.tokens, ref)
+    mode = "greedy" if sp.greedy else f"T={sp.temperature} seed={sp.seed}"
+    print(f"api smoke rid {rid} ({mode}): {len(res.tokens)} tokens "
+          f"streamed in order, pool == lockstep")
 
 print("ALL SERVING SANITY OK")

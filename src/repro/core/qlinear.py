@@ -64,7 +64,14 @@ def qlinear_split(node, x: jax.Array, widths) -> tuple:
 def ffn_node_apply(node, x: jax.Array, *, gated: bool, act: str) -> jax.Array:
     """Whole-FFN serving node → one dispatch (act(x·Wg)·(x·Wu) → barrier
     → ·Wd). Expert-stacked nodes ([E, ...] leaves with x [E, C, d]) run
-    every expert in the same launch."""
+    every expert in the same launch. Under the explicit
+    :func:`repro.distributed.tp_ffn.use_ffn_tp` opt-in (active mesh, f
+    divides) the dispatch is f-sharded across the model axis — one
+    fused launch per rank + psum of the down partials."""
+    from repro.distributed import tp_ffn
+    y = tp_ffn.maybe_shard_f(node, x, gated=gated, act=act)
+    if y is not None:
+        return y
     return ops.ffn_fused(x, node["gu_packed"], node["gu_scale"],
                          node["down_packed"], node["down_scale"],
                          gated=gated, act=act)

@@ -1,28 +1,37 @@
-"""Continuous-batching serving driver over the slot-paged engine.
+"""Continuous-batching serving driver over the typed serving API.
 
     PYTHONPATH=src python -m repro.launch.serve --arch bitnet-3b --reduced \
         --slots 4 --requests 8 --min-prompt 8 --max-prompt 48 --gen 16
 
 Synthesizes a stream of requests with *staggered arrivals* and *variable
 prompt lengths*, drives the :class:`repro.serving.scheduler.Scheduler`
+through the :class:`repro.serving.api.InferenceEngine` protocol
 (admit → prefill → insert → decode → evict per lane), and reports
-per-request latency percentiles (TTFT, end-to-end) alongside aggregate
-tokens/s and the modeled LOP KV-traffic reduction. ``--verify`` replays
-every request alone through the lockstep path and checks the continuous-
-batching run emitted identical greedy tokens.
+per-request latency percentiles — TTFT, end-to-end AND inter-token
+latency (ITL p50/p99 over every decode gap) — alongside aggregate
+tokens/s and the modeled LOP KV-traffic reduction.
 
-Chunked prefill (DESIGN.md §Chunked-prefill) is ON by default for dense/
-vlm archs: each serve cycle advances one fixed-shape prefill chunk AND one
-decode step, so TTFT is measured *under interleaving* — a long prompt's
-prefill overlaps other lanes' decoding instead of stalling them, and its
-own TTFT includes the cycles it shared. ``--no-chunked`` restores
-run-to-completion prefill (the ablation baseline); ``--chunk-tokens``
-overrides the chunk size (default: the arch's ``lop_block``).
+Sampling is per-request (:class:`repro.serving.api.SamplingParams`):
+``--temperature/--top-k/--top-p`` apply to every synthetic request (each
+gets its own seed), the default being greedy. ``--verify`` replays every
+request alone through the lockstep reference path *with the same
+sampling params* and checks the continuous-batching run emitted
+identical tokens — bitwise for greedy, same-seed identical for sampled.
+``--stream`` prints tokens as each lane emits them (the ``on_token``
+streaming callback).
+
+Chunked prefill (DESIGN.md §Chunked-prefill) is ON by default when the
+engine declares ``supports_chunked``: each serve cycle advances one
+fixed-shape prefill chunk AND one decode step, so TTFT is measured
+*under interleaving*. ``--no-chunked`` restores run-to-completion
+prefill (the ablation baseline); ``--chunk-tokens`` overrides the chunk
+size (default: the arch's ``lop_block``).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -31,13 +40,18 @@ import numpy as np
 from repro.core.lop import kv_traffic_bytes
 from repro.launch.train import resolve_config
 from repro.models.transformer import init_params
+from repro.serving.api import GenerateRequest, SamplingParams, StepResult
 from repro.serving.quantize import quantize_params
-from repro.serving.scheduler import Request, Scheduler, lockstep_generate
+from repro.serving.scheduler import Scheduler, lockstep_generate
 
 
 def make_requests(cfg, *, n_requests: int, min_prompt: int, max_prompt: int,
-                  gen: int, seed: int = 0):
-    """Synthetic traffic: variable prompt lengths, FIFO arrival order."""
+                  gen: int, seed: int = 0,
+                  sampling: SamplingParams | None = None,
+                  on_token=None):
+    """Synthetic traffic: variable prompt lengths, FIFO arrival order.
+    With ``sampling`` given, request ``rid`` gets its params under seed
+    ``sampling.seed + rid`` (distinct per-request streams)."""
     if n_requests < 1:
         raise ValueError(f"--requests must be >= 1, got {n_requests}")
     if not 0 < min_prompt <= max_prompt:
@@ -55,8 +69,11 @@ def make_requests(cfg, *, n_requests: int, min_prompt: int, max_prompt: int,
         if cfg.family == "vlm":
             patches = (rng.standard_normal((cfg.n_img_tokens, cfg.d_model))
                        .astype(np.float32) * 0.02)
-        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=gen,
-                            frames=frames, patches=patches))
+        sp = SamplingParams() if sampling is None else \
+            dataclasses.replace(sampling, seed=sampling.seed + rid)
+        reqs.append(GenerateRequest(
+            rid=rid, prompt=prompt, max_new_tokens=gen, sampling=sp,
+            on_token=on_token, frames=frames, patches=patches))
     return reqs
 
 
@@ -65,7 +82,9 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                arrival_period: float = 0.0, seed: int = 0,
                use_lop: bool = True, verify: bool = False,
                chunked: bool | None = None,
-               chunk_tokens: int | None = None):
+               chunk_tokens: int | None = None,
+               sampling: SamplingParams | None = None,
+               on_token=None):
     """Continuous-batching run over staggered arrivals. → stats dict.
 
     ``arrival_period`` (seconds) spaces request arrivals; requests that
@@ -76,7 +95,8 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
     params, _ = init_params(cfg, jax.random.PRNGKey(seed))
     qp = quantize_params(cfg, params)
     reqs = make_requests(cfg, n_requests=n_requests, min_prompt=min_prompt,
-                         max_prompt=max_prompt, gen=gen, seed=seed + 1)
+                         max_prompt=max_prompt, gen=gen, seed=seed + 1,
+                         sampling=sampling, on_token=on_token)
     max_len = max_prompt + gen
     if cfg.family == "vlm":
         max_len += cfg.n_img_tokens       # image prefix shares the cache
@@ -91,8 +111,8 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
         now = time.monotonic() - t0
         while pending and now >= pending[0].rid * arrival_period:
             req = pending.pop(0)
-            req.arrival = time.monotonic()
-            sched.submit(req)
+            sched.submit(dataclasses.replace(req,
+                                             arrival=time.monotonic()))
             now = time.monotonic() - t0
         sched.admit()
         if sched.n_active or sched.n_prefilling:
@@ -108,6 +128,7 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
     total_toks = sum(len(r.tokens) for r in results)
     lat = np.asarray([r.latency for r in results])
     ttft = np.asarray([r.ttft for r in results])
+    itl = np.asarray([g for r in results for g in r.itl] or [0.0])
     out = {
         "results": results,
         "tokens": {r.rid: np.asarray(r.tokens, np.int32) for r in results},
@@ -120,6 +141,8 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
         "ttft_p50": float(np.percentile(ttft, 50)),
         "ttft_p90": float(np.percentile(ttft, 90)),
         "ttft_p99": float(np.percentile(ttft, 99)),
+        "itl_p50": float(np.percentile(itl, 50)),
+        "itl_p99": float(np.percentile(itl, 99)),
         "prefill_compiles": sched.prefill_compiles,
         "chunked": sched.chunked,
         "interleaved_decode_steps": sched.interleaved_decode_steps,
@@ -131,7 +154,8 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
         for req in reqs:
             ref = lockstep_generate(cfg, qp, req.prompt, req.max_new_tokens,
                                     max_len=max_len, use_lop=use_lop,
-                                    frames=req.frames, patches=req.patches)
+                                    frames=req.frames, patches=req.patches,
+                                    sampling=req.sampling)
             if list(out["tokens"][req.rid]) != ref:
                 mismatches.append(req.rid)
         out["verified"] = not mismatches
@@ -156,21 +180,48 @@ def main():
                          "prefill/decode interleaving)")
     ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="prefill chunk size (default: arch lop_block)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k filter (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus filter (1 = off)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base PRNG seed; request rid samples under "
+                         "seed+rid")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as lanes emit them (on_token "
+                         "streaming callback)")
     ap.add_argument("--verify", action="store_true",
-                    help="replay each request alone (lockstep) and check "
-                         "token-exact agreement")
+                    help="replay each request alone (lockstep, same "
+                         "SamplingParams) and check token-exact agreement")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch, args.reduced)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.sample_seed)
+    mode_s = "greedy" if sampling.greedy else (
+        f"T={sampling.temperature} top_k={sampling.top_k} "
+        f"top_p={sampling.top_p}")
     print(f"serving {cfg.name}: {args.slots} slots, {args.requests} requests"
           f" (prompts {args.min_prompt}-{args.max_prompt}, gen {args.gen}),"
-          f" lop={'off' if args.no_lop else 'on'}")
+          f" lop={'off' if args.no_lop else 'on'}, sampling {mode_s}")
+
+    on_token = None
+    if args.stream:
+        def on_token(sr: StepResult):
+            flag = f" <{sr.finish_reason}>" if sr.finished else ""
+            print(f"  [rid {sr.rid}] #{sr.index} -> {sr.token}{flag}")
+
     out = serve_loop(cfg, n_slots=args.slots, n_requests=args.requests,
                      min_prompt=args.min_prompt, max_prompt=args.max_prompt,
                      gen=args.gen, arrival_period=args.arrival_period,
                      use_lop=not args.no_lop, verify=args.verify,
                      chunked=not args.no_chunked,
-                     chunk_tokens=args.chunk_tokens)
+                     chunk_tokens=args.chunk_tokens,
+                     sampling=None if sampling.greedy else sampling,
+                     on_token=on_token)
 
     print(f"{'rid':>4} {'plen':>5} {'toks':>5} {'ttft_ms':>8} "
           f"{'latency_ms':>10}  finish")
@@ -190,7 +241,9 @@ def main():
           f"{out['latency_p90'] * 1e3:.1f} / "
           f"{out['latency_p99'] * 1e3:.1f} ms; "
           f"ttft p50/p90: {out['ttft_p50'] * 1e3:.1f} / "
-          f"{out['ttft_p90'] * 1e3:.1f} ms")
+          f"{out['ttft_p90'] * 1e3:.1f} ms; "
+          f"itl p50/p99: {out['itl_p50'] * 1e3:.1f} / "
+          f"{out['itl_p99'] * 1e3:.1f} ms")
     if args.verify:
         status = "OK" if out["verified"] else \
             f"MISMATCH rids={out['mismatched_rids']}"

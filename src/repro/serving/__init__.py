@@ -1,14 +1,22 @@
 """Serving runtime: quantized weights, slot-paged KV/LOP cache pool,
-prefill + decode engine, continuous-batching scheduler.
+prefill + decode engine, typed serving API, continuous-batching scheduler.
 
+The cross-layer contract is :mod:`repro.serving.api` (DESIGN.md
+§Serving-API): frozen request/sampling/result dataclasses plus the
+:class:`~repro.serving.api.InferenceEngine` protocol the scheduler speaks.
 Lifecycle (see :mod:`repro.serving.scheduler`): admit → prefill → insert →
-decode → evict over ``n_slots`` persistent decode lanes.
+decode → evict over ``n_slots`` persistent decode lanes, with per-lane
+sampling (:mod:`repro.serving.sampling`) and streaming token delivery.
 """
 
+from repro.serving.api import (GREEDY, CancelToken, FinishedRequest,
+                               GenerateRequest, InferenceEngine,
+                               PooledEngine, SamplingParams, StepResult)
 from repro.serving.cache import (evict_slot, extract_slot, free_slot,
                                  free_slots, init_cache, init_cache_pool,
                                  insert_slot, pool_capacity)
 from repro.serving.engine import prefill, prefill_chunk, serve_step
 from repro.serving.quantize import quantize_params
+from repro.serving.sampling import lane_keys, sample_tokens, sample_with_seed
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      lockstep_generate)

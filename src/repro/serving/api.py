@@ -1,0 +1,398 @@
+"""Typed serving API: sampling params, requests, results, engine protocol.
+
+The serving stack's cross-layer contract (DESIGN.md §Serving-API), in the
+spirit of the paper's absmax barrier: one standardized interface so the
+control plane (:mod:`repro.serving.scheduler`), the compute engine
+(:mod:`repro.serving.engine` wrapped by :class:`PooledEngine`) and the
+drivers (``launch/serve.py``, examples, benchmarks) compose without
+bespoke glue or per-model-family branches. The shape follows JetStream's
+``engine_api`` (prefill / insert / generate + declared capabilities):
+
+  * :class:`SamplingParams` — frozen per-request decode policy
+    (greedy / temperature / top-k / top-p + PRNG seed). The sampling
+    contract lives in :mod:`repro.serving.sampling`: greedy is bitwise
+    argmax, and a seeded request decodes the same tokens pooled or
+    alone.
+  * :class:`GenerateRequest` — frozen request envelope: prompt, budget,
+    eos, stop token sequences, an optional streaming ``on_token``
+    callback and a mutable :class:`CancelToken` handle.
+  * :class:`StepResult` — one streamed token (what ``on_token``
+    receives, in emission order, ``finished`` on the last).
+  * :class:`FinishedRequest` — the completed request: tokens, finish
+    reason, and the full latency breakdown including per-token
+    timestamps (inter-token-latency telemetry).
+  * :class:`InferenceEngine` — the protocol the scheduler speaks:
+    ``prefill`` / ``prefill_chunk`` / ``insert`` / ``decode_step`` /
+    ``evict`` plus *declared capabilities* (``supports_chunked``,
+    ``exact_length_prefill``, ``state_kind``, ``has_image_prefix``).
+    Model-family names appear ONLY in capability declarations —
+    :class:`PooledEngine` is the one place that maps family → behaviour;
+    the scheduler dispatches on capabilities alone.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.serving import cache as _cache
+from repro.serving.engine import prefill, prefill_chunk, serve_step
+from repro.serving.sampling import sample_with_seed
+
+# ---------------------------------------------------------------------------
+# Request-side dataclasses
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode policy. ``temperature <= 0`` is the greedy fast
+    path (bitwise argmax — reproduces the pre-API scheduler tokens);
+    ``top_k <= 0`` and ``top_p >= 1`` disable their filters. ``seed``
+    drives the lane-local key schedule
+    (:func:`repro.serving.sampling.lane_keys`), so two runs of the same
+    request with the same seed draw identical tokens regardless of what
+    else shares the pool."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+class CancelToken:
+    """Mutable cancellation handle carried by a frozen request.
+
+    The submitter keeps a reference and calls :meth:`cancel`; the
+    scheduler observes it at the next serve cycle and retires the
+    request mid-flight (queued, mid-prefill, or mid-decode) with
+    ``finish_reason="cancelled"``.
+    """
+
+    __slots__ = ("_cancelled",)
+
+    def __init__(self) -> None:
+        self._cancelled = False
+
+    def cancel(self) -> None:
+        self._cancelled = True
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"CancelToken(cancelled={self._cancelled})"
+
+
+@dataclass(frozen=True)
+class StepResult:
+    """One streamed token, delivered to ``on_token`` as it decodes.
+
+    ``index`` is the 0-based position in the generated stream (the
+    prefill-seeded first token is index 0). ``finished`` marks the
+    request's final token, with ``finish_reason`` set to
+    ``"eos" | "stop" | "length"`` (a cancellation emits no token, so a
+    cancelled request's last delivered StepResult has
+    ``finished=False``)."""
+    rid: int
+    token: int
+    index: int
+    finished: bool
+    finish_reason: str = ""
+
+
+@dataclass(frozen=True, eq=False)
+class GenerateRequest:
+    """One generation request entering the queue (frozen envelope).
+
+    ``stop`` holds token *sequences*: decoding finishes with reason
+    ``"stop"`` as soon as the generated stream ends with any of them
+    (the matched suffix stays in ``tokens`` — callers trim if they want
+    it hidden). ``on_token`` streams every emitted token in order;
+    ``cancel`` is the mid-flight abort handle. ``arrival`` is stamped at
+    submit when left None (the scheduler re-creates the frozen record
+    via ``dataclasses.replace``)."""
+    rid: int
+    prompt: np.ndarray                 # int32 [prompt_len]
+    max_new_tokens: int
+    eos_id: int | None = None
+    sampling: SamplingParams = GREEDY
+    stop: tuple = ()                   # tuple[tuple[int, ...], ...]
+    on_token: Callable[[StepResult], None] | None = None
+    cancel: CancelToken | None = None
+    arrival: float | None = None       # driver-set; submit() stamps None
+    frames: np.ndarray | None = None   # encdec audio frames [S_enc, D]
+    patches: np.ndarray | None = None  # vlm patch embeds [n_img, D]
+
+    def __post_init__(self):
+        # canonicalize stop sequences to hashable int tuples (accepts any
+        # iterable-of-iterables; drops empty sequences)
+        stop = tuple(tuple(int(t) for t in seq) for seq in self.stop)
+        object.__setattr__(self, "stop", tuple(s for s in stop if s))
+
+    @property
+    def cancelled(self) -> bool:
+        return self.cancel is not None and self.cancel.cancelled
+
+
+@dataclass(frozen=True, eq=False)
+class FinishedRequest:
+    """Completed request: emitted tokens + full latency breakdown.
+
+    ``token_times`` stamps each token's host-visible emission (index 0
+    == ``t_first``), the raw series behind inter-token-latency
+    percentiles. A request cancelled before its first token finishes
+    with empty ``tokens`` and ``t_first == t_done``."""
+    rid: int
+    prompt_len: int
+    tokens: list                       # list[int], emission order
+    finish_reason: str                 # "eos" | "stop" | "length" | "cancelled"
+    t_arrival: float = 0.0
+    t_admit: float = 0.0               # prefill started (lane granted)
+    t_first: float = 0.0               # first token emitted (TTFT end)
+    t_done: float = 0.0
+    token_times: list = field(default_factory=list)
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_arrival
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def itl(self) -> list:
+        """Inter-token latencies (seconds), one per token after the first."""
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+
+# ---------------------------------------------------------------------------
+# Engine protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class InferenceEngine(Protocol):
+    """What the scheduler requires of a compute engine.
+
+    Capabilities (attributes) replace the scheduler's old model-family
+    name checks — an engine *declares* how it must be driven:
+
+      ``supports_chunked``     prompts may split into fixed-size chunks
+                               interleaved with decode (causal attention
+                               with split-invariant per-token compute).
+      ``exact_length_prefill`` prompts must prefill at their exact
+                               length — no pow2 pad buckets (recurrent
+                               state integrates every position, MoE
+                               routers rank per forward call, encdec
+                               compiles against its encoder frames).
+      ``has_image_prefix``     requests may carry ``patches`` that
+                               occupy cache positions before the text.
+      ``state_kind``           what a lane holds: ``"paged-kv"``,
+                               ``"recurrent"``, ``"hybrid"`` or
+                               ``"paged-kv+cross"`` (informational).
+      ``chunk_tokens``         the fixed chunk width of the chunked
+                               regime.
+
+    Methods mirror the lifecycle: ``prefill`` (whole prompt → batch-1
+    cache), ``prefill_chunk`` (one chunk against a reserved pool lane),
+    ``insert`` (batch-1 cache → lane), ``decode_step`` (advance every
+    lane one token AND sample, in one dispatch), ``evict`` (retire a
+    lane). ``sample_first`` seeds a lane from prefill logits through the
+    same sampler the decode step uses.
+    """
+
+    supports_chunked: bool
+    exact_length_prefill: bool
+    has_image_prefix: bool
+    state_kind: str
+    chunk_tokens: int
+
+    def init_pool(self, n_slots: int): ...
+
+    def prefix_len(self, req: GenerateRequest) -> int: ...
+
+    def prefill(self, tokens, true_len, kw): ...
+
+    def prefill_chunk(self, pool, slot, tokens, start, seq_end, activate,
+                      kw): ...
+
+    def insert(self, pool, slot, req_cache): ...
+
+    def decode_step(self, pool, tokens, seeds, steps, temperature, top_k,
+                    top_p): ...
+
+    def evict(self, pool, slot): ...
+
+    def sample_first(self, logits, sampling: SamplingParams,
+                     seed_step: int = 0) -> int: ...
+
+
+_STATE_KINDS = {"dense": "paged-kv", "moe": "paged-kv", "vlm": "paged-kv",
+                "hybrid": "hybrid", "ssm": "recurrent",
+                "encdec": "paged-kv+cross"}
+
+
+class PooledEngine:
+    """:class:`InferenceEngine` over the slot-paged serving stack.
+
+    Owns the quantized params, the jit caches (one prefill compile per
+    shape bucket, one chunk compile per chunk shape, one fused
+    decode+sample step) and the capability declarations for ``cfg``'s
+    family — the ONLY place in the serving control plane where family
+    names appear. The decode step fuses
+    :func:`repro.serving.engine.serve_step` with the batched sampler
+    (:mod:`repro.serving.sampling`) so sampling adds no extra dispatch.
+    """
+
+    def __init__(self, cfg, qp, *, max_len: int, use_lop: bool = True,
+                 chunk_tokens: int | None = None):
+        import jax.numpy as jnp  # local alias for the jitted closures
+
+        self.cfg = cfg
+        self.qp = qp
+        self.max_len = max_len
+        self.use_lop = use_lop
+        self.chunk_tokens = chunk_tokens or cfg.lop_block
+        # ---- capability declarations (family → behaviour, once) ----
+        self.supports_chunked = cfg.family in ("dense", "vlm")
+        self.exact_length_prefill = cfg.family in ("hybrid", "ssm",
+                                                   "encdec", "moe")
+        self.has_image_prefix = cfg.family == "vlm"
+        self.state_kind = _STATE_KINDS[cfg.family]
+
+        self.prefill_compiles = 0
+        self._fns: dict = {}
+        self._jnp = jnp
+
+        def step_and_sample(qp_, pool, tokens, seeds, steps, temp, tk, tp):
+            logits, pool = serve_step(cfg, qp_, pool, tokens,
+                                      use_lop=use_lop)
+            toks = sample_with_seed(logits, seeds, steps, temp, tk, tp)
+            return toks, pool
+
+        def step_greedy(qp_, pool, tokens):
+            # all-greedy fast path: skip the sampler's sorts/softmax/
+            # categorical entirely — bitwise the sampler's greedy branch
+            # (both are argmax over the same logits)
+            logits, pool = serve_step(cfg, qp_, pool, tokens,
+                                      use_lop=use_lop)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), pool
+
+        self._decode_fn = jax.jit(step_and_sample, donate_argnums=(1,))
+        self._decode_greedy_fn = jax.jit(step_greedy, donate_argnums=(1,))
+        self._sample_fn = jax.jit(sample_with_seed)
+        self._insert_fn = jax.jit(_cache.insert_slot, donate_argnums=(0,))
+        self._evict_fn = jax.jit(_cache.evict_slot, donate_argnums=(0,))
+
+    # ---------------- pool ----------------
+
+    def init_pool(self, n_slots: int):
+        return _cache.init_cache_pool(self.cfg, n_slots, self.max_len)
+
+    def prefix_len(self, req: GenerateRequest) -> int:
+        """Cache positions the request occupies before its text tokens."""
+        if self.has_image_prefix and req.patches is not None:
+            return len(req.patches)
+        return 0
+
+    # ---------------- prefill ----------------
+
+    def _kw_key(self, kw) -> tuple:
+        return tuple(sorted((k, v.shape) for k, v in kw.items()))
+
+    def prefill(self, tokens, true_len, kw):
+        """Whole-prompt prefill → (last logits [B, V], batch-1 cache).
+        Compiles once per (padded length, extra-input shapes)."""
+        key = ("prefill", tokens.shape[1]) + self._kw_key(kw)
+        fn = self._fns.get(key)
+        if fn is None:
+            cfg, use_lop, max_len = self.cfg, self.use_lop, self.max_len
+            fn = jax.jit(lambda qp, t, tl, kw_: prefill(
+                cfg, qp, t, max_len=max_len, use_lop=use_lop, true_len=tl,
+                **kw_))
+            self._fns[key] = fn
+            self.prefill_compiles += 1
+        jnp = self._jnp
+        return fn(self.qp, jnp.asarray(tokens), jnp.int32(true_len), kw)
+
+    def prefill_chunk(self, pool, slot, tokens, start, seq_end, activate,
+                      kw):
+        """One fixed-shape chunk against the reserved lane ``slot``:
+        extract → chunk forward → partial insert (``active`` flips live
+        on the final chunk). Compiles once per (chunk width, extras)."""
+        key = ("chunk", tokens.shape[1]) + self._kw_key(kw)
+        fn = self._fns.get(key)
+        if fn is None:
+            cfg = self.cfg
+
+            def run(qp, pool_, slot_, toks, start_, seq_end_, activate_,
+                    kw_):
+                lane = _cache.extract_slot(pool_, slot_)
+                logits, lane = prefill_chunk(cfg, qp, toks, lane,
+                                             start=start_, seq_end=seq_end_,
+                                             **kw_)
+                pool_ = _cache.insert_slot(pool_, slot_, lane,
+                                           active=activate_)
+                return logits, pool_
+
+            fn = jax.jit(run, donate_argnums=(1,))
+            self._fns[key] = fn
+            self.prefill_compiles += 1
+        jnp = self._jnp
+        return fn(self.qp, pool, jnp.int32(slot), jnp.asarray(tokens),
+                  jnp.int32(start), jnp.int32(seq_end),
+                  jnp.asarray(activate), kw)
+
+    def insert(self, pool, slot, req_cache):
+        return self._insert_fn(pool, self._jnp.int32(slot), req_cache)
+
+    # ---------------- decode / evict ----------------
+
+    def decode_step(self, pool, tokens, seeds, steps, temperature, top_k,
+                    top_p):
+        """Advance every active lane one token and sample it — ONE jitted
+        dispatch (serve_step + batched sampler). → (tokens [B] i32, pool).
+        Inactive lanes' samples are garbage the scheduler never reads.
+        When every lane is greedy (the default serving configuration) the
+        sampler is skipped for a bare argmax step — bitwise the same
+        tokens at the pre-API decode cost."""
+        jnp = self._jnp
+        if np.all(np.asarray(temperature) <= 0.0):
+            toks, pool = self._decode_greedy_fn(self.qp, pool,
+                                                jnp.asarray(tokens))
+        else:
+            toks, pool = self._decode_fn(
+                self.qp, pool, jnp.asarray(tokens),
+                jnp.asarray(seeds), jnp.asarray(steps),
+                jnp.asarray(temperature), jnp.asarray(top_k),
+                jnp.asarray(top_p))
+        return np.asarray(toks), pool
+
+    def evict(self, pool, slot):
+        return self._evict_fn(pool, self._jnp.int32(slot))
+
+    def sample_first(self, logits, sampling: SamplingParams,
+                     seed_step: int = 0) -> int:
+        """Sample a request's first token from its prefill logits [B=1, V]
+        through the SAME jitted sampler path as every later token (key
+        schedule step ``seed_step``, normally 0)."""
+        sp = sampling or GREEDY
+        tok = self._sample_fn(
+            logits[:1], np.asarray([sp.seed], np.int32),
+            np.asarray([seed_step], np.int32),
+            np.asarray([sp.temperature], np.float32),
+            np.asarray([sp.top_k], np.int32),
+            np.asarray([sp.top_p], np.float32))
+        return int(tok[0])

@@ -23,7 +23,9 @@ Slot-paged pool (continuous batching)
              batch-1 cache,
     insert   that cache into the lane (``insert_slot``, one
              ``dynamic_update_slice`` per leaf) while the other lanes
-             keep decoding; the final chunk's insert activates the lane,
+             keep decoding; the final chunk's insert activates the lane
+             and its logits seed the first token through the per-request
+             sampler (:mod:`repro.serving.sampling`),
     decode   all active lanes together; inactive lanes are masked out of
              the LOP screen, block top-K and cache writes,
     evict    the lane on EOS/max-len (``evict_slot``) — the lane's bytes go

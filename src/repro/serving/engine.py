@@ -49,6 +49,12 @@ only the live lanes — inactive lanes are screened out of the LOP selection
 (effective length 0), skipped by the cache append, emit zero attention
 output, and keep their ``lengths`` frozen. This is what lets the scheduler
 admit/retire individual requests mid-flight without recompiling the step.
+
+These functions are the compute layer under the typed serving API
+(DESIGN.md §Serving-API): :class:`repro.serving.api.PooledEngine` wraps
+them behind the ``InferenceEngine`` protocol, fusing ``serve_step`` with
+the per-lane batched sampler into one jitted decode+sample dispatch; the
+scheduler and drivers never call these entry points directly.
 """
 
 from __future__ import annotations

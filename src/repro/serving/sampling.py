@@ -1,0 +1,111 @@
+"""Jit-compatible batched token sampling for the serving stack.
+
+One sampler serves every decode lane of the slot pool AND the lockstep
+reference path (DESIGN.md §Serving-API). The contract that makes
+pool-vs-lockstep token equivalence testable per
+:class:`repro.serving.api.SamplingParams`:
+
+  * **Greedy fast path.** ``temperature <= 0`` lanes return
+    ``argmax(logits)`` — bitwise the pre-API scheduler behaviour, so a
+    default (greedy) request reproduces historical tokens exactly.
+  * **Lane-local PRNG schedule.** The key for a request's *i*-th
+    generated token (0-based; the prefill-seeded first token is i = 0)
+    is ``fold_in(PRNGKey(seed), i)`` — a function of the request's own
+    ``seed`` and its own emission count only, never of the batch
+    composition or the slot index. A seeded request therefore decodes
+    the same tokens whether it runs alone or shares the
+    continuous-batching pool (the sampling analogue of the slot-pool
+    greedy-equivalence invariant).
+  * **Row-local math.** Every op (argmax, per-row sort, cumsum,
+    categorical) reduces over the vocab axis of its own row, so a
+    lane's sample is independent of the other lanes' logits.
+
+Filtering follows the usual serving convention: temperature scales the
+logits first, then top-k and top-p restrict the support, then one
+categorical draw. Ties at the top-k/top-p cutoff value are *kept*
+(threshold comparisons are ``>=``), which can admit a few extra tokens
+on exactly-tied logits — deterministic, and irrelevant to the
+distribution-sanity guarantees the tests pin.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# temperatures at or below this sample greedily (exact argmax)
+GREEDY_EPS = 0.0
+
+
+def lane_keys(seeds: jax.Array, steps: jax.Array) -> jax.Array:
+    """Per-lane PRNG keys [B, 2] from (request seed, emission index).
+
+    ``fold_in(PRNGKey(seed), step)`` — lane-local by construction (see
+    module docstring). Jit/vmap-compatible; both operands may be traced.
+    """
+    def one(seed, step):
+        return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+    return jax.vmap(one)(seeds.astype(jnp.uint32), steps.astype(jnp.uint32))
+
+
+def _mask_top_k(logits: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Keep each row's k largest logits (k <= 0 disables). Traced per-lane
+    k via the k-th-largest value as a threshold; ties at it are kept."""
+    v = logits.shape[-1]
+    desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    kk = jnp.clip(top_k, 1, v).astype(jnp.int32)
+    thresh = jnp.take_along_axis(desc, kk[:, None] - 1, axis=-1)
+    keep = (logits >= thresh) | (top_k[:, None] <= 0)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def _mask_top_p(logits: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Nucleus filter: smallest prefix of the sorted distribution with
+    cumulative mass >= p (p >= 1 disables). A token is kept iff the mass
+    strictly before it is < p, so the crossing token always survives and
+    the support is never empty."""
+    desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(desc, axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs
+    # clamp p away from 0 so the top-1 token (mass-before 0) always
+    # survives — p <= 0 degenerates to greedy-on-the-nucleus, not an
+    # empty support
+    keep_desc = before < jnp.maximum(top_p, 1e-9)[:, None]
+    cutoff = jnp.min(jnp.where(keep_desc, desc, jnp.inf), axis=-1,
+                     keepdims=True)
+    keep = (logits >= cutoff) | (top_p[:, None] >= 1.0)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Batched per-lane sampling. → int32 [B].
+
+    logits      f32 [B, V]   next-token logits (one row per lane)
+    keys        uint32 [B, 2] per-lane PRNG keys (:func:`lane_keys`)
+    temperature f32 [B]      <= 0 → greedy argmax for that lane
+    top_k       int32 [B]    <= 0 → disabled
+    top_p       f32 [B]      >= 1 → disabled
+
+    Lanes are independent rows; retired/garbage lanes sample harmlessly
+    (their token is never read by the scheduler).
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = _mask_top_k(scaled, top_k)
+    scaled = _mask_top_p(scaled, top_p)
+    drawn = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature > GREEDY_EPS, drawn, greedy)
+
+
+def sample_with_seed(logits: jax.Array, seeds: jax.Array, steps: jax.Array,
+                     temperature: jax.Array, top_k: jax.Array,
+                     top_p: jax.Array) -> jax.Array:
+    """:func:`sample_tokens` with the key schedule applied in-graph —
+    the single entry both the fused decode step and the first-token
+    (prefill-logits) sample go through, so pooled and lockstep lanes
+    draw from identical keys."""
+    return sample_tokens(logits, lane_keys(seeds, steps), temperature,
+                         top_k, top_p)

@@ -1,127 +1,96 @@
-"""Continuous-batching scheduler over the slot-paged cache pool.
+"""Continuous-batching scheduler over the typed engine protocol.
 
 The serving layer's control plane: a FIFO request queue feeding ``n_slots``
-persistent decode lanes (:func:`repro.serving.cache.init_cache_pool`). The
-lifecycle per request is
+persistent decode lanes. The scheduler speaks ONLY the
+:class:`repro.serving.api.InferenceEngine` protocol — every
+family-specific behaviour (chunked vs run-to-completion prefill, exact
+vs pow2-bucketed compile lengths, image prefixes) is a *capability the
+engine declares*, not a name the scheduler checks (DESIGN.md
+§Serving-API). The lifecycle per request is
 
     admit → prefill → insert → decode → evict
 
   admit    — a queued request is taken once a lane is free; the other lanes
-             keep decoding in the meantime.
-  prefill  — two regimes (DESIGN.md §Chunked-prefill):
+             keep decoding in the meantime. Cancelled requests are dropped
+             before they ever touch a lane.
+  prefill  — two regimes (DESIGN.md §Chunked-prefill), selected by
+             ``engine.supports_chunked``:
 
-             *chunked* (dense/vlm, the default): the prompt is split into
-             fixed-size token chunks (``chunk_tokens``, default
-             ``lop_block``) and ONE chunk is advanced per ``step()``,
-             interleaved with the running decode batch — decode lanes
-             never stall behind a long prompt, and prefill compiles
-             collapse from one-per-pow2-bucket to one fixed chunk shape.
-             Each chunk round-trips extract_slot → ``engine.prefill_chunk``
-             → partial ``insert_slot`` (``active=False``), so the
+             *chunked*: the prompt is split into fixed-size token chunks
+             (``engine.chunk_tokens``) and ONE chunk is advanced per
+             ``step()``, interleaved with the running decode batch.
+             Each chunk round-trips ``engine.prefill_chunk`` (extract →
+             forward → partial insert, ``active=False``) so the
              in-flight K/V lives in the reserved lane; the final chunk
-             activates it and its argmax becomes the first token.
+             activates it and seeds the first token through the sampler.
 
-             *run-to-completion* (moe/hybrid/ssm/encdec): the request
-             runs alone (batch 1) through ``engine.prefill``. Recurrent
-             families (hybrid/ssm) integrate state over every position,
-             encdec ties the compile to its encoder frames, and MoE
-             routers rank tokens per forward call — all three use
-             exact-length compiles (one per distinct prompt length; for
-             MoE this also keeps pad tokens out of the router, which
-             would otherwise shift per-group expert capacity).
-  insert   — the batch-1 cache is written into the lane with one
-             ``dynamic_update_slice`` per leaf (``insert_slot``).
-  decode   — one jit'd ``serve_step`` advances *all* active lanes; retired
-             lanes are masked out of the LOP screen, block top-K and cache
-             writes by the per-slot ``active`` mask; mid-prefill lanes are
-             inactive and therefore skipped the same way.
-  evict    — on EOS or the request's token budget the lane is retired
-             (``evict_slot``) and immediately reusable; stale bytes are
-             masked by ``lengths`` so the next occupant is unaffected.
+             *run-to-completion*: the request runs alone (batch 1)
+             through ``engine.prefill``. Engines declaring
+             ``exact_length_prefill`` (recurrent state, MoE routers,
+             encoder-tied compiles) get exact-length compiles; others
+             get pow2 buckets.
+  insert   — the batch-1 cache is written into the lane
+             (``engine.insert``).
+  decode   — ONE ``engine.decode_step`` advances *all* active lanes and
+             samples their next tokens in the same dispatch
+             (:mod:`repro.serving.sampling`: greedy argmax fast path,
+             per-lane temperature/top-k/top-p with lane-local PRNG
+             keys). Tokens stream to each request's ``on_token``
+             callback as they are emitted.
+  evict    — on EOS, a stop-sequence hit, the token budget, or
+             cancellation the lane is retired (``engine.evict``) and
+             immediately reusable.
 
-Determinism note: lanes are independent through every attention/FFN path,
-and a chunked prefill is bit-identical per query row to the whole-prompt
-prefill (both run :func:`repro.kernels.ops.prefill_attention` over the
-same capacity-padded cache — DESIGN.md §Chunked-prefill), so a request
-decodes the same tokens whether it shares the pool, prefills in chunks,
-or runs alone (``lockstep_generate``) — the equivalence the tests pin
-down. The exception is MoE capacity dropping, which ranks tokens across
-the batch; with a generous ``capacity_factor`` the paths agree, but
-bit-exactness is only guaranteed for dense/vlm/recurrent families.
+Determinism note: lanes are independent through every attention/FFN path
+and the sampler's key schedule is lane-local
+(:mod:`repro.serving.sampling`), so a request decodes the same tokens
+whether it shares the pool, prefills in chunks, or runs alone
+(:func:`lockstep_generate`, the batch-1 reference implementation of the
+same protocol) — greedy bitwise, sampled same-seed identical; the
+equivalence ``tests/test_serving_api.py`` pins down. The exception is
+MoE capacity dropping, which ranks tokens across the batch; with a
+generous ``capacity_factor`` the paths agree, but bit-exactness is only
+guaranteed for dense/vlm/recurrent families.
 """
 
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.cache import (evict_slot, extract_slot, init_cache_pool,
-                                 insert_slot, pool_capacity)
-from repro.serving.engine import prefill, prefill_chunk, serve_step
+from repro.serving.api import (GREEDY, FinishedRequest, GenerateRequest,
+                               PooledEngine, SamplingParams, StepResult)
+from repro.serving.cache import pool_capacity
 
-# Families whose prompts are split into fixed-shape chunks and interleaved
-# with decode. moe is excluded: the router ranks tokens per forward call,
-# so splitting a prompt regroups its capacity competition (same class of
-# caveat as the batch-determinism note above); hybrid/ssm carry recurrent
-# state (no chunk-carry without threading it); encdec couples the compile
-# to its encoder frames.
-CHUNKED_FAMILIES = ("dense", "vlm")
-
-
-@dataclass
-class Request:
-    """One generation request entering the queue."""
-    rid: int
-    prompt: np.ndarray                 # int32 [prompt_len]
-    max_new_tokens: int
-    eos_id: int | None = None
-    arrival: float | None = None       # driver-set; default stamps submit()
-    frames: np.ndarray | None = None   # encdec audio frames [S_enc, D]
-    patches: np.ndarray | None = None  # vlm patch embeds [n_img, D]
-
-
-@dataclass
-class RequestResult:
-    """Completed request: emitted tokens + latency breakdown."""
-    rid: int
-    prompt_len: int
-    tokens: list[int] = field(default_factory=list)
-    t_arrival: float = 0.0
-    t_admit: float = 0.0               # prefill started (lane granted)
-    t_first: float = 0.0               # first token emitted (TTFT end)
-    t_done: float = 0.0
-    finish_reason: str = ""            # "eos" | "length"
-
-    @property
-    def ttft(self) -> float:
-        return self.t_first - self.t_arrival
-
-    @property
-    def latency(self) -> float:
-        return self.t_done - self.t_arrival
+# Back-compat names — the typed API in repro.serving.api is the source of
+# truth; the old scheduler-local dataclasses are these aliases now.
+Request = GenerateRequest
+RequestResult = FinishedRequest
 
 
 @dataclass
 class _Lane:
     """Host-side state of one occupied decode lane."""
-    result: RequestResult
-    remaining: int
-    eos_id: int | None
+    req: GenerateRequest
+    tokens: list                       # emitted tokens, in order
+    remaining: int                     # budget left after `tokens`
+    t_admit: float
+    t_first: float
+    token_times: list                  # clock() stamp per emitted token
 
 
 @dataclass
 class _Prefill:
     """Host-side state of one lane mid-way through chunked prefill."""
     slot: int
-    req: Request
-    chunks: list[np.ndarray]           # [1, C_k] int32 token chunks
-    starts: list[int]                  # global stream position of chunk k
-    seq_ends: list[int]                # true end written after chunk k
+    req: GenerateRequest
+    chunks: list                       # [1, C_k] int32 token chunks
+    starts: list                       # global stream position of chunk k
+    seq_ends: list                     # true end written after chunk k
     t_admit: float
     next_chunk: int = 0
 
@@ -137,70 +106,76 @@ def pow2_bucket(n: int, *, lo: int = 16, hi: int | None = None) -> int:
 
 
 class Scheduler:
-    """Continuous-batching engine front-end (greedy decoding).
+    """Continuous-batching front-end over an :class:`InferenceEngine`.
 
     Drives the admit → prefill → insert → decode → evict lifecycle over a
     slot-paged pool. ``step()`` advances ONE prefill chunk of the oldest
     mid-prefill lane (chunked regime), then every active decode lane one
-    token, and returns the requests that completed; ``admit()`` fills free
-    lanes from the queue. The driver (``launch/serve.py``) interleaves the
-    two.
+    sampled token, and returns the requests that completed; ``admit()``
+    fills free lanes from the queue. The driver (``launch/serve.py``)
+    interleaves the two.
 
-    ``chunked=None`` (default) enables chunked prefill for the families in
-    :data:`CHUNKED_FAMILIES`; ``False`` forces run-to-completion prefill
-    everywhere (the pre-chunking behaviour, kept for the interleaving
-    ablation in ``benchmarks/prefill_interleave.py``).
+    ``engine`` may be any protocol implementation; by default a
+    :class:`repro.serving.api.PooledEngine` is built from ``(cfg, qp)``.
+    ``chunked=None`` (default) enables chunked prefill when the engine
+    declares ``supports_chunked``; ``False`` forces run-to-completion
+    prefill everywhere (the ablation baseline in
+    ``benchmarks/prefill_interleave.py``).
     """
 
     def __init__(self, cfg, qp, *, n_slots: int, max_len: int,
                  use_lop: bool = True, bucket_min: int = 16,
                  chunked: bool | None = None, chunk_tokens: int | None = None,
-                 clock=time.monotonic):
-        self.cfg = cfg
-        self.qp = qp
+                 clock=time.monotonic, engine=None):
+        if engine is not None:
+            # an injected engine owns its own configuration — reject
+            # overrides that would otherwise be silently ignored
+            assert chunk_tokens is None, \
+                "pass chunk_tokens to the engine, not the Scheduler, " \
+                "when injecting one"
+            use_lop = getattr(engine, "use_lop", use_lop)
+        self.engine = engine if engine is not None else PooledEngine(
+            cfg, qp, max_len=max_len, use_lop=use_lop,
+            chunk_tokens=chunk_tokens)
+        self.cfg = getattr(self.engine, "cfg", cfg)
         self.n_slots = n_slots
         self.max_len = max_len
         self.use_lop = use_lop
         self.bucket_min = bucket_min
         self.clock = clock
-        self.pool = init_cache_pool(cfg, n_slots, max_len)
+        self.pool = self.engine.init_pool(n_slots)
         self.capacity = pool_capacity(self.pool)
-        # encdec: cross-attention lanes have their own (cross_ctx) capacity
+        # cross-attention lanes have their own (cross_ctx) capacity
         self.cross_capacity = (self.pool["cross"]["k"].shape[3]
                                if "cross" in self.pool else 0)
         self.chunked = ((chunked is None or chunked)
-                        and cfg.family in CHUNKED_FAMILIES)
-        self.chunk_tokens = chunk_tokens or cfg.lop_block
+                        and self.engine.supports_chunked)
+        self.chunk_tokens = self.engine.chunk_tokens
 
-        self.queue: deque[Request] = deque()
+        self.queue: deque[GenerateRequest] = deque()
         self.lanes: list[_Lane | None] = [None] * n_slots
         self._free: deque[int] = deque(range(n_slots))
         self._prefilling: deque[_Prefill] = deque()
         # pending next-token per lane, fed to the next decode step
         self._next_tok = np.zeros((n_slots, 1), np.int32)
-        self.results: list[RequestResult] = []
-        self.prefill_compiles = 0
+        self.results: list[FinishedRequest] = []
         # interleaving telemetry (benchmarks/prefill_interleave.py):
         # decode steps taken while some prompt was mid-prefill, and
         # whole-prompt prefills that ran while decode lanes sat idle
         self.interleaved_decode_steps = 0
         self.full_prefill_stalls = 0
 
-        self._prefill_fns: dict = {}
-        self._step_fn = jax.jit(
-            lambda qp, c, t: serve_step(cfg, qp, c, t, use_lop=use_lop),
-            donate_argnums=(1,))
-        self._insert_fn = jax.jit(insert_slot, donate_argnums=(0,))
-        self._evict_fn = jax.jit(evict_slot, donate_argnums=(0,))
+    @property
+    def prefill_compiles(self) -> int:
+        return self.engine.prefill_compiles
 
     # ---------------- queue ----------------
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: GenerateRequest) -> None:
         # attention-free pools (capacity 0: recurrent state only) have no
         # token-capacity bound — only the prompt buffer limits them
-        need = len(req.prompt) + req.max_new_tokens
-        if self.cfg.family == "vlm" and req.patches is not None:
-            need += len(req.patches)   # image prefix occupies cache slots
+        need = (len(req.prompt) + req.max_new_tokens
+                + self.engine.prefix_len(req))
         assert not self.capacity or need <= self.capacity, (
             f"request {req.rid} needs {need} tokens but pool capacity is "
             f"{self.capacity}")
@@ -209,7 +184,7 @@ class Scheduler:
             f"request {req.rid} has {len(req.frames)} encoder frames but "
             f"the pool's cross capacity is {self.cross_capacity}")
         if req.arrival is None:
-            req.arrival = self.clock()
+            req = replace(req, arrival=self.clock())
         self.queue.append(req)
 
     @property
@@ -227,45 +202,12 @@ class Scheduler:
     # ---------------- admit / prefill / insert ----------------
 
     def _bucket(self, prompt_len: int) -> int:
-        if self.cfg.family in ("hybrid", "ssm", "encdec", "moe"):
-            # recurrent state integrates every position; encdec frames tie
-            # the compile to the prompt anyway; MoE routers rank tokens per
-            # group, so pad tokens would shift expert capacity and break
-            # the lockstep equivalence → exact-length, no padding
+        if self.engine.exact_length_prefill:
             return prompt_len
         return pow2_bucket(prompt_len, lo=self.bucket_min,
                            hi=self.max_len)
 
-    def _prefill_for(self, key):
-        fn = self._prefill_fns.get(key)
-        if fn is None:
-            cfg, use_lop, max_len = self.cfg, self.use_lop, self.max_len
-            fn = jax.jit(lambda qp, t, tl, kw: prefill(
-                cfg, qp, t, max_len=max_len, use_lop=use_lop, true_len=tl,
-                **kw))
-            self._prefill_fns[key] = fn
-            self.prefill_compiles += 1
-        return fn
-
-    def _chunk_fn_for(self, key):
-        fn = self._prefill_fns.get(key)
-        if fn is None:
-            cfg = self.cfg
-
-            def run(qp, pool, slot, toks, start, seq_end, activate, kw):
-                lane = extract_slot(pool, slot)
-                logits, lane = prefill_chunk(cfg, qp, toks, lane,
-                                             start=start, seq_end=seq_end,
-                                             **kw)
-                pool = insert_slot(pool, slot, lane, active=activate)
-                return logits, pool
-
-            fn = jax.jit(run, donate_argnums=(1,))
-            self._prefill_fns[key] = fn
-            self.prefill_compiles += 1
-        return fn
-
-    def _plan_chunks(self, req: Request):
+    def _plan_chunks(self, req: GenerateRequest):
         """Host-side chunk grid of one prompt (fixed C-token shapes).
 
         The final chunk is right-padded to the same C so every chunk of
@@ -276,9 +218,7 @@ class Scheduler:
         exact length.
         """
         plen = len(req.prompt)
-        prefix = (len(req.patches)
-                  if self.cfg.family == "vlm" and req.patches is not None
-                  else 0)
+        prefix = self.engine.prefix_len(req)
         c = self.chunk_tokens
         n = max(1, -(-plen // c))
         chunks, starts, seq_ends = [], [], []
@@ -302,10 +242,14 @@ class Scheduler:
         per cycle. Run-to-completion regime: the whole prompt prefills
         synchronously (stalling any active decode lanes — counted in
         ``full_prefill_stalls``) and the lane activates immediately.
+        Cancelled queue entries retire without touching a lane.
         """
         n = 0
         while self.queue and self._free:
             req = self.queue.popleft()
+            if req.cancelled:
+                self._record_abort(req)
+                continue
             slot = self._free.popleft()
             if self.chunked:
                 chunks, starts, seq_ends = self._plan_chunks(req)
@@ -322,37 +266,32 @@ class Scheduler:
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :plen] = req.prompt
             kw = {}
-            true_len = plen
+            true_len = plen + self.engine.prefix_len(req)
             if req.frames is not None:
                 kw["frames"] = jnp.asarray(req.frames)[None]
-            if req.patches is not None:
+            if self.engine.prefix_len(req):
                 kw["patches"] = jnp.asarray(req.patches)[None]
-                true_len += len(req.patches)   # image prefix precedes text
-            key = (bucket,) + tuple(sorted(
-                (k, v.shape) for k, v in kw.items()))
-            logits, req_cache = self._prefill_for(key)(
-                self.qp, jnp.asarray(padded), jnp.int32(true_len), kw)
-            self.pool = self._insert_fn(self.pool, jnp.int32(slot),
-                                        req_cache)
+            logits, req_cache = self.engine.prefill(padded, true_len, kw)
+            self.pool = self.engine.insert(self.pool, slot, req_cache)
             self._start_lane(slot, req, logits, t_admit)
             n += 1
         return n
 
-    def _start_lane(self, slot: int, req: Request, logits, t_admit: float,
-                    done: list | None = None) -> None:
-        """Prefill finished: seed the lane with the prompt's argmax."""
-        first = int(jnp.argmax(logits[0]))
-        res = RequestResult(rid=req.rid, prompt_len=len(req.prompt),
-                            tokens=[first], t_arrival=req.arrival,
-                            t_admit=t_admit, t_first=self.clock())
-        lane = _Lane(result=res, remaining=req.max_new_tokens - 1,
-                     eos_id=req.eos_id)
+    def _start_lane(self, slot: int, req: GenerateRequest, logits,
+                    t_admit: float, done: list | None = None) -> None:
+        """Prefill finished: seed the lane with the prompt's sampled first
+        token (index 0 of the request's key schedule)."""
+        first = self.engine.sample_first(logits, req.sampling or GREEDY)
+        now = self.clock()
+        lane = _Lane(req=req, tokens=[first],
+                     remaining=req.max_new_tokens - 1,
+                     t_admit=t_admit, t_first=now, token_times=[now])
         self.lanes[slot] = lane
         self._next_tok[slot, 0] = first
-        if (req.eos_id is not None and first == req.eos_id) \
-                or lane.remaining <= 0:
-            result = self._finish(slot, "eos" if req.eos_id is not None
-                                  and first == req.eos_id else "length")
+        reason = self._token_reason(lane, first)   # evaluated exactly once
+        self._emit(lane, first, 0, reason)
+        if reason is not None:
+            result = self._finish(slot, reason)
             if done is not None:
                 done.append(result)
 
@@ -364,14 +303,11 @@ class Scheduler:
         k = pf.next_chunk
         final = k == len(pf.chunks) - 1
         kw = {}
-        if k == 0 and self.cfg.family == "vlm" and pf.req.patches is not None:
+        if k == 0 and self.engine.prefix_len(pf.req):
             kw["patches"] = jnp.asarray(pf.req.patches)[None]
-        key = ("chunk", pf.chunks[k].shape[1]) + tuple(sorted(
-            (k2, v2.shape) for k2, v2 in kw.items()))
-        logits, self.pool = self._chunk_fn_for(key)(
-            self.qp, self.pool, jnp.int32(pf.slot),
-            jnp.asarray(pf.chunks[k]), jnp.int32(pf.starts[k]),
-            jnp.int32(pf.seq_ends[k]), jnp.asarray(final), kw)
+        logits, self.pool = self.engine.prefill_chunk(
+            self.pool, pf.slot, pf.chunks[k], pf.starts[k], pf.seq_ends[k],
+            final, kw)
         pf.next_chunk += 1
         if final:
             self._prefilling.popleft()
@@ -380,43 +316,126 @@ class Scheduler:
 
     # ---------------- decode / evict ----------------
 
-    def step(self) -> list[RequestResult]:
-        """One serve cycle: ≤1 prefill chunk + one decode step over every
-        active lane; returns completions."""
-        done: list[RequestResult] = []
+    def _token_reason(self, lane: _Lane, tok: int) -> str | None:
+        """Finish reason after appending ``tok``, or None to continue.
+        Precedence: eos > stop sequence > token budget."""
+        req = lane.req
+        if req.eos_id is not None and tok == req.eos_id:
+            return "eos"
+        for seq in req.stop:
+            if len(seq) <= len(lane.tokens) \
+                    and tuple(lane.tokens[-len(seq):]) == seq:
+                return "stop"
+        if lane.remaining <= 0:
+            return "length"
+        return None
+
+    def _emit(self, lane: _Lane, tok: int, index: int,
+              reason: str | None) -> None:
+        """Stream one token to the request's ``on_token`` callback."""
+        cb = lane.req.on_token
+        if cb is not None:
+            cb(StepResult(rid=lane.req.rid, token=tok, index=index,
+                          finished=reason is not None,
+                          finish_reason=reason or ""))
+
+    def _sweep_cancelled(self, done: list) -> None:
+        """Retire cancelled requests wherever they are in the lifecycle:
+        queued (never admitted), mid-prefill (lane released; its partial
+        K/V goes stale like any evicted lane's), or decoding."""
+        if self.queue and any(r.cancelled for r in self.queue):
+            kept: deque[GenerateRequest] = deque()
+            for req in self.queue:
+                if req.cancelled:
+                    done.append(self._record_abort(req))
+                else:
+                    kept.append(req)
+            self.queue = kept
+        if self._prefilling and any(p.req.cancelled
+                                    for p in self._prefilling):
+            kept_p: deque[_Prefill] = deque()
+            for pf in self._prefilling:
+                if pf.req.cancelled:
+                    done.append(self._record_abort(pf.req,
+                                                   t_admit=pf.t_admit))
+                    self._free.append(pf.slot)
+                else:
+                    kept_p.append(pf)
+            self._prefilling = kept_p
+        for slot, lane in enumerate(self.lanes):
+            if lane is not None and lane.req.cancelled:
+                done.append(self._finish(slot, "cancelled"))
+
+    def step(self) -> list[FinishedRequest]:
+        """One serve cycle: cancellation sweep + ≤1 prefill chunk + one
+        sampled decode step over every active lane; returns completions."""
+        done: list[FinishedRequest] = []
+        self._sweep_cancelled(done)
         prefilling = self._step_prefill(done)
         if self.n_active == 0:
             return done
         if prefilling or self._prefilling:
             self.interleaved_decode_steps += 1
-        logits, self.pool = self._step_fn(
-            self.qp, self.pool, jnp.asarray(self._next_tok))
-        toks = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        seeds = np.zeros(self.n_slots, np.int32)
+        steps = np.zeros(self.n_slots, np.int32)
+        temps = np.zeros(self.n_slots, np.float32)
+        tks = np.zeros(self.n_slots, np.int32)
+        tps = np.ones(self.n_slots, np.float32)
+        for slot, lane in enumerate(self.lanes):
+            if lane is None:
+                continue
+            sp = lane.req.sampling or GREEDY
+            seeds[slot] = sp.seed
+            steps[slot] = len(lane.tokens)      # this lane's next index
+            temps[slot] = sp.temperature
+            tks[slot] = sp.top_k
+            tps[slot] = sp.top_p
+        toks, self.pool = self.engine.decode_step(
+            self.pool, self._next_tok, seeds, steps, temps, tks, tps)
         for slot, lane in enumerate(self.lanes):
             if lane is None:
                 continue
             tok = int(toks[slot])
-            lane.result.tokens.append(tok)
+            idx = len(lane.tokens)
+            lane.tokens.append(tok)
+            lane.token_times.append(self.clock())
             lane.remaining -= 1
             self._next_tok[slot, 0] = tok
-            if lane.eos_id is not None and tok == lane.eos_id:
-                done.append(self._finish(slot, "eos"))
-            elif lane.remaining <= 0:
-                done.append(self._finish(slot, "length"))
+            reason = self._token_reason(lane, tok)
+            self._emit(lane, tok, idx, reason)
+            if reason is not None:
+                done.append(self._finish(slot, reason))
         return done
 
-    def _finish(self, slot: int, reason: str) -> RequestResult:
+    def _finish(self, slot: int, reason: str) -> FinishedRequest:
         lane = self.lanes[slot]
-        lane.result.t_done = self.clock()
-        lane.result.finish_reason = reason
-        self.pool = self._evict_fn(self.pool, jnp.int32(slot))
+        res = FinishedRequest(
+            rid=lane.req.rid, prompt_len=len(lane.req.prompt),
+            tokens=lane.tokens, finish_reason=reason,
+            t_arrival=lane.req.arrival, t_admit=lane.t_admit,
+            t_first=lane.t_first, t_done=self.clock(),
+            token_times=lane.token_times)
+        self.pool = self.engine.evict(self.pool, slot)
         self.lanes[slot] = None
         self._free.append(slot)
         self._next_tok[slot, 0] = 0
-        self.results.append(lane.result)
-        return lane.result
+        self.results.append(res)
+        return res
 
-    def run_to_completion(self) -> list[RequestResult]:
+    def _record_abort(self, req: GenerateRequest,
+                      t_admit: float = 0.0) -> FinishedRequest:
+        """A request cancelled before emitting any token."""
+        now = self.clock()
+        res = FinishedRequest(
+            rid=req.rid, prompt_len=len(req.prompt), tokens=[],
+            finish_reason="cancelled",
+            t_arrival=req.arrival if req.arrival is not None else now,
+            t_admit=t_admit or now, t_first=now, t_done=now,
+            token_times=[])
+        self.results.append(res)
+        return res
+
+    def run_to_completion(self) -> list[FinishedRequest]:
         """Drain queue + lanes (all requests already submitted)."""
         while self.has_work():
             self.admit()
@@ -424,46 +443,84 @@ class Scheduler:
         return self.results
 
 
-# jitted lockstep entry points, cached per (cfg, use_lop, max_len) so the
-# N-request verify replay compiles each shape once, not once per request
-_LOCKSTEP_FNS: dict = {}
+# ---------------------------------------------------------------------------
+# Lockstep reference path — the batch-1 implementation of the same protocol
+# ---------------------------------------------------------------------------
+
+# engines cached per (cfg, use_lop, max_len) so the N-request verify replay
+# compiles each shape once, not once per request; the jitted closures take
+# qp as an argument, so the cached engine is re-pointed per call
+_REF_ENGINES: dict = {}
 
 
-def _lockstep_fns(cfg, use_lop: bool, max_len: int):
+def _ref_engine(cfg, qp, use_lop: bool, max_len: int) -> PooledEngine:
     key = (cfg, use_lop, max_len)
-    fns = _LOCKSTEP_FNS.get(key)
-    if fns is None:
-        fns = (jax.jit(lambda qp, t, kw: prefill(
-                   cfg, qp, t, max_len=max_len, use_lop=use_lop, **kw)),
-               jax.jit(lambda qp, c, t: serve_step(cfg, qp, c, t,
-                                                   use_lop=use_lop),
-                       donate_argnums=(1,)))
-        _LOCKSTEP_FNS[key] = fns
-    return fns
+    eng = _REF_ENGINES.get(key)
+    if eng is None:
+        eng = PooledEngine(cfg, qp, max_len=max_len, use_lop=use_lop)
+        _REF_ENGINES[key] = eng
+    eng.qp = qp
+    return eng
 
 
 def lockstep_generate(cfg, qp, prompt, max_new_tokens: int, *,
                       max_len: int, use_lop: bool = True,
                       eos_id: int | None = None, frames=None,
-                      patches=None) -> list[int]:
-    """Single-request lockstep reference path: whole-prompt prefill +
-    greedy decode.
+                      patches=None, sampling: SamplingParams | None = None,
+                      stop=(), on_token=None, cancel=None,
+                      engine=None) -> list:
+    """Single-request reference path: whole-prompt prefill + decode,
+    driven through the SAME :class:`InferenceEngine` protocol and the
+    same sampler as the pooled scheduler — per
+    :class:`SamplingParams`, greedy requests reproduce the pool
+    bitwise and seeded requests draw from identical lane-local keys.
 
     ``max_len`` must match the pool's (same cache capacity → same LOP
     block top-K budget AND the same prefill-attention operand shapes the
     chunked path sees) for token-exact agreement with the scheduler.
     """
-    prefill_fn, step = _lockstep_fns(cfg, use_lop, max_len)
+    eng = engine if engine is not None else _ref_engine(cfg, qp, use_lop,
+                                                        max_len)
+    sp = sampling or GREEDY
+    req = GenerateRequest(rid=-1, prompt=np.asarray(prompt),
+                          max_new_tokens=max_new_tokens, eos_id=eos_id,
+                          sampling=sp, stop=stop, on_token=on_token,
+                          cancel=cancel, frames=frames, patches=patches)
     kw = {}
+    true_len = len(req.prompt) + eng.prefix_len(req)
     if frames is not None:
         kw["frames"] = jnp.asarray(frames)[None]
-    if patches is not None:
+    if eng.prefix_len(req):
         kw["patches"] = jnp.asarray(patches)[None]
-    logits, cache = prefill_fn(qp, jnp.asarray(prompt)[None], kw)
-    toks = [int(jnp.argmax(logits[0]))]
-    while len(toks) < max_new_tokens and (eos_id is None
-                                          or toks[-1] != eos_id):
-        logits, cache = step(qp, cache,
-                             jnp.asarray([[toks[-1]]], jnp.int32))
-        toks.append(int(jnp.argmax(logits[0])))
+    logits, cache = eng.prefill(np.asarray(prompt)[None], true_len, kw)
+    toks: list = []
+
+    def append(tok: int) -> str | None:
+        toks.append(tok)
+        if req.eos_id is not None and tok == req.eos_id:
+            reason = "eos"
+        elif any(len(s) <= len(toks) and tuple(toks[-len(s):]) == s
+                 for s in req.stop):
+            reason = "stop"
+        elif len(toks) >= max_new_tokens:
+            reason = "length"
+        else:
+            reason = None
+        if on_token is not None:
+            on_token(StepResult(rid=req.rid, token=tok, index=len(toks) - 1,
+                                finished=reason is not None,
+                                finish_reason=reason or ""))
+        return reason
+
+    reason = append(eng.sample_first(logits, sp))
+    sp_arrs = (np.asarray([sp.seed], np.int32),
+               np.asarray([sp.temperature], np.float32),
+               np.asarray([sp.top_k], np.int32),
+               np.asarray([sp.top_p], np.float32))
+    while reason is None and not req.cancelled:
+        seeds, temps, tks, tps = sp_arrs
+        nxt, cache = eng.decode_step(
+            cache, np.asarray([[toks[-1]]], np.int32), seeds,
+            np.asarray([len(toks)], np.int32), temps, tks, tps)
+        reason = append(int(nxt[0]))
     return toks

@@ -1,0 +1,79 @@
+"""Subprocess: f-sharded fused FFN ≡ single-launch FFN (8 host devices).
+
+Checks, on a (data=2, model=4) mesh:
+  1. the f-axis shard_map wrapper agrees with the unsharded fused FFN to
+     int8 quantization noise (the per-rank hidden re-barrier is a finer
+     absmax grouping — DESIGN.md §Serving-API numerics caveat),
+  2. the wired-in path (`use_ffn_tp` opt-in around the serving
+     `ffn_apply` → `ffn_node_apply` route) picks up the sharded dispatch
+     and stays close to the unsharded apply,
+  3. a model-axis slice of ONE rank (n=1 mesh) is bitwise the unsharded
+     kernel (the grouping caveat vanishes when nothing splits).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bitnet_3b import REDUCED
+from repro.distributed.partitioning import use_mesh
+from repro.distributed.tp_ffn import ffn_fused_tp, use_ffn_tp
+from repro.kernels import ops
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import init_params
+from repro.serving.quantize import quantize_params
+
+cfg = REDUCED
+params, _ = init_params(cfg, jax.random.PRNGKey(0))
+qp = quantize_params(cfg, params)
+ffn0 = jax.tree.map(lambda a: a[0], qp["layers"]["ffn"])   # layer-0 node
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((5, cfg.d_model)), jnp.float32)
+
+# jitted like the sharded calls — XLA compiles the in-kernel absmax
+# division differently eager vs inside a compiled computation (the 1-ulp
+# knife-edge DESIGN.md §TINT-projection-fusion records)
+y_ref = jax.jit(lambda xx: ops.ffn_fused(
+    xx, ffn0["gu_packed"], ffn0["gu_scale"], ffn0["down_packed"],
+    ffn0["down_scale"], gated=cfg.gated_ffn, act="silu"))(x)
+
+mesh = make_host_mesh((2, 4), ("data", "model"))
+with use_mesh(mesh):
+    y_tp = jax.jit(lambda xx: ffn_fused_tp(
+        xx, ffn0["gu_packed"], ffn0["gu_scale"], ffn0["down_packed"],
+        ffn0["down_scale"], gated=cfg.gated_ffn, act="silu",
+        axis="model"))(x)
+rel = float(jnp.linalg.norm(y_tp - y_ref) / (jnp.linalg.norm(y_ref) + 1e-9))
+print(f"f-sharded vs single-launch FFN rel err {rel:.2e} (model=4)")
+assert np.isfinite(np.asarray(y_tp)).all()
+assert rel < 5e-2, rel
+print("tp ffn node agreement ok")
+
+# wired-in path: the serving ffn_apply routes through ffn_node_apply,
+# which must pick up the opt-in and dispatch the sharded launch
+from repro.models.moe import ffn_apply
+
+h = jnp.asarray(rng.standard_normal((2, 1, cfg.d_model)), jnp.float32)
+y_apply_ref = ffn_apply(cfg, ffn0, h)
+with use_mesh(mesh), use_ffn_tp("model"):
+    y_apply_tp = jax.jit(lambda hh: ffn_apply(cfg, ffn0, hh))(h)
+rel_a = float(jnp.linalg.norm(y_apply_tp - y_apply_ref)
+              / (jnp.linalg.norm(y_apply_ref) + 1e-9))
+print(f"ffn_apply rel err under f-sharded opt-in {rel_a:.2e}")
+assert np.isfinite(np.asarray(y_apply_tp)).all()
+assert rel_a < 5e-2, rel_a
+print("tp ffn wired-in path ok")
+
+# n=1 model axis: nothing splits → bitwise the single-launch kernel
+mesh1 = make_host_mesh((1, 1), ("data", "model"))
+with use_mesh(mesh1):
+    y_1 = jax.jit(lambda xx: ffn_fused_tp(
+        xx, ffn0["gu_packed"], ffn0["gu_scale"], ffn0["down_packed"],
+        ffn0["down_scale"], gated=cfg.gated_ffn, act="silu",
+        axis="model"))(x)
+assert (np.asarray(y_1) == np.asarray(y_ref)).all()
+print("n=1 bitwise identity ok")
+print("TP_FFN_CHECK_OK")

@@ -41,6 +41,15 @@ def test_fsdp_train_subprocess():
     assert "FSDP_TRAIN_CHECK_OK" in out
 
 
+@pytest.mark.slow
+def test_tp_ffn_subprocess():
+    """f-sharded fused serving FFN (shard_map over the model axis)
+    agrees with the single-launch kernel — the ROADMAP TP-restoration
+    item for the fused FFN."""
+    out = _run("tp_ffn_check.py")
+    assert "TP_FFN_CHECK_OK" in out
+
+
 # ---- in-process units (no extra devices needed) ----
 
 def test_straggler_monitor_flags_outliers():
@@ -86,3 +95,46 @@ def test_logical_axes_resolution():
     # without a mesh, dp/fsdp resolve to single-pod axes
     assert logical_to_pspec(("fsdp", "tp")) == P(("data",), "model")
     assert logical_to_pspec((None, "tp")) == P(None, "model")
+
+
+def test_tp_ffn_optin_routing_single_device():
+    """The f-sharded FFN route engages only under the use_ffn_tp opt-in
+    with an active mesh; on a size-1 model axis it is bitwise the
+    single-launch dispatch (nothing splits, psum over 1)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs.bitnet_3b import REDUCED
+    from repro.core.qlinear import ffn_node_apply
+    from repro.distributed.partitioning import use_mesh
+    from repro.distributed.tp_ffn import maybe_shard_f, use_ffn_tp
+    from repro.models.transformer import init_params
+    from repro.serving.quantize import quantize_params
+
+    cfg = REDUCED
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    ffn0 = jax.tree.map(lambda a: a[0], qp["layers"]["ffn"])
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (3, cfg.d_model)), jnp.float32)
+
+    # no opt-in → route declines regardless of mesh
+    assert maybe_shard_f(ffn0, x, gated=cfg.gated_ffn, act="silu") is None
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    with use_mesh(mesh):
+        assert maybe_shard_f(ffn0, x, gated=cfg.gated_ffn,
+                             act="silu") is None
+    # opt-in without a mesh → still the plain dispatch
+    with use_ffn_tp("model"):
+        assert maybe_shard_f(ffn0, x, gated=cfg.gated_ffn,
+                             act="silu") is None
+
+    ref = jax.jit(lambda xx: ffn_node_apply(ffn0, xx, gated=cfg.gated_ffn,
+                                            act="silu"))(x)
+    with use_mesh(mesh), use_ffn_tp("model"):
+        out = jax.jit(lambda xx: ffn_node_apply(
+            ffn0, xx, gated=cfg.gated_ffn, act="silu"))(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

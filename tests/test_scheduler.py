@@ -87,6 +87,50 @@ def test_eos_early_exit_frees_lane():
     assert sched.n_active == 0 and len(sched.queue) == 0
 
 
+def test_first_token_eos_finishes_lane_immediately():
+    """Regression (ISSUE 5 satellite): the first-token EOS predicate was
+    evaluated twice in ``_start_lane`` to pick the finish reason; the
+    single-evaluation rewrite must still finish a request whose FIRST
+    sampled token is EOS with reason "eos", exactly one token, and an
+    immediately reusable lane — through the chunked-prefill activation
+    path (``_start_lane`` called from ``_step_prefill``)."""
+    cfg, qp = _setup()
+    (p,) = _prompts(cfg, [10])
+    ref = lockstep_generate(cfg, qp, p, 4, max_len=MAX_LEN)
+    sched = Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN)
+    assert sched.chunked
+    sched.submit(Request(rid=0, prompt=p, max_new_tokens=4, eos_id=ref[0]))
+    res = sched.run_to_completion()[0]
+    assert res.finish_reason == "eos"
+    assert res.tokens == [ref[0]]
+    assert sched.n_active == 0 and len(sched._free) == 1
+
+
+def test_max_new_tokens_one_edge_cases():
+    """max_new_tokens=1: the budget is spent on the prefill-seeded first
+    token — reason "length" when it is not EOS, "eos" (taking precedence)
+    when it is; both through the pooled path and the lockstep
+    reference."""
+    cfg, qp = _setup()
+    (p,) = _prompts(cfg, [12], seed=17)
+    ref = lockstep_generate(cfg, qp, p, 1, max_len=MAX_LEN)
+    assert len(ref) == 1
+
+    sched = Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN)
+    sched.submit(Request(rid=0, prompt=p, max_new_tokens=1))
+    res = sched.run_to_completion()[0]
+    assert res.tokens == ref and res.finish_reason == "length"
+
+    sched2 = Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN)
+    sched2.submit(Request(rid=0, prompt=p, max_new_tokens=1,
+                          eos_id=ref[0]))
+    res2 = sched2.run_to_completion()[0]
+    assert res2.tokens == ref and res2.finish_reason == "eos"
+    # the lockstep reference stops at the same single token either way
+    assert lockstep_generate(cfg, qp, p, 1, max_len=MAX_LEN,
+                             eos_id=ref[0]) == ref
+
+
 def test_capacity_guard_rejects_oversized_request():
     cfg, qp = _setup()
     (p,) = _prompts(cfg, [60])
