@@ -17,13 +17,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig8_lop, fig9_schedule, kernels_micro,
-                            prefill_interleave, table1_e2e)
+                            prefill_interleave, prefix_cache, table1_e2e)
     modules = [
         ("fig8_lop", fig8_lop),
         ("fig9_schedule", fig9_schedule),
         ("table1_e2e", table1_e2e),
         ("kernels_micro", kernels_micro),
         ("prefill_interleave", prefill_interleave),
+        ("prefix_cache", prefix_cache),
     ]
     print("name,value,derived")
     failed = 0

@@ -26,6 +26,14 @@ fixed-shape prefill chunk AND one decode step, so TTFT is measured
 *under interleaving*. ``--no-chunked`` restores run-to-completion
 prefill (the ablation baseline); ``--chunk-tokens`` overrides the chunk
 size (default: the arch's ``lop_block``).
+
+Prefix caching (DESIGN.md §Prefix-caching) is likewise ON by default
+under chunked prefill: ``--shared-prefix-tokens N --prefix-reuse-frac F``
+synthesizes a trace where a fraction of requests share one N-token
+prompt prefix (a system prompt / few-shot template); the scheduler
+prefills it once and clones it into every later sharer, and the report
+splits TTFT by prefix hit vs miss plus prefill tokens computed vs
+served. ``--no-prefix-cache`` is the cold baseline.
 """
 
 from __future__ import annotations
@@ -48,20 +56,35 @@ from repro.serving.scheduler import Scheduler, lockstep_generate
 def make_requests(cfg, *, n_requests: int, min_prompt: int, max_prompt: int,
                   gen: int, seed: int = 0,
                   sampling: SamplingParams | None = None,
+                  shared_prefix_tokens: int = 0,
+                  prefix_reuse_frac: float = 1.0,
                   on_token=None):
     """Synthetic traffic: variable prompt lengths, FIFO arrival order.
     With ``sampling`` given, request ``rid`` gets its params under seed
-    ``sampling.seed + rid`` (distinct per-request streams)."""
+    ``sampling.seed + rid`` (distinct per-request streams).
+
+    ``shared_prefix_tokens > 0`` models a shared system prompt / few-shot
+    template: the first ``round(prefix_reuse_frac * n_requests)`` requests
+    prepend ONE common ``shared_prefix_tokens``-token prefix to their
+    (still per-request random) suffix; the rest stay fully cold. Prompt
+    lengths become ``shared_prefix_tokens + [min_prompt, max_prompt]``
+    for sharers."""
     if n_requests < 1:
         raise ValueError(f"--requests must be >= 1, got {n_requests}")
     if not 0 < min_prompt <= max_prompt:
         raise ValueError(f"need 0 < --min-prompt <= --max-prompt, got "
                          f"{min_prompt}..{max_prompt}")
     rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab,
+                          (shared_prefix_tokens,)).astype(np.int32)
+    n_sharers = round(prefix_reuse_frac * n_requests) \
+        if shared_prefix_tokens else 0
     reqs = []
     for rid in range(n_requests):
         plen = int(rng.integers(min_prompt, max_prompt + 1))
         prompt = rng.integers(0, cfg.vocab, (plen,)).astype(np.int32)
+        if rid < n_sharers:
+            prompt = np.concatenate([shared, prompt])
         frames = patches = None
         if cfg.family == "encdec":
             frames = (rng.standard_normal((4 * plen, cfg.d_model))
@@ -83,26 +106,42 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                use_lop: bool = True, verify: bool = False,
                chunked: bool | None = None,
                chunk_tokens: int | None = None,
+               prefix_cache: bool | None = None,
+               shared_prefix_tokens: int = 0,
+               prefix_reuse_frac: float = 1.0,
                sampling: SamplingParams | None = None,
-               on_token=None):
+               on_token=None, engine=None):
     """Continuous-batching run over staggered arrivals. → stats dict.
 
     ``arrival_period`` (seconds) spaces request arrivals; requests that
     have not arrived yet stay out of the queue, so lanes drain and refill
     mid-run exactly as a live server would. 0 = all arrive at t0 (arrival
     order still staggers admissions once lanes fill).
-    """
-    params, _ = init_params(cfg, jax.random.PRNGKey(seed))
-    qp = quantize_params(cfg, params)
+
+    ``shared_prefix_tokens``/``prefix_reuse_frac`` shape the trace (see
+    :func:`make_requests`); ``prefix_cache`` gates the scheduler's prefix
+    store (None = on when chunked). TTFT is reported split by prefix
+    hit/miss. An injected ``engine`` is reused across calls (shared jit
+    caches — the benchmark's cache-on vs cache-off arms)."""
+    if engine is not None:
+        cfg, qp = engine.cfg, engine.qp
+    else:
+        params, _ = init_params(cfg, jax.random.PRNGKey(seed))
+        qp = quantize_params(cfg, params)
     reqs = make_requests(cfg, n_requests=n_requests, min_prompt=min_prompt,
                          max_prompt=max_prompt, gen=gen, seed=seed + 1,
-                         sampling=sampling, on_token=on_token)
-    max_len = max_prompt + gen
+                         sampling=sampling,
+                         shared_prefix_tokens=shared_prefix_tokens,
+                         prefix_reuse_frac=prefix_reuse_frac,
+                         on_token=on_token)
+    max_len = max_prompt + gen + shared_prefix_tokens
     if cfg.family == "vlm":
         max_len += cfg.n_img_tokens       # image prefix shares the cache
     sched = Scheduler(cfg, qp, n_slots=n_slots, max_len=max_len,
                       use_lop=use_lop, chunked=chunked,
-                      chunk_tokens=chunk_tokens)
+                      chunk_tokens=None if engine is not None
+                      else chunk_tokens,
+                      prefix_cache=prefix_cache, engine=engine)
 
     t0 = time.monotonic()
     pending = list(reqs)
@@ -128,6 +167,10 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
     total_toks = sum(len(r.tokens) for r in results)
     lat = np.asarray([r.latency for r in results])
     ttft = np.asarray([r.ttft for r in results])
+    ttft_hit = np.asarray([r.ttft for r in results if r.cached_len] or
+                          [np.nan])
+    ttft_miss = np.asarray([r.ttft for r in results if not r.cached_len] or
+                           [np.nan])
     itl = np.asarray([g for r in results for g in r.itl] or [0.0])
     out = {
         "results": results,
@@ -143,10 +186,19 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
         "ttft_p99": float(np.percentile(ttft, 99)),
         "itl_p50": float(np.percentile(itl, 50)),
         "itl_p99": float(np.percentile(itl, 99)),
+        "ttft_hit_p50": float(np.percentile(ttft_hit, 50)),
+        "ttft_hit_p99": float(np.percentile(ttft_hit, 99)),
+        "ttft_miss_p50": float(np.percentile(ttft_miss, 50)),
+        "ttft_miss_p99": float(np.percentile(ttft_miss, 99)),
         "prefill_compiles": sched.prefill_compiles,
         "chunked": sched.chunked,
         "interleaved_decode_steps": sched.interleaved_decode_steps,
         "full_prefill_stalls": sched.full_prefill_stalls,
+        "prefix_cache": sched.prefix_store is not None,
+        "prefix_hits": sched.prefix_hits,
+        "prefix_hit_tokens": sched.prefix_hit_tokens,
+        "prefill_tokens_computed": sched.prefill_tokens_computed,
+        "prefill_tokens_served": sched.prefill_tokens_served,
     }
 
     if verify:
@@ -155,7 +207,7 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
             ref = lockstep_generate(cfg, qp, req.prompt, req.max_new_tokens,
                                     max_len=max_len, use_lop=use_lop,
                                     frames=req.frames, patches=req.patches,
-                                    sampling=req.sampling)
+                                    sampling=req.sampling, engine=engine)
             if list(out["tokens"][req.rid]) != ref:
                 mismatches.append(req.rid)
         out["verified"] = not mismatches
@@ -180,6 +232,14 @@ def main():
                          "prefill/decode interleaving)")
     ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="prefill chunk size (default: arch lop_block)")
+    ap.add_argument("--shared-prefix-tokens", type=int, default=0,
+                    help="length of ONE common prompt prefix (a shared "
+                         "system prompt) prepended to sharing requests")
+    ap.add_argument("--prefix-reuse-frac", type=float, default=1.0,
+                    help="fraction of requests sharing the common prefix")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the scheduler's prefix store (every "
+                         "prompt prefills cold)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -220,13 +280,17 @@ def main():
                      use_lop=not args.no_lop, verify=args.verify,
                      chunked=not args.no_chunked,
                      chunk_tokens=args.chunk_tokens,
+                     prefix_cache=not args.no_prefix_cache,
+                     shared_prefix_tokens=args.shared_prefix_tokens,
+                     prefix_reuse_frac=args.prefix_reuse_frac,
                      sampling=None if sampling.greedy else sampling,
                      on_token=on_token)
 
-    print(f"{'rid':>4} {'plen':>5} {'toks':>5} {'ttft_ms':>8} "
+    print(f"{'rid':>4} {'plen':>5} {'hit':>5} {'toks':>5} {'ttft_ms':>8} "
           f"{'latency_ms':>10}  finish")
     for r in out["results"]:
-        print(f"{r.rid:>4} {r.prompt_len:>5} {len(r.tokens):>5} "
+        print(f"{r.rid:>4} {r.prompt_len:>5} {r.cached_len:>5} "
+              f"{len(r.tokens):>5} "
               f"{r.ttft * 1e3:>8.1f} {r.latency * 1e3:>10.1f}  "
               f"{r.finish_reason}")
     mode = ("chunked prefill (interleaved; "
@@ -244,6 +308,14 @@ def main():
           f"{out['ttft_p90'] * 1e3:.1f} ms; "
           f"itl p50/p99: {out['itl_p50'] * 1e3:.1f} / "
           f"{out['itl_p99'] * 1e3:.1f} ms")
+    if out["prefix_cache"]:
+        print(f"prefix cache: {out['prefix_hits']} hits "
+              f"({out['prefix_hit_tokens']} tokens served from interned "
+              f"pages), prefill tokens computed/served: "
+              f"{out['prefill_tokens_computed']}/"
+              f"{out['prefill_tokens_served']}; "
+              f"ttft p50 hit/miss: {out['ttft_hit_p50'] * 1e3:.1f} / "
+              f"{out['ttft_miss_p50'] * 1e3:.1f} ms")
     if args.verify:
         status = "OK" if out["verified"] else \
             f"MISMATCH rids={out['mismatched_rids']}"

@@ -21,13 +21,26 @@ bespoke glue or per-model-family branches. The shape follows JetStream's
   * :class:`FinishedRequest` — the completed request: tokens, finish
     reason, and the full latency breakdown including per-token
     timestamps (inter-token-latency telemetry).
+  * :class:`ExistingPrefix` — a computed, interned prefill prefix
+    (block-aligned cache pages + the token count they cover) that
+    ``bulk_insert`` clones into many lanes at once; chunked prefill then
+    resumes from the cached block boundary (JetStream's
+    ``ExistingPrefix`` / ``bulk_insert`` shape — DESIGN.md
+    §Prefix-caching).
   * :class:`InferenceEngine` — the protocol the scheduler speaks:
-    ``prefill`` / ``prefill_chunk`` / ``insert`` / ``decode_step`` /
-    ``evict`` plus *declared capabilities* (``supports_chunked``,
-    ``exact_length_prefill``, ``state_kind``, ``has_image_prefix``).
+    ``prefill`` / ``prefill_chunk`` / ``insert`` / ``bulk_insert`` /
+    ``decode_step`` / ``evict`` plus *declared capabilities*
+    (``supports_chunked``, ``exact_length_prefill``, ``state_kind``,
+    ``has_image_prefix``, ``prefix_block``).
     Model-family names appear ONLY in capability declarations —
     :class:`PooledEngine` is the one place that maps family → behaviour;
     the scheduler dispatches on capabilities alone.
+
+Sampling state lives IN the pool (``seed`` / ``sample_step`` cache
+leaves): ``decode_step`` reads each lane's PRNG schedule in-graph and
+advances it with the lane, so cloned or migrated lanes keep same-seed
+bitwise reproducibility with no host round-trip
+(``set_sampling_state`` seeds a lane once, at activation).
 """
 
 from __future__ import annotations
@@ -162,6 +175,8 @@ class FinishedRequest:
     t_first: float = 0.0               # first token emitted (TTFT end)
     t_done: float = 0.0
     token_times: list = field(default_factory=list)
+    cached_len: int = 0                # prompt tokens served from the
+    #                                    prefix cache (0 = cold prefill)
 
     @property
     def ttft(self) -> float:
@@ -175,6 +190,22 @@ class FinishedRequest:
     def itl(self) -> list:
         """Inter-token latencies (seconds), one per token after the first."""
         return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+
+@dataclass(frozen=True)
+class ExistingPrefix:
+    """A computed prefill prefix to resume from (JetStream-style).
+
+    ``cache`` is a batch-1 pytree of block-aligned prefix pages — the
+    K/V, scales AND packed LOP feature rows for the first ``common_len``
+    stream positions, plus ``lengths == [common_len]`` — normally
+    assembled by :meth:`repro.serving.cache.PrefixStore.assemble`.
+    ``engine.bulk_insert`` clones it into many lanes at once; each lane
+    then resumes chunked prefill at ``start = common_len`` through the
+    bitwise ``(start, kv_len)`` chunk-carry contract, so a prefix-hit
+    request decodes token-identically to a cold one."""
+    cache: dict
+    common_len: int
 
 
 # ---------------------------------------------------------------------------
@@ -204,13 +235,20 @@ class InferenceEngine(Protocol):
                                ``"paged-kv+cross"`` (informational).
       ``chunk_tokens``         the fixed chunk width of the chunked
                                regime.
+      ``prefix_block``         token-block granularity of prefix-cache
+                               pages (0 = engine cannot resume from a
+                               cached prefix — recurrent state is not
+                               positional).
 
     Methods mirror the lifecycle: ``prefill`` (whole prompt → batch-1
     cache), ``prefill_chunk`` (one chunk against a reserved pool lane),
-    ``insert`` (batch-1 cache → lane), ``decode_step`` (advance every
-    lane one token AND sample, in one dispatch), ``evict`` (retire a
-    lane). ``sample_first`` seeds a lane from prefill logits through the
-    same sampler the decode step uses.
+    ``insert`` (batch-1 cache → lane), ``bulk_insert`` (one
+    :class:`ExistingPrefix` → many lanes), ``extract`` (lane → batch-1
+    cache, for interning), ``decode_step`` (advance every lane one token
+    AND sample, in one dispatch), ``evict`` (retire a lane).
+    ``sample_first`` seeds a lane from prefill logits through the same
+    sampler the decode step uses; ``set_sampling_state`` writes the
+    lane's in-pool PRNG schedule at activation.
     """
 
     supports_chunked: bool
@@ -218,6 +256,7 @@ class InferenceEngine(Protocol):
     has_image_prefix: bool
     state_kind: str
     chunk_tokens: int
+    prefix_block: int
 
     def init_pool(self, n_slots: int): ...
 
@@ -230,13 +269,19 @@ class InferenceEngine(Protocol):
 
     def insert(self, pool, slot, req_cache): ...
 
-    def decode_step(self, pool, tokens, seeds, steps, temperature, top_k,
-                    top_p): ...
+    def bulk_insert(self, pool, slots, prefix: ExistingPrefix,
+                    active: bool = False): ...
+
+    def extract(self, pool, slot): ...
+
+    def decode_step(self, pool, tokens, temperature, top_k, top_p): ...
 
     def evict(self, pool, slot): ...
 
     def sample_first(self, logits, sampling: SamplingParams,
                      seed_step: int = 0) -> int: ...
+
+    def set_sampling_state(self, pool, slot, seed: int, step: int): ...
 
 
 _STATE_KINDS = {"dense": "paged-kv", "moe": "paged-kv", "vlm": "paged-kv",
@@ -271,30 +316,57 @@ class PooledEngine:
                                                    "encdec", "moe")
         self.has_image_prefix = cfg.family == "vlm"
         self.state_kind = _STATE_KINDS[cfg.family]
+        # prefix pages are lop_block-aligned (cache pages already are),
+        # and resume rides the chunked (start, kv_len) carry — so prefix
+        # caching exists exactly where chunked prefill does
+        self.prefix_block = cfg.lop_block if self.supports_chunked else 0
 
         self.prefill_compiles = 0
         self._fns: dict = {}
         self._jnp = jnp
 
-        def step_and_sample(qp_, pool, tokens, seeds, steps, temp, tk, tp):
+        def step_and_sample(qp_, pool, tokens, temp, tk, tp):
+            # the PRNG schedule lives in the pool: seed is per-request,
+            # sample_step counts the lane's emissions — advanced in-graph
+            # for active lanes, so a cloned/migrated lane samples its
+            # same-seed token stream with no host round-trip
+            seeds, steps = pool["seed"], pool["sample_step"]
             logits, pool = serve_step(cfg, qp_, pool, tokens,
                                       use_lop=use_lop)
             toks = sample_with_seed(logits, seeds, steps, temp, tk, tp)
+            pool = dict(pool)
+            adv = (pool["active"].astype(jnp.int32) if "active" in pool
+                   else jnp.int32(1))
+            pool["sample_step"] = steps + adv
             return toks, pool
 
         def step_greedy(qp_, pool, tokens):
             # all-greedy fast path: skip the sampler's sorts/softmax/
             # categorical entirely — bitwise the sampler's greedy branch
-            # (both are argmax over the same logits)
+            # (both are argmax over the same logits); sample_step is not
+            # advanced (greedy lanes never read it, and any lane that
+            # later needs it is re-seeded at activation)
             logits, pool = serve_step(cfg, qp_, pool, tokens,
                                       use_lop=use_lop)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), pool
+
+        def set_sampling(pool, slot, seed, step):
+            pool = dict(pool)
+            pool["seed"] = pool["seed"].at[slot].set(seed)
+            pool["sample_step"] = pool["sample_step"].at[slot].set(step)
+            return pool
 
         self._decode_fn = jax.jit(step_and_sample, donate_argnums=(1,))
         self._decode_greedy_fn = jax.jit(step_greedy, donate_argnums=(1,))
         self._sample_fn = jax.jit(sample_with_seed)
         self._insert_fn = jax.jit(_cache.insert_slot, donate_argnums=(0,))
+        self._bulk_insert_fn = jax.jit(
+            lambda pool, slots, c, act: _cache.bulk_insert(pool, slots, c,
+                                                           active=act),
+            donate_argnums=(0,))
+        self._extract_fn = jax.jit(_cache.extract_slot)
         self._evict_fn = jax.jit(_cache.evict_slot, donate_argnums=(0,))
+        self._sampling_state_fn = jax.jit(set_sampling, donate_argnums=(0,))
 
     # ---------------- pool ----------------
 
@@ -358,16 +430,34 @@ class PooledEngine:
     def insert(self, pool, slot, req_cache):
         return self._insert_fn(pool, self._jnp.int32(slot), req_cache)
 
+    def bulk_insert(self, pool, slots, prefix: ExistingPrefix,
+                    active: bool = False):
+        """Clone one :class:`ExistingPrefix` into lanes ``slots`` (int
+        vector) — a single scatter per cache leaf, so N prefix hits cost
+        one dispatch. Lanes land ``active=False`` by default: they are
+        mid-prefill reservations that resume chunked prefill at
+        ``prefix.common_len``. Compiles once per (lane count, prefix
+        capacity) pair."""
+        jnp = self._jnp
+        return self._bulk_insert_fn(
+            pool, jnp.asarray(np.asarray(slots, np.int32)), prefix.cache,
+            jnp.asarray(bool(active)))
+
+    def extract(self, pool, slot):
+        """Batch-1 copy of lane ``slot`` (non-donating — the pool stays
+        live); what the scheduler interns into the prefix store."""
+        return self._extract_fn(pool, self._jnp.int32(slot))
+
     # ---------------- decode / evict ----------------
 
-    def decode_step(self, pool, tokens, seeds, steps, temperature, top_k,
-                    top_p):
+    def decode_step(self, pool, tokens, temperature, top_k, top_p):
         """Advance every active lane one token and sample it — ONE jitted
         dispatch (serve_step + batched sampler). → (tokens [B] i32, pool).
-        Inactive lanes' samples are garbage the scheduler never reads.
-        When every lane is greedy (the default serving configuration) the
-        sampler is skipped for a bare argmax step — bitwise the same
-        tokens at the pre-API decode cost."""
+        Each lane's PRNG seed/step are read from the pool's sampling-state
+        leaves and advanced in-graph. Inactive lanes' samples are garbage
+        the scheduler never reads. When every lane is greedy (the default
+        serving configuration) the sampler is skipped for a bare argmax
+        step — bitwise the same tokens at the pre-API decode cost."""
         jnp = self._jnp
         if np.all(np.asarray(temperature) <= 0.0):
             toks, pool = self._decode_greedy_fn(self.qp, pool,
@@ -375,13 +465,20 @@ class PooledEngine:
         else:
             toks, pool = self._decode_fn(
                 self.qp, pool, jnp.asarray(tokens),
-                jnp.asarray(seeds), jnp.asarray(steps),
                 jnp.asarray(temperature), jnp.asarray(top_k),
                 jnp.asarray(top_p))
         return np.asarray(toks), pool
 
     def evict(self, pool, slot):
         return self._evict_fn(pool, self._jnp.int32(slot))
+
+    def set_sampling_state(self, pool, slot, seed: int, step: int):
+        """Write lane ``slot``'s in-pool PRNG schedule (at activation:
+        ``step=1`` — the prefill-seeded first token was emission 0,
+        sampled host-side by :meth:`sample_first`)."""
+        jnp = self._jnp
+        return self._sampling_state_fn(pool, jnp.int32(slot),
+                                       jnp.int32(seed), jnp.int32(step))
 
     def sample_first(self, logits, sampling: SamplingParams,
                      seed_step: int = 0) -> int:

@@ -36,9 +36,31 @@ Stale bytes above a lane's ``lengths`` are harmless by construction: the
 LOP screen masks them to INT32_MIN before block reduction and exact
 attention masks them to −∞ before the softmax, which is also why
 evict→insert reuse is bit-identical to a zero-initialised lane.
+``evict_slot`` additionally zeroes the lane's packed LOP feature rows so
+a later prefix-clone lands in a lane bit-identical to a fresh pool.
+
+The pool also carries the per-lane *sampling state* (``seed``,
+``sample_step``) as cache leaves, so the fused decode+sample step reads
+its PRNG schedule straight from the pool — a cloned or migrated lane
+samples correctly with no host round-trip (DESIGN.md §Prefix-caching).
+
+Prefix caching (shared prompts cost one prefill)
+------------------------------------------------
+:class:`PrefixStore` interns computed prefill state keyed by token-block
+hash chains: block ``k`` of a prompt is keyed by
+``blake2b(parent_key ‖ tokens[k·B:(k+1)·B])``, so equal prompt prefixes
+— and only equal prefixes — share a chain of nodes, each holding that
+block's *cache pages* (the K/V **and** packed LOP feature rows sliced
+from a batch-1 prefill at the block's token range). ``bulk_insert``
+clones one assembled prefix into many pool lanes in a single scatter;
+the scheduler then resumes chunked prefill from the cached block
+boundary via the existing bitwise ``(start, kv_len)`` chunk-carry
+contract (DESIGN.md §Prefix-caching).
 """
 
 from __future__ import annotations
+
+import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -121,7 +143,7 @@ def _leaf_spec(path, *, batch_axes="dp", seq_axes="sp"):
         return (batch_axes, None, seq_axes, None)
     if name in ("k_scale", "v_scale"):
         return (batch_axes, None, seq_axes)
-    if name in ("lengths", "cross_len", "active"):
+    if name in ("lengths", "cross_len", "active", "seed", "sample_step"):
         return (None,)
     if name == "ssm":
         return (batch_axes, "tp", None)
@@ -162,16 +184,35 @@ def slot_axis(path, leaf) -> int:
     return leaf.ndim - len(_leaf_spec(path))
 
 
+def seq_axis(path, leaf) -> int:
+    """Index of the token (sequence) axis in a cache leaf at ``path``.
+
+    Defined only for positional caches (K/V/scales/features); recurrent
+    state has no token axis, which is also why prefix pages are undefined
+    for it.
+    """
+    spec = _leaf_spec(path)
+    if "sp" not in spec:
+        raise ValueError(f"cache leaf {path} has no token axis (recurrent "
+                         f"state) — prefix pages are undefined for it")
+    return leaf.ndim - len(spec) + spec.index("sp")
+
+
 def init_cache_pool(cfg, n_slots: int, max_len: int, *,
                     align: int | None = None):
     """Slot-paged pool: ``n_slots`` persistent decode lanes, all inactive.
 
     Identical tree to :func:`init_cache` (so ``serve_step`` runs on it
     unchanged) plus a per-lane ``active`` mask that the engine threads
-    through the LOP screen, block top-K and cache writes.
+    through the LOP screen, block top-K and cache writes, and the
+    per-lane sampling state (``seed``, ``sample_step``) the fused
+    decode+sample step reads in-graph — the PRNG schedule travels with
+    the lane, so clones/migrations need no host round-trip to sample.
     """
     pool = init_cache(cfg, n_slots, max_len, align=align)
     pool["active"] = jnp.zeros((n_slots,), jnp.bool_)
+    pool["seed"] = jnp.zeros((n_slots,), jnp.int32)
+    pool["sample_step"] = jnp.zeros((n_slots,), jnp.int32)
     return pool
 
 
@@ -243,13 +284,66 @@ def extract_slot(pool, slot):
     return walk((), pool)
 
 
-def evict_slot(pool, slot):
-    """Retire lane ``slot``: mark inactive, zero its length.
+def bulk_insert(pool, slots, req_cache, active=True):
+    """Clone ONE batch-1 cache into MANY lanes — one scatter per leaf.
 
-    The lane's K/V/feature bytes are left stale — every consumer masks by
-    ``lengths``/``active``, and the next ``insert_slot`` overwrites them.
+    ``slots`` is an int32 ``[N]`` vector of distinct lane indices; the
+    size-1 slot axis of ``req_cache`` broadcasts across them, so a shared
+    prefix computed once lands in every hit lane of an admit batch in a
+    single dispatch (K/V pages AND the packed LOP feature rows — the
+    sparse screen stays consistent with the exact keys it summarizes).
+    Leaves smaller than the pool's along any non-slot axis (a prefix
+    cache's token capacity is its own block-aligned length) write their
+    own extent; positions above it keep the lane's previous bytes, which
+    are zero for feature rows (``evict_slot``) and stale-masked
+    everywhere else. Dst keys missing from ``req_cache`` (``seed``,
+    ``sample_step``, per-lane vectors the prefix does not carry) keep
+    their pool values, like :func:`insert_slot`.
+
+    ``active`` follows :func:`insert_slot`'s partial-insert contract:
+    prefix clones land with ``active=False`` — the lanes are mid-prefill
+    reservations that resume chunked prefill from the cached boundary.
     """
-    pool = dict(pool)
+    def walk(path, dst, src):
+        if isinstance(dst, dict):
+            return {k: walk(path + (k,), dst[k], src[k]) if k in src
+                    else dst[k] for k in dst}
+        ax = slot_axis(path, dst)
+        idx = tuple(
+            slots if i == ax
+            else slice(0, src.shape[i]) if src.shape[i] != dst.shape[i]
+            else slice(None)
+            for i in range(dst.ndim))
+        return dst.at[idx].set(src, unique_indices=True)
+
+    new = walk((), {k: v for k, v in pool.items() if k != "active"},
+               req_cache)
+    new["active"] = pool["active"].at[slots].set(active)
+    return new
+
+
+def evict_slot(pool, slot):
+    """Retire lane ``slot``: mark inactive, zero its length AND its packed
+    LOP feature rows.
+
+    The K/V bytes are left stale — every consumer masks by
+    ``lengths``/``active``, and the next ``insert_slot`` overwrites them.
+    The 4-bit feature rows are zeroed because the LOP screen reads them
+    *before* its length mask folds the scores away: the masking makes a
+    previous occupant's ghost features logically invisible, but zeroing
+    restores the lane to its pool-init bit pattern, so a later
+    prefix-clone (which writes only the prefix's rows) screens against
+    exactly what a fresh pool would.
+    """
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if path[-1] != "feat":
+            return node
+        ax = slot_axis(path, node)
+        return node.at[(slice(None),) * ax + (slot,)].set(0)
+
+    pool = walk((), pool)
     pool["active"] = pool["active"].at[slot].set(False)
     pool["lengths"] = pool["lengths"].at[slot].set(0)
     return pool
@@ -264,3 +358,216 @@ def free_slots(pool) -> list[int]:
     """Host-side list of lanes currently free for admission (syncs)."""
     return [int(i) for i in
             np.flatnonzero(~np.asarray(pool["active"]))]
+
+
+# ---------------------------------------------------------------------------
+# Prefix store (hash-chain interning of computed prefill pages)
+# ---------------------------------------------------------------------------
+
+# per-lane vectors are not positional pages — the prefix carries lengths
+# explicitly and never touches a lane's sampling state
+_PER_LANE_KEYS = ("lengths", "cross_len", "active", "seed", "sample_step")
+
+
+def _chain_key(parent_key: bytes, block_tokens: np.ndarray) -> bytes:
+    """Hash-chain key of one token block given its parent's key."""
+    h = hashlib.blake2b(parent_key, digest_size=16)
+    h.update(np.ascontiguousarray(block_tokens, np.int32).tobytes())
+    return h.digest()
+
+
+def _slice_pages(cache, lo: int, hi: int):
+    """Token range [lo, hi) of every positional leaf of a batch-1 cache."""
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()
+                    if k not in _PER_LANE_KEYS}
+        ax = seq_axis(path, node)
+        return node[(slice(None),) * ax + (slice(lo, hi),)]
+
+    return walk((), cache)
+
+
+def _concat_pages(trees):
+    """Concatenate per-block page trees along each leaf's token axis."""
+    def walk(path, nodes):
+        if isinstance(nodes[0], dict):
+            return {k: walk(path + (k,), [n[k] for n in nodes])
+                    for k in nodes[0]}
+        if len(nodes) == 1:
+            return nodes[0]
+        return jnp.concatenate(nodes, axis=seq_axis(path, nodes[0]))
+
+    return walk((), trees)
+
+
+class _PrefixNode:
+    """One interned token block: its pages + its place in the radix chain.
+
+    ``refs`` is the node's child count — a parent's pages are live as
+    long as any longer chain extends through it, so only childless
+    (``refs == 0``) nodes are eviction candidates.
+    """
+
+    __slots__ = ("key", "parent", "tokens", "n_tokens", "pages",
+                 "children", "last_use")
+
+    def __init__(self, key, parent, tokens, n_tokens, pages):
+        self.key = key
+        self.parent = parent
+        self.tokens = tokens
+        self.n_tokens = n_tokens           # cumulative tokens through here
+        self.pages = pages
+        self.children: dict = {}
+        self.last_use = 0
+
+    @property
+    def refs(self) -> int:
+        return len(self.children)
+
+
+class PrefixStore:
+    """Hash/radix-keyed intern table over block-aligned cache pages.
+
+    Host-side control structure (the pages themselves stay on device):
+    block ``k`` of a prompt is keyed by
+    ``blake2b(parent_key ‖ int32 tokens of block k)`` — a chain, so two
+    prompts share node ``k`` iff their first ``(k+1)·block`` tokens are
+    equal. Stored tokens are compared on every walk, so a hash collision
+    degrades to a miss rather than resuming from someone else's prefill.
+
+    ``match`` finds the longest *strict*-prefix chain of a prompt (at
+    least one suffix token must remain to produce first-token logits);
+    ``insert`` interns a computed batch-1 prefill's pages block by block
+    (existing nodes are shared, not rewritten — the chunk-carry contract
+    makes recomputed pages bitwise equal to the interned ones);
+    ``assemble`` concatenates a chain's pages back into a batch-1 cache
+    for :func:`bulk_insert`.
+
+    Eviction is ref-counted LRU against ``max_tokens``: only childless
+    nodes (``refs == 0``) retire, oldest ``last_use`` first, so a chain
+    ages out leaf-to-root and a hot prefix's ancestry is never torn out
+    from under it. Matching bumps the whole ancestry's recency. Clones
+    happen synchronously at admit time, so an in-flight request never
+    holds a store reference across serve cycles.
+    """
+
+    def __init__(self, block: int, *, max_tokens: int | None = None):
+        assert block > 0
+        self.block = int(block)
+        self.max_tokens = max_tokens
+        self._root = _PrefixNode(b"", None, None, 0, None)
+        self._tick = 0
+        self.cached_tokens = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def _walk_chain(self, tokens: np.ndarray, n_blocks: int):
+        """Deepest existing node along ``tokens``'s first ``n_blocks``."""
+        node = self._root
+        for k in range(n_blocks):
+            blk = tokens[k * self.block:(k + 1) * self.block]
+            child = node.children.get(_chain_key(node.key, blk))
+            if child is None or not np.array_equal(child.tokens, blk):
+                break
+            node = child
+        return node
+
+    def match(self, tokens) -> tuple[int, _PrefixNode | None]:
+        """Longest interned strict prefix of ``tokens``.
+
+        → ``(n_tokens, node)`` — the number of cached prompt tokens (a
+        multiple of ``block``, always < ``len(tokens)``) and the chain
+        node to clone from, or ``(0, None)`` on a miss. Bumps the
+        matched ancestry's LRU recency.
+        """
+        tokens = np.asarray(tokens, np.int32)
+        self._tick += 1
+        node = self._walk_chain(tokens, max(0, (len(tokens) - 1)
+                                           // self.block))
+        if node is self._root:
+            self.misses += 1
+            return 0, None
+        n = node
+        while n is not self._root:
+            n.last_use = self._tick
+            n = n.parent
+        self.hits += 1
+        return node.n_tokens, node
+
+    def missing(self, tokens) -> bool:
+        """True if interning ``tokens`` would create at least one node —
+        the cheap pre-check that saves the lane extraction on re-inserts
+        of an already-cached prefix."""
+        tokens = np.asarray(tokens, np.int32)
+        nb = len(tokens) // self.block
+        return self._walk_chain(tokens, nb).n_tokens < nb * self.block
+
+    def insert(self, tokens, cache) -> _PrefixNode | None:
+        """Intern the block-aligned prefix of a computed prefill.
+
+        ``tokens`` (length a multiple of ``block``; pass
+        ``prompt[:plen // block * block]``) must be the first tokens the
+        batch-1 ``cache`` was prefilled with. Existing chain nodes are
+        reused; new blocks slice their pages out of ``cache``. Returns
+        the chain's deepest node (None when ``tokens`` spans no block).
+        """
+        tokens = np.asarray(tokens, np.int32)
+        nb = len(tokens) // self.block
+        assert nb * self.block == len(tokens), \
+            "insert() takes a block-aligned prefix"
+        node = self._root
+        self._tick += 1
+        for k in range(nb):
+            lo, hi = k * self.block, (k + 1) * self.block
+            blk = tokens[lo:hi]
+            key = _chain_key(node.key, blk)
+            child = node.children.get(key)
+            if child is not None:
+                if not np.array_equal(child.tokens, blk):
+                    break                  # hash collision: stop interning
+                child.last_use = self._tick
+                node = child
+                continue
+            child = _PrefixNode(key, node, blk, hi, _slice_pages(cache,
+                                                                 lo, hi))
+            child.last_use = self._tick
+            node.children[key] = child
+            self.cached_tokens += self.block
+            node = child
+        self._evict_cold()
+        return None if node is self._root else node
+
+    def assemble(self, node: _PrefixNode):
+        """Chain pages root→``node`` as a batch-1 cache for
+        :func:`bulk_insert` (token capacity = ``node.n_tokens``)."""
+        chain = []
+        n = node
+        while n is not self._root:
+            chain.append(n.pages)
+            n = n.parent
+        chain.reverse()
+        cache = _concat_pages(chain)
+        cache["lengths"] = jnp.full((1,), node.n_tokens, jnp.int32)
+        return cache
+
+    def _iter_nodes(self, node=None):
+        node = node if node is not None else self._root
+        for child in node.children.values():
+            yield child
+            yield from self._iter_nodes(child)
+
+    def _evict_cold(self) -> None:
+        """Retire cold childless nodes until under the token budget."""
+        if self.max_tokens is None:
+            return
+        while self.cached_tokens > self.max_tokens:
+            leaves = [n for n in self._iter_nodes() if not n.refs]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_use)
+            del victim.parent.children[victim.key]
+            victim.pages = None
+            self.cached_tokens -= self.block
+            self.evictions += 1

@@ -612,6 +612,12 @@ def prefill_chunk(cfg, qp, tokens, cache, *, start, seq_end, patches=None):
     token). ``start`` and ``seq_end`` may be traced, so ONE compile
     serves every chunk index of every prompt at this chunk shape.
 
+    ``start`` need not begin at 0 for a lane's FIRST call: a prefix-cache
+    hit (:class:`repro.serving.api.ExistingPrefix`) clones interned pages
+    covering [0, start) and resumes here — bitwise the same carry as any
+    later chunk, so a hit decodes token-identically to a cold prefill
+    (DESIGN.md §Prefix-caching).
+
     Supported for the causal-attention families whose per-token compute
     is independent of how the prompt is split (dense, vlm, and — router
     caveats aside, DESIGN.md §Chunked-prefill — moe). Recurrent families

@@ -12,7 +12,14 @@ engine declares*, not a name the scheduler checks (DESIGN.md
 
   admit    — a queued request is taken once a lane is free; the other lanes
              keep decoding in the meantime. Cancelled requests are dropped
-             before they ever touch a lane.
+             before they ever touch a lane. With the prefix cache on
+             (chunked engines, default), the prompt is matched against
+             the :class:`repro.serving.cache.PrefixStore` hash chain:
+             hits clone the cached pages into their reserved lanes —
+             grouped per prefix node, ONE ``engine.bulk_insert`` scatter
+             per group — and plan chunks for the uncached suffix only,
+             so a shared prompt costs one prefill plus per-request
+             suffixes (DESIGN.md §Prefix-caching).
   prefill  — two regimes (DESIGN.md §Chunked-prefill), selected by
              ``engine.supports_chunked``:
 
@@ -23,6 +30,11 @@ engine declares*, not a name the scheduler checks (DESIGN.md
              forward → partial insert, ``active=False``) so the
              in-flight K/V lives in the reserved lane; the final chunk
              activates it and seeds the first token through the sampler.
+             A prefix-hit lane starts its chunk grid at the cached block
+             boundary (``start = cached_len`` — the same bitwise
+             ``(start, kv_len)`` carry every later chunk uses), and a
+             finished prompt's block-aligned pages are interned back
+             into the store at activation.
 
              *run-to-completion*: the request runs alone (batch 1)
              through ``engine.prefill``. Engines declaring
@@ -62,9 +74,10 @@ from dataclasses import dataclass, replace
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.api import (GREEDY, FinishedRequest, GenerateRequest,
-                               PooledEngine, SamplingParams, StepResult)
-from repro.serving.cache import pool_capacity
+from repro.serving.api import (GREEDY, ExistingPrefix, FinishedRequest,
+                               GenerateRequest, PooledEngine, SamplingParams,
+                               StepResult)
+from repro.serving.cache import PrefixStore, pool_capacity
 
 # Back-compat names — the typed API in repro.serving.api is the source of
 # truth; the old scheduler-local dataclasses are these aliases now.
@@ -81,6 +94,7 @@ class _Lane:
     t_admit: float
     t_first: float
     token_times: list                  # clock() stamp per emitted token
+    cached_len: int = 0                # prompt tokens cloned from the store
 
 
 @dataclass
@@ -93,6 +107,7 @@ class _Prefill:
     seq_ends: list                     # true end written after chunk k
     t_admit: float
     next_chunk: int = 0
+    cached_len: int = 0                # prefix tokens the lane resumes past
 
 
 def pow2_bucket(n: int, *, lo: int = 16, hi: int | None = None) -> int:
@@ -121,11 +136,22 @@ class Scheduler:
     declares ``supports_chunked``; ``False`` forces run-to-completion
     prefill everywhere (the ablation baseline in
     ``benchmarks/prefill_interleave.py``).
+
+    ``prefix_cache=None`` (default) enables prefix caching when chunked
+    prefill is on and the engine declares a ``prefix_block``; ``False``
+    disables it (the cache-off arm of ``benchmarks/prefix_cache.py``).
+    ``prefix_cache_tokens`` bounds the store's interned pages (default
+    4× the pool's token capacity — prefix pages trade against slot-pool
+    pressure, not unboundedly). Matching is skipped for requests with an
+    image prefix (patch embeddings shift every text position, so token
+    chains would alias distinct streams).
     """
 
     def __init__(self, cfg, qp, *, n_slots: int, max_len: int,
                  use_lop: bool = True, bucket_min: int = 16,
                  chunked: bool | None = None, chunk_tokens: int | None = None,
+                 prefix_cache: bool | None = None,
+                 prefix_cache_tokens: int | None = None,
                  clock=time.monotonic, engine=None):
         if engine is not None:
             # an injected engine owns its own configuration — reject
@@ -151,6 +177,14 @@ class Scheduler:
         self.chunked = ((chunked is None or chunked)
                         and self.engine.supports_chunked)
         self.chunk_tokens = self.engine.chunk_tokens
+        self.prefix_store: PrefixStore | None = None
+        if self.chunked and getattr(self.engine, "prefix_block", 0) \
+                and (prefix_cache is None or prefix_cache):
+            self.prefix_store = PrefixStore(
+                self.engine.prefix_block,
+                max_tokens=(prefix_cache_tokens
+                            if prefix_cache_tokens is not None
+                            else 4 * self.capacity))
 
         self.queue: deque[GenerateRequest] = deque()
         self.lanes: list[_Lane | None] = [None] * n_slots
@@ -164,6 +198,12 @@ class Scheduler:
         # whole-prompt prefills that ran while decode lanes sat idle
         self.interleaved_decode_steps = 0
         self.full_prefill_stalls = 0
+        # prefix-cache telemetry (benchmarks/prefix_cache.py): hit counts,
+        # prompt tokens served from interned pages vs actually computed
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_served = 0
 
     @property
     def prefill_compiles(self) -> int:
@@ -207,7 +247,7 @@ class Scheduler:
         return pow2_bucket(prompt_len, lo=self.bucket_min,
                            hi=self.max_len)
 
-    def _plan_chunks(self, req: GenerateRequest):
+    def _plan_chunks(self, req: GenerateRequest, skip: int = 0):
         """Host-side chunk grid of one prompt (fixed C-token shapes).
 
         The final chunk is right-padded to the same C so every chunk of
@@ -216,21 +256,28 @@ class Scheduler:
         query row. Only when the padded end would spill past the pool
         capacity (a near-capacity prompt) does the tail fall back to its
         exact length.
+
+        ``skip`` (a prefix-cache hit: a block-aligned count of prompt
+        tokens already in the lane) plans chunks for the suffix
+        ``[skip, plen)`` only — the first chunk starts at the cached
+        boundary, the same traced ``(start, kv_len)`` carry every
+        non-first chunk already uses, so the compiled chunk shape is
+        unchanged.
         """
         plen = len(req.prompt)
         prefix = self.engine.prefix_len(req)
         c = self.chunk_tokens
-        n = max(1, -(-plen // c))
+        n = max(1, -(-(plen - skip) // c))
         chunks, starts, seq_ends = [], [], []
         for k in range(n):
-            lo, hi = k * c, min(plen, k * c + c)
+            lo, hi = skip + k * c, min(plen, skip + k * c + c)
             width = c
             if self.capacity and prefix + lo + c > self.capacity:
                 width = hi - lo                 # near-capacity exact tail
             buf = np.zeros((1, width), np.int32)
             buf[0, :hi - lo] = req.prompt[lo:hi]
             chunks.append(buf)
-            starts.append(prefix + lo if k else 0)
+            starts.append(prefix + lo if (k or skip) else 0)
             seq_ends.append(prefix + hi)
         return chunks, starts, seq_ends
 
@@ -239,28 +286,44 @@ class Scheduler:
 
         Chunked regime: the lane is *reserved* and the prompt's chunk grid
         queued — no forward pass runs here; ``step()`` advances one chunk
-        per cycle. Run-to-completion regime: the whole prompt prefills
-        synchronously (stalling any active decode lanes — counted in
-        ``full_prefill_stalls``) and the lane activates immediately.
-        Cancelled queue entries retire without touching a lane.
+        per cycle. Prompts matching the prefix store plan their uncached
+        suffix only; the matched pages are cloned after the admit sweep,
+        grouped per prefix node so N hits on one prefix cost ONE
+        ``bulk_insert`` scatter. Run-to-completion regime: the whole
+        prompt prefills synchronously (stalling any active decode lanes —
+        counted in ``full_prefill_stalls``) and the lane activates
+        immediately. Cancelled queue entries retire without touching a
+        lane.
         """
         n = 0
+        clones: dict = {}          # prefix node key -> (node, [slots])
         while self.queue and self._free:
             req = self.queue.popleft()
             if req.cancelled:
                 self._record_abort(req)
                 continue
             slot = self._free.popleft()
+            plen = len(req.prompt)
             if self.chunked:
-                chunks, starts, seq_ends = self._plan_chunks(req)
+                skip, node = 0, None
+                if self.prefix_store is not None \
+                        and not self.engine.prefix_len(req):
+                    skip, node = self.prefix_store.match(req.prompt)
+                chunks, starts, seq_ends = self._plan_chunks(req, skip=skip)
                 self._prefilling.append(_Prefill(
                     slot=slot, req=req, chunks=chunks, starts=starts,
-                    seq_ends=seq_ends, t_admit=self.clock()))
+                    seq_ends=seq_ends, t_admit=self.clock(),
+                    cached_len=skip))
+                if node is not None:
+                    clones.setdefault(node.key, (node, []))[1].append(slot)
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += skip
+                self.prefill_tokens_computed += plen - skip
+                self.prefill_tokens_served += plen
                 n += 1
                 continue
             if self.n_active:
                 self.full_prefill_stalls += 1
-            plen = len(req.prompt)
             bucket = max(self._bucket(plen), plen)
             t_admit = self.clock()
             padded = np.zeros((1, bucket), np.int32)
@@ -271,21 +334,34 @@ class Scheduler:
                 kw["frames"] = jnp.asarray(req.frames)[None]
             if self.engine.prefix_len(req):
                 kw["patches"] = jnp.asarray(req.patches)[None]
+            self.prefill_tokens_computed += plen
+            self.prefill_tokens_served += plen
             logits, req_cache = self.engine.prefill(padded, true_len, kw)
             self.pool = self.engine.insert(self.pool, slot, req_cache)
             self._start_lane(slot, req, logits, t_admit)
             n += 1
+        for node, slots in clones.values():
+            prefix = ExistingPrefix(cache=self.prefix_store.assemble(node),
+                                    common_len=node.n_tokens)
+            self.pool = self.engine.bulk_insert(
+                self.pool, np.asarray(slots, np.int32), prefix)
         return n
 
     def _start_lane(self, slot: int, req: GenerateRequest, logits,
-                    t_admit: float, done: list | None = None) -> None:
+                    t_admit: float, done: list | None = None,
+                    cached_len: int = 0) -> None:
         """Prefill finished: seed the lane with the prompt's sampled first
-        token (index 0 of the request's key schedule)."""
-        first = self.engine.sample_first(logits, req.sampling or GREEDY)
+        token (index 0 of the request's key schedule) and write the lane's
+        PRNG state (seed, next step index) into the pool."""
+        sp = req.sampling or GREEDY
+        first = self.engine.sample_first(logits, sp)
+        self.pool = self.engine.set_sampling_state(self.pool, slot,
+                                                   sp.seed, 1)
         now = self.clock()
         lane = _Lane(req=req, tokens=[first],
                      remaining=req.max_new_tokens - 1,
-                     t_admit=t_admit, t_first=now, token_times=[now])
+                     t_admit=t_admit, t_first=now, token_times=[now],
+                     cached_len=cached_len)
         self.lanes[slot] = lane
         self._next_tok[slot, 0] = first
         reason = self._token_reason(lane, first)   # evaluated exactly once
@@ -311,8 +387,29 @@ class Scheduler:
         pf.next_chunk += 1
         if final:
             self._prefilling.popleft()
-            self._start_lane(pf.slot, pf.req, logits, pf.t_admit, done)
+            self._intern_prefix(pf)
+            self._start_lane(pf.slot, pf.req, logits, pf.t_admit, done,
+                             cached_len=pf.cached_len)
         return True
+
+    def _intern_prefix(self, pf: _Prefill) -> None:
+        """Intern a finished prompt's block-aligned pages into the store.
+
+        Runs at activation, when the lane holds the whole prompt's K/V +
+        LOP features. Chunk boundaries are bitwise-reproducible (the
+        ``(start, kv_len)`` carry contract), so pages recomputed by a
+        later miss are identical to the ones interned here — reuse is
+        token-exact by construction. The ``missing`` pre-check keeps the
+        common already-interned case free of a pool extract.
+        """
+        store = self.prefix_store
+        if store is None or self.engine.prefix_len(pf.req):
+            return
+        n = (len(pf.req.prompt) // store.block) * store.block
+        if not n or not store.missing(pf.req.prompt[:n]):
+            return
+        lane = self.engine.extract(self.pool, pf.slot)
+        store.insert(pf.req.prompt[:n], lane)
 
     # ---------------- decode / evict ----------------
 
@@ -376,8 +473,6 @@ class Scheduler:
             return done
         if prefilling or self._prefilling:
             self.interleaved_decode_steps += 1
-        seeds = np.zeros(self.n_slots, np.int32)
-        steps = np.zeros(self.n_slots, np.int32)
         temps = np.zeros(self.n_slots, np.float32)
         tks = np.zeros(self.n_slots, np.int32)
         tps = np.ones(self.n_slots, np.float32)
@@ -385,13 +480,11 @@ class Scheduler:
             if lane is None:
                 continue
             sp = lane.req.sampling or GREEDY
-            seeds[slot] = sp.seed
-            steps[slot] = len(lane.tokens)      # this lane's next index
             temps[slot] = sp.temperature
             tks[slot] = sp.top_k
             tps[slot] = sp.top_p
         toks, self.pool = self.engine.decode_step(
-            self.pool, self._next_tok, seeds, steps, temps, tks, tps)
+            self.pool, self._next_tok, temps, tks, tps)
         for slot, lane in enumerate(self.lanes):
             if lane is None:
                 continue
@@ -414,7 +507,7 @@ class Scheduler:
             tokens=lane.tokens, finish_reason=reason,
             t_arrival=lane.req.arrival, t_admit=lane.t_admit,
             t_first=lane.t_first, t_done=self.clock(),
-            token_times=lane.token_times)
+            token_times=lane.token_times, cached_len=lane.cached_len)
         self.pool = self.engine.evict(self.pool, slot)
         self.lanes[slot] = None
         self._free.append(slot)
@@ -493,6 +586,11 @@ def lockstep_generate(cfg, qp, prompt, max_new_tokens: int, *,
     if eng.prefix_len(req):
         kw["patches"] = jnp.asarray(patches)[None]
     logits, cache = eng.prefill(np.asarray(prompt)[None], true_len, kw)
+    # the batch-1 cache carries the same PRNG leaves the pool does: seed +
+    # next step index (1 — index 0 is the prefill's sample_first draw)
+    cache = dict(cache)
+    cache["seed"] = jnp.full((1,), sp.seed, jnp.int32)
+    cache["sample_step"] = jnp.ones((1,), jnp.int32)
     toks: list = []
 
     def append(tok: int) -> str | None:
@@ -513,14 +611,12 @@ def lockstep_generate(cfg, qp, prompt, max_new_tokens: int, *,
         return reason
 
     reason = append(eng.sample_first(logits, sp))
-    sp_arrs = (np.asarray([sp.seed], np.int32),
-               np.asarray([sp.temperature], np.float32),
+    sp_arrs = (np.asarray([sp.temperature], np.float32),
                np.asarray([sp.top_k], np.int32),
                np.asarray([sp.top_p], np.float32))
     while reason is None and not req.cancelled:
-        seeds, temps, tks, tps = sp_arrs
+        temps, tks, tps = sp_arrs
         nxt, cache = eng.decode_step(
-            cache, np.asarray([[toks[-1]]], np.int32), seeds,
-            np.asarray([len(toks)], np.int32), temps, tks, tps)
+            cache, np.asarray([[toks[-1]]], np.int32), temps, tks, tps)
         reason = append(int(nxt[0]))
     return toks

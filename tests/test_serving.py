@@ -245,10 +245,12 @@ def test_pool_tree_matches_lockstep_cache_plus_active():
         cfg = _reduced(arch)
         pool = init_cache_pool(cfg, 2, 60)
         base = init_cache(cfg, 2, 60)
-        assert set(pool) == set(base) | {"active"}
+        assert set(pool) == set(base) | {"active", "seed", "sample_step"}
         assert not np.asarray(pool["active"]).any()
         specs = cache_pspecs(cfg, pool)
         assert specs["active"] == (None,)
+        assert specs["seed"] == (None,)
+        assert specs["sample_step"] == (None,)
         if cfg.family != "ssm":
             assert pool_capacity(pool) > 0
 
@@ -269,6 +271,52 @@ def test_inactive_lanes_do_not_drift():
     for la, lb in zip(jax.tree.leaves(jax.tree.map(np.asarray, after)),
                       jax.tree.leaves(before)):
         np.testing.assert_array_equal(la, lb)
+
+
+def test_extract_insert_round_trip_bit_exact():
+    """Property test: extract_slot → partial insert_slot(active=) is a
+    bit-exact round trip for KV pages, scales, packed LOP feature rows
+    AND lengths, at lengths straddling block boundaries — the invariant
+    bulk_insert (prefix cloning) relies on."""
+    from repro.serving.cache import extract_slot
+
+    cfg, qp = _pool_setup()
+    rng = np.random.default_rng(21)
+    # lengths below / at / above the lop_block=32 boundary
+    for plen, active in [(13, True), (32, False), (33, True), (45, False)]:
+        p = rng.integers(0, cfg.vocab, (plen,)).astype(np.int32)
+        pool = init_cache_pool(cfg, 3, MAX_LEN)
+        _, rc = prefill(cfg, qp, p[None], max_len=MAX_LEN)
+        pool = insert_slot(pool, jnp.int32(1), rc, active=active)
+        before = jax.tree.map(np.asarray, pool)
+        lane = extract_slot(pool, jnp.int32(1))
+        assert int(lane["lengths"][0]) == plen
+        again = insert_slot(pool, jnp.int32(1), lane, active=active)
+        after = jax.tree.map(np.asarray, again)
+        for la, lb in zip(jax.tree.leaves(after), jax.tree.leaves(before)):
+            np.testing.assert_array_equal(la, lb)
+
+
+def test_evict_zeroes_lop_feature_rows():
+    """Regression: evict_slot must zero the lane's packed LOP feature rows
+    (not just lengths/active) so a later prefix-clone into the lane
+    screens against exactly what a fresh pool would — no ghost features
+    from the previous occupant."""
+    cfg, qp = _pool_setup()
+    rng = np.random.default_rng(22)
+    p = rng.integers(0, cfg.vocab, (40,)).astype(np.int32)
+    pool = init_cache_pool(cfg, 2, MAX_LEN)
+    fresh_feat = np.asarray(pool["layers"]["feat"])
+    la, rc = prefill(cfg, qp, p[None], max_len=MAX_LEN)
+    pool = insert_slot(pool, jnp.int32(0), rc)
+    out, pool = _pool_decode(cfg, qp, pool,
+                             {0: int(jnp.argmax(la[0]))}, gen=3)
+    assert np.asarray(pool["layers"]["feat"][:, 0]).any()
+    pool = evict_slot(pool, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(pool["layers"]["feat"]),
+                                  fresh_feat)
+    # K/V bytes may stay stale — only the feature rows must reset
+    assert int(pool["lengths"][0]) == 0 and not bool(pool["active"][0])
 
 
 def test_quantize_params_packs_linears():
