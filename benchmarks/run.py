@@ -1,23 +1,119 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig8]
+    PYTHONPATH=src python -m benchmarks.run [--only fig8] [--trajectory]
 
 Prints ``name,value,derived`` CSV (value is µs for *_us rows, else a
 dimensionless/derived quantity per the row's note).
+
+``--trajectory`` is the first step of the ROADMAP perf-regression
+harness: before each module runs, the previous ``BENCH_*.json`` payloads
+are snapshotted (the committed version via ``git show`` when one exists,
+else the working-tree file from the last run); after the module, every
+numeric leaf of any BENCH file it rewrote is compared and the per-metric
+deltas printed — ``WARN``-flagged when a metric moved more than 20%
+run-over-run. Wall-clock metrics are expected to jitter; the flag is a
+prompt to look, not a failure (the process still exits 0 unless a module
+raised).
 """
 
 import argparse
+import glob
+import json
+import subprocess
 import sys
+
+REGRESSION_FRAC = 0.20
+
+
+def _numeric_leaves(obj, prefix=""):
+    """Flatten a JSON payload to {dotted.path: float} over numeric leaves."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_numeric_leaves(v, f"{prefix}{k}."))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            out.update(_numeric_leaves(v, f"{prefix}{i}."))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix.rstrip(".")] = float(obj)
+    return out
+
+
+def _bench_snapshot():
+    """{filename: numeric leaves} of every BENCH_*.json — the committed
+    version when git has one (the run-over-run reference), else the
+    working-tree file left by the previous run."""
+    snap = {}
+    for path in sorted(glob.glob("BENCH_*.json")):
+        text = None
+        try:
+            text = subprocess.run(
+                ["git", "show", f"HEAD:{path}"], capture_output=True,
+                text=True, check=True).stdout
+        except (subprocess.CalledProcessError, OSError):
+            pass
+        if text is None:
+            try:
+                with open(path) as fh:
+                    text = fh.read()
+            except OSError:
+                continue
+        try:
+            snap[path] = _numeric_leaves(json.loads(text))
+        except (ValueError, TypeError):
+            continue
+    return snap
+
+
+def _trajectory_report(before: dict) -> int:
+    """Compare fresh BENCH payloads against ``before``; print deltas,
+    return the count of >20% moves."""
+    moved = 0
+    for path in sorted(glob.glob("BENCH_*.json")):
+        try:
+            with open(path) as fh:
+                fresh = _numeric_leaves(json.load(fh))
+        except (OSError, ValueError):
+            continue
+        prev = before.get(path)
+        if prev is None:
+            print(f"# trajectory: {path} is new (no previous run)")
+            continue
+        if prev == fresh:
+            continue
+        for key in sorted(set(prev) & set(fresh)):
+            a, b = prev[key], fresh[key]
+            if a == b:
+                continue
+            rel = abs(b - a) / max(abs(a), 1e-12)
+            flag = " WARN" if rel > REGRESSION_FRAC else ""
+            if flag:
+                moved += 1
+            print(f"# trajectory: {path}:{key} {a:.4g} -> {b:.4g} "
+                  f"({'+' if b >= a else '-'}{rel * 100:.1f}%){flag}")
+        for key in sorted(set(fresh) - set(prev)):
+            print(f"# trajectory: {path}:{key} (new) = {fresh[key]:.4g}")
+        for key in sorted(set(prev) - set(fresh)):
+            print(f"# trajectory: {path}:{key} dropped "
+                  f"(was {prev[key]:.4g})")
+    return moved
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on module name")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="after each module, diff its fresh BENCH_*.json "
+                         "against the previous run's and warn on >20% "
+                         "metric moves")
     args = ap.parse_args()
 
     from benchmarks import (fig8_lop, fig9_schedule, kernels_micro,
-                            prefill_interleave, prefix_cache, table1_e2e)
+                            prefill_interleave, prefix_cache, spec_decode,
+                            table1_e2e)
     modules = [
         ("fig8_lop", fig8_lop),
         ("fig9_schedule", fig9_schedule),
@@ -25,20 +121,28 @@ def main() -> None:
         ("kernels_micro", kernels_micro),
         ("prefill_interleave", prefill_interleave),
         ("prefix_cache", prefix_cache),
+        ("spec_decode", spec_decode),
     ]
     print("name,value,derived")
     failed = 0
+    warned = 0
     for name, mod in modules:
         if args.only and args.only not in name:
             continue
+        before = _bench_snapshot() if args.trajectory else None
         try:
             for row_name, value, note in mod.run():
                 print(f"{row_name},{value:.4g},{note}")
         except Exception as e:   # noqa: BLE001
             print(f"{name},ERROR,{e!r}")
             failed += 1
+        if args.trajectory:
+            warned += _trajectory_report(before)
+    if args.trajectory and warned:
+        print(f"# trajectory: {warned} metric(s) moved more than "
+              f"{REGRESSION_FRAC:.0%} run-over-run")
     sys.exit(1 if failed else 0)
 
 
-if __name__ == '__main__':
+if __name__ == "__main__":
     main()

@@ -1,0 +1,137 @@
+"""Self-speculative decoding ablation: draft cheap, verify in one chunk.
+
+Replays ONE deterministic single-lane trace (4 requests, greedy, LOP on)
+under speculative decoding at γ ∈ {2, 4, 8} against the plain-decode
+baseline, for two draft configurations sharing the serving stack's
+weights (DESIGN.md §Speculative-decoding):
+
+  * **truncated stack** — the draft runs ``draft_layers=2`` of the 3
+    reduced layers with the LOP selection pinched to 1 block; the
+    cheapest proposer, lowest agreement.
+  * **lop-only** — the draft runs the FULL stack but keeps only 1 LOP
+    block per head; agreement comes almost entirely from the screen's
+    fidelity, so this bounds what the 4-bit feature cache alone buys.
+
+The accounting is per-lane (``n_slots=1``) so batching cannot mask the
+speculative win: a *decoded* token (everything after the prefill-seeded
+first token) costs exactly 1.0 full-model launches at baseline; with
+speculation it costs ``(decode + verify launches) / decoded`` — strictly
+< 1.0 exactly when verify accepts drafts. Draft passes are counted
+separately, weighted by their layer fraction, into a total model-step
+equivalence. The raw series goes to ``BENCH_spec.json``. On CPU the
+wall-clock is noise; the launch accounting is the claim.
+"""
+
+from __future__ import annotations
+
+import json
+
+N_REQUESTS = 4
+GEN = 12
+GAMMAS = (2, 4, 8)
+N_LAYERS = 3          # reduced bitnet layer count (layer-fraction math)
+ARMS = {
+    "truncated": {"draft_layers": 2, "draft_k": 1},
+    "lop_only": {"draft_layers": 3, "draft_k": 1},
+}
+
+
+def _engine(draft_layers: int, draft_k: int):
+    from repro.configs.bitnet_3b import REDUCED
+    from repro.models.transformer import init_params
+    from repro.serving.api import PooledEngine
+    from repro.serving.quantize import quantize_params
+    import jax
+
+    cfg = REDUCED
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    return cfg, PooledEngine(cfg, qp, max_len=24 + GEN,
+                             draft_layers=draft_layers, draft_k=draft_k)
+
+
+def _serve(engine, *, spec: bool, gamma: int = 4, seed: int = 0):
+    from repro.launch.serve import serve_loop
+
+    return serve_loop(None, n_slots=1, n_requests=N_REQUESTS, min_prompt=8,
+                      max_prompt=24, gen=GEN, seed=seed, prefix_cache=False,
+                      spec_decode=spec, gamma=gamma, engine=engine)
+
+
+def _account(out):
+    decoded = sum(len(t) for t in out["tokens"].values()) - N_REQUESTS
+    full = out["decode_launches"] + out["spec_verify_launches"]
+    draft_frac = out["draft_launches"] / max(1, decoded)
+    return {
+        "decoded_tokens": decoded,
+        "full_launches": full,
+        "full_launches_per_decoded": full / max(1, decoded),
+        "draft_launches_per_decoded": draft_frac,
+        "accept_rate": out["spec_accept_rate"],
+        "tokens_per_verify": out["spec_tokens_per_verify"],
+        "spec_rounds": out["spec_rounds"],
+        "wall_s": out["wall_s"],
+    }
+
+
+def run():
+    rows = []
+    payload = {"trace": {"n_requests": N_REQUESTS, "gen": GEN,
+                         "n_slots": 1, "gammas": list(GAMMAS)},
+               "arms": {}}
+
+    for arm, knobs in ARMS.items():
+        cfg, engine = _engine(**knobs)
+        payload["trace"]["arch"] = cfg.name
+        # warmup compiles (prefill/decode/draft/verify shapes)
+        _serve(engine, spec=True, gamma=GAMMAS[0], seed=9)
+
+        base = _account(_serve(engine, spec=False))
+        arm_out = {"draft_layers": knobs["draft_layers"],
+                   "draft_k": knobs["draft_k"], "baseline": base,
+                   "gammas": {}}
+        assert base["full_launches_per_decoded"] == 1.0, (
+            "baseline accounting must be exactly one full-model launch "
+            f"per decoded token, got {base['full_launches_per_decoded']}")
+
+        for g in GAMMAS:
+            acc = _account(_serve(engine, spec=True, gamma=g))
+            # the draft's layer-fraction cost folded in: total model-step
+            # equivalents per decoded token
+            acc["model_step_equiv_per_decoded"] = (
+                acc["full_launches_per_decoded"]
+                + acc["draft_launches_per_decoded"]
+                * knobs["draft_layers"] / N_LAYERS)
+            acc["full_launches_saved_vs_baseline"] = (
+                1.0 - acc["full_launches_per_decoded"])
+            arm_out["gammas"][g] = acc
+        payload["arms"][arm] = arm_out
+
+        for g in GAMMAS:
+            acc = arm_out["gammas"][g]
+            rows += [
+                (f"spec_decode/{arm}/g{g}/accept_rate", acc["accept_rate"],
+                 "accepted drafts / drafted"),
+                (f"spec_decode/{arm}/g{g}/tokens_per_verify",
+                 acc["tokens_per_verify"],
+                 "tokens emitted per verify launch (accepted prefix + "
+                 "bonus)"),
+                (f"spec_decode/{arm}/g{g}/full_launches_per_decoded",
+                 acc["full_launches_per_decoded"],
+                 "full-model launches per decoded token (< 1.0 = win)"),
+                (f"spec_decode/{arm}/g{g}/model_step_equiv_per_decoded",
+                 acc["model_step_equiv_per_decoded"],
+                 "with draft cost at its layer fraction"),
+            ]
+
+    # acceptance bar: the truncated-stack draft at γ=4 accepts something
+    # and amortizes full-model launches below one per decoded token
+    g4 = payload["arms"]["truncated"]["gammas"][4]
+    assert g4["accept_rate"] > 0, (
+        f"truncated-stack draft accepted nothing at γ=4: {g4}")
+    assert g4["full_launches_per_decoded"] < 1.0, (
+        f"speculation did not amortize launches at γ=4: {g4}")
+
+    with open("BENCH_spec.json", "w") as fh:
+        json.dump(payload, fh, indent=2)
+    return rows

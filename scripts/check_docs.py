@@ -3,7 +3,7 @@
 
     python scripts/check_docs.py [files...]
 
-Defaults to README.md, DESIGN.md, ROADMAP.md, CHANGES.md. Two rules:
+Defaults to README.md, DESIGN.md, ROADMAP.md, CHANGES.md. Three rules:
 
   1. every relative markdown link target ``[text](path#anchor)`` must
      exist on disk (http(s) links are not fetched);
@@ -11,7 +11,13 @@ Defaults to README.md, DESIGN.md, ROADMAP.md, CHANGES.md. Two rules:
      (contains "/" and ends in a known extension, or is a top-level
      *.md / *.sh / *.py) must exist — either from the repo root or via
      the docs' ``src/repro``-relative shorthand (``core/lop.py``) — so
-     the README's paper-section → module map cannot drift from the tree.
+     the README's paper-section → module map cannot drift from the tree;
+  3. every hyphenated DESIGN.md section reference (``§Chunked-prefill``
+     style — paper-numbered refs like ``§2`` stay informal) must name a
+     section that actually exists: its anchor has to appear in a
+     DESIGN.md heading line, either as the heading itself
+     (``## §Chunked-prefill``) or inline (``(§Roofline-accounting)``,
+     bare ``Fused-decode-kernel``).
 
 Exit code 1 with a per-file report if anything dangles; the CI runs this
 after the test suite (scripts/ci_tier1.sh).
@@ -29,6 +35,26 @@ DEFAULT_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md"]
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 CODE_SPAN = re.compile(r"`([^`\n]+)`")
 PATH_EXTS = (".py", ".md", ".sh", ".txt", ".json", ".yaml", ".yml")
+# §Chunked-prefill-style anchors; a bare §2 / §III paper ref has no hyphen
+SECTION_REF = re.compile(r"§([A-Za-z0-9]+(?:-[A-Za-z0-9]+)+)")
+
+
+def _design_anchors() -> set[str]:
+    """Hyphenated anchor names present in DESIGN.md heading lines, whether
+    the heading IS the anchor (``## §Chunked-prefill``), carries it inline
+    (``(§Roofline-accounting)``), or names it bare
+    (``## Fused-decode-kernel (...)``)."""
+    anchors: set[str] = set()
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        return anchors
+    for line in design.read_text().splitlines():
+        if not line.startswith("#"):
+            continue
+        anchors.update(SECTION_REF.findall(line))
+        anchors.update(re.findall(r"\b([A-Za-z0-9]+(?:-[A-Za-z0-9]+)+)\b",
+                                  line))
+    return anchors
 
 
 def _is_pathlike(span: str) -> bool:
@@ -42,7 +68,7 @@ def _is_pathlike(span: str) -> bool:
     return "/" in span or (ROOT / span).suffix == ".md"
 
 
-def check_file(path: Path) -> list[str]:
+def check_file(path: Path, anchors: set[str]) -> list[str]:
     errors = []
     text = path.read_text()
     for m in MD_LINK.finditer(text):
@@ -57,6 +83,9 @@ def check_file(path: Path) -> list[str]:
         if _is_pathlike(span) and not (ROOT / span).exists() \
                 and not (ROOT / "src" / "repro" / span).exists():
             errors.append(f"referenced path missing: `{span}`")
+    for name in sorted(set(SECTION_REF.findall(text))):
+        if name not in anchors:
+            errors.append(f"§{name} has no DESIGN.md section heading")
     return errors
 
 
@@ -64,6 +93,7 @@ def main(argv: list[str]) -> int:
     files = [Path(a) for a in argv] if argv else \
         [ROOT / f for f in DEFAULT_FILES]
     failed = 0
+    anchors = _design_anchors()
     for f in files:
         if not f.exists():
             print(f"check_docs: {f} does not exist")
@@ -73,7 +103,7 @@ def main(argv: list[str]) -> int:
             label = f.resolve().relative_to(ROOT)
         except ValueError:          # CLI arg outside the repo root
             label = f
-        errs = check_file(f)
+        errs = check_file(f, anchors)
         for e in errs:
             print(f"check_docs: {label}: {e}")
         failed += len(errs)

@@ -24,7 +24,8 @@ python -m pytest -x -q "$@"
 
 KERNEL_TESTS="tests/test_kernels.py tests/test_decode_attention.py \
 tests/test_prefill_attention.py tests/test_qlinear_fused.py \
-tests/test_serving_api.py tests/test_prefix_cache.py"
+tests/test_serving_api.py tests/test_prefix_cache.py \
+tests/test_spec_decode.py"
 for impl in ref pallas; do
     echo "ci_tier1: kernel tests under REPRO_KERNEL_IMPL=${impl}" >&2
     REPRO_KERNEL_IMPL="${impl}" python -m pytest -x -q ${KERNEL_TESTS}

@@ -100,4 +100,28 @@ for rid, (p, sp) in enumerate(zip(prompts, sps)):
     print(f"api smoke rid {rid} ({mode}): {len(res.tokens)} tokens "
           f"streamed in order, pool == lockstep")
 
+# ---------------------------------------------------------------------------
+# Speculative-decoding smoke: γ=4 draft/verify must reproduce lockstep
+# ---------------------------------------------------------------------------
+# With use_lop=False the one-chunk verify is argmax-identical to plain
+# decode, so every emitted token — greedy and seeded sampled alike — must
+# match the lockstep replay exactly (DESIGN.md §Speculative-decoding).
+
+spec = Scheduler(cfg, qp, n_slots=2, max_len=40, use_lop=False,
+                 spec_decode=True, gamma=4)
+for rid, (p, sp) in enumerate(zip(prompts, sps)):
+    spec.submit(GenerateRequest(rid=rid, prompt=p, max_new_tokens=6,
+                                sampling=sp))
+spec_results = spec.run_to_completion()
+assert spec.spec_rounds > 0, "speculative path never ran"
+for rid, (p, sp) in enumerate(zip(prompts, sps)):
+    res = next(r for r in spec_results if r.rid == rid)
+    ref = lockstep_generate(cfg, qp, p, 6, max_len=40, use_lop=False,
+                            sampling=sp)
+    assert res.tokens == ref, (rid, res.tokens, ref)
+rate = spec.spec_accepted / max(1, spec.spec_drafted)
+print(f"spec smoke (γ=4): {spec.spec_rounds} rounds, accept rate "
+      f"{rate:.2f}, {spec.spec_verify_launches} verifies, "
+      f"{spec.decode_launches} plain decodes — spec == lockstep")
+
 print("ALL SERVING SANITY OK")

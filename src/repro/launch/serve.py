@@ -27,6 +27,15 @@ fixed-shape prefill chunk AND one decode step, so TTFT is measured
 prefill (the ablation baseline); ``--chunk-tokens`` overrides the chunk
 size (default: the arch's ``lop_block``).
 
+Self-speculative decoding (DESIGN.md §Speculative-decoding) is opt-in:
+``--spec-decode --gamma 4`` drafts γ tokens per lane with a degraded-cost
+pass (``--draft-layers`` of the stack, LOP selection pinched to
+``--draft-k`` blocks) and verifies all γ+1 positions exactly in ONE
+prefill-chunk launch, emitting the agreeing prefix plus the verifier's
+bonus token; the report adds accept rate, tokens per verify launch, and
+full-model launches per generated token. Greedy speculative runs emit
+the plain-decode token stream (``--verify`` still holds).
+
 Prefix caching (DESIGN.md §Prefix-caching) is likewise ON by default
 under chunked prefill: ``--shared-prefix-tokens N --prefix-reuse-frac F``
 synthesizes a trace where a fraction of requests share one N-token
@@ -109,6 +118,9 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                prefix_cache: bool | None = None,
                shared_prefix_tokens: int = 0,
                prefix_reuse_frac: float = 1.0,
+               spec_decode: bool = False, gamma: int = 4,
+               draft_layers: int | None = None,
+               draft_k: int | None = None,
                sampling: SamplingParams | None = None,
                on_token=None, engine=None):
     """Continuous-batching run over staggered arrivals. → stats dict.
@@ -141,7 +153,12 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                       use_lop=use_lop, chunked=chunked,
                       chunk_tokens=None if engine is not None
                       else chunk_tokens,
-                      prefix_cache=prefix_cache, engine=engine)
+                      prefix_cache=prefix_cache,
+                      spec_decode=spec_decode, gamma=gamma,
+                      draft_layers=None if engine is not None
+                      else draft_layers,
+                      draft_k=None if engine is not None else draft_k,
+                      engine=engine)
 
     t0 = time.monotonic()
     pending = list(reqs)
@@ -199,6 +216,24 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
         "prefix_hit_tokens": sched.prefix_hit_tokens,
         "prefill_tokens_computed": sched.prefill_tokens_computed,
         "prefill_tokens_served": sched.prefill_tokens_served,
+        "spec_decode": sched.spec,
+        "spec_rounds": sched.spec_rounds,
+        "spec_drafted": sched.spec_drafted,
+        "spec_accepted": sched.spec_accepted,
+        "spec_emitted": sched.spec_emitted,
+        "spec_verify_launches": sched.spec_verify_launches,
+        "draft_launches": sched.draft_launches,
+        "decode_launches": sched.decode_launches,
+        # draft acceptance rate and decode amortization: full-model
+        # launches (plain decode + verify) per token actually generated —
+        # < 1.0 is the speculative win
+        "spec_accept_rate": (sched.spec_accepted
+                             / max(1, sched.spec_drafted)),
+        "spec_tokens_per_verify": (sched.spec_emitted
+                                   / max(1, sched.spec_verify_launches)),
+        "full_launches_per_token": ((sched.decode_launches
+                                     + sched.spec_verify_launches)
+                                    / max(1, total_toks)),
     }
 
     if verify:
@@ -240,6 +275,19 @@ def main():
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable the scheduler's prefix store (every "
                          "prompt prefills cold)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding: draft cheap tokens "
+                         "(truncated layer stack + degraded LOP budget), "
+                         "verify γ+1 positions in one prefill-chunk "
+                         "launch, accept the agreeing prefix")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="speculative draft length per verify launch")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="decoder layers the draft pass runs (default: "
+                         "n_layers // 2)")
+    ap.add_argument("--draft-k", type=int, default=None,
+                    help="LOP blocks the draft attention keeps "
+                         "(default: 1)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -283,6 +331,8 @@ def main():
                      prefix_cache=not args.no_prefix_cache,
                      shared_prefix_tokens=args.shared_prefix_tokens,
                      prefix_reuse_frac=args.prefix_reuse_frac,
+                     spec_decode=args.spec_decode, gamma=args.gamma,
+                     draft_layers=args.draft_layers, draft_k=args.draft_k,
                      sampling=None if sampling.greedy else sampling,
                      on_token=on_token)
 
@@ -308,6 +358,14 @@ def main():
           f"{out['ttft_p90'] * 1e3:.1f} ms; "
           f"itl p50/p99: {out['itl_p50'] * 1e3:.1f} / "
           f"{out['itl_p99'] * 1e3:.1f} ms")
+    if out["spec_decode"]:
+        print(f"speculative decode: {out['spec_rounds']} rounds, "
+              f"accept rate {out['spec_accept_rate']:.2f} "
+              f"({out['spec_accepted']}/{out['spec_drafted']} drafts), "
+              f"{out['spec_tokens_per_verify']:.2f} tokens/verify launch, "
+              f"{out['full_launches_per_token']:.2f} full-model launches "
+              f"per token ({out['decode_launches']} decode + "
+              f"{out['spec_verify_launches']} verify)")
     if out["prefix_cache"]:
         print(f"prefix cache: {out['prefix_hits']} hits "
               f"({out['prefix_hit_tokens']} tokens served from interned "

@@ -52,7 +52,8 @@ import jax
 import numpy as np
 
 from repro.serving import cache as _cache
-from repro.serving.engine import prefill, prefill_chunk, serve_step
+from repro.serving.engine import (draft_step, prefill, prefill_chunk,
+                                  serve_step)
 from repro.serving.sampling import sample_with_seed
 
 # ---------------------------------------------------------------------------
@@ -68,11 +69,15 @@ class SamplingParams:
     drives the lane-local key schedule
     (:func:`repro.serving.sampling.lane_keys`), so two runs of the same
     request with the same seed draw identical tokens regardless of what
-    else shares the pool."""
+    else shares the pool. ``gamma`` is the request's speculative draft
+    length — tokens proposed per verify launch when the scheduler runs
+    in speculative mode (``0`` defers to the scheduler's default γ;
+    ignored outside speculative mode)."""
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    gamma: int = 0
 
     @property
     def greedy(self) -> bool:
@@ -239,6 +244,14 @@ class InferenceEngine(Protocol):
                                pages (0 = engine cannot resume from a
                                cached prefix — recurrent state is not
                                positional).
+      ``supports_speculative`` the engine can draft cheap tokens
+                               (``draft``), score them exactly in one
+                               chunk-shaped launch (``verify_chunk``) and
+                               rewind rejected cache writes
+                               (``rollback``) — requires rewindable
+                               positional state, so it holds exactly
+                               where chunked prefill does (DESIGN.md
+                               §Speculative-decoding).
 
     Methods mirror the lifecycle: ``prefill`` (whole prompt → batch-1
     cache), ``prefill_chunk`` (one chunk against a reserved pool lane),
@@ -257,6 +270,7 @@ class InferenceEngine(Protocol):
     state_kind: str
     chunk_tokens: int
     prefix_block: int
+    supports_speculative: bool
 
     def init_pool(self, n_slots: int): ...
 
@@ -275,6 +289,15 @@ class InferenceEngine(Protocol):
     def extract(self, pool, slot): ...
 
     def decode_step(self, pool, tokens, temperature, top_k, top_p): ...
+
+    def draft(self, pool, tokens, temperature, top_k, top_p): ...
+
+    def verify_chunk(self, pool, slot, tokens, start): ...
+
+    def rollback(self, pool, slot, n: int): ...
+
+    def sample_block(self, logits, sampling: "SamplingParams",
+                     first_step: int): ...
 
     def evict(self, pool, slot): ...
 
@@ -302,7 +325,9 @@ class PooledEngine:
     """
 
     def __init__(self, cfg, qp, *, max_len: int, use_lop: bool = True,
-                 chunk_tokens: int | None = None):
+                 chunk_tokens: int | None = None,
+                 draft_layers: int | None = None,
+                 draft_k: int | None = None):
         import jax.numpy as jnp  # local alias for the jitted closures
 
         self.cfg = cfg
@@ -310,6 +335,12 @@ class PooledEngine:
         self.max_len = max_len
         self.use_lop = use_lop
         self.chunk_tokens = chunk_tokens or cfg.lop_block
+        # speculative draft knobs: layer-stack prefix depth and degraded
+        # LOP selection budget (None = config's serving budget)
+        self.draft_layers = min(cfg.n_layers, max(1, (
+            draft_layers if draft_layers is not None
+            else cfg.n_layers // 2)))
+        self.draft_k = 1 if draft_k is None else max(1, draft_k)
         # ---- capability declarations (family → behaviour, once) ----
         self.supports_chunked = cfg.family in ("dense", "vlm")
         self.exact_length_prefill = cfg.family in ("hybrid", "ssm",
@@ -320,6 +351,9 @@ class PooledEngine:
         # and resume rides the chunked (start, kv_len) carry — so prefix
         # caching exists exactly where chunked prefill does
         self.prefix_block = cfg.lop_block if self.supports_chunked else 0
+        # speculation needs rewindable positional state AND a chunk-shaped
+        # verify launch — exactly the chunked-prefill families
+        self.supports_speculative = self.supports_chunked
 
         self.prefill_compiles = 0
         self._fns: dict = {}
@@ -356,8 +390,37 @@ class PooledEngine:
             pool["sample_step"] = pool["sample_step"].at[slot].set(step)
             return pool
 
+        d_layers, d_k = self.draft_layers, self.draft_k
+
+        def draft_and_sample(qp_, pool, tokens, temp, tk, tp):
+            # speculative draft twin of step_and_sample: truncated layer
+            # stack + degraded LOP budget, same in-pool PRNG schedule —
+            # draft token i for a lane at emission count e samples at
+            # step e+i-1, the SAME key verify re-samples that position
+            # with, so a correct draft distribution maximizes agreement
+            seeds, steps = pool["seed"], pool["sample_step"]
+            logits, pool = draft_step(cfg, qp_, pool, tokens,
+                                      draft_layers=d_layers, draft_k=d_k,
+                                      use_lop=use_lop)
+            toks = sample_with_seed(logits, seeds, steps, temp, tk, tp)
+            pool = dict(pool)
+            adv = (pool["active"].astype(jnp.int32) if "active" in pool
+                   else jnp.int32(1))
+            pool["sample_step"] = steps + adv
+            return toks, pool
+
+        def draft_greedy(qp_, pool, tokens):
+            logits, pool = draft_step(cfg, qp_, pool, tokens,
+                                      draft_layers=d_layers, draft_k=d_k,
+                                      use_lop=use_lop)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), pool
+
         self._decode_fn = jax.jit(step_and_sample, donate_argnums=(1,))
         self._decode_greedy_fn = jax.jit(step_greedy, donate_argnums=(1,))
+        self._draft_fn = jax.jit(draft_and_sample, donate_argnums=(1,))
+        self._draft_greedy_fn = jax.jit(draft_greedy, donate_argnums=(1,))
+        self._rollback_fn = jax.jit(_cache.rollback_slot,
+                                    donate_argnums=(0,))
         self._sample_fn = jax.jit(sample_with_seed)
         self._insert_fn = jax.jit(_cache.insert_slot, donate_argnums=(0,))
         self._bulk_insert_fn = jax.jit(
@@ -468,6 +531,92 @@ class PooledEngine:
                 jnp.asarray(temperature), jnp.asarray(top_k),
                 jnp.asarray(top_p))
         return np.asarray(toks), pool
+
+    # ---------------- speculative decoding ----------------
+
+    def draft(self, pool, tokens, temperature, top_k, top_p):
+        """One degraded-cost draft step over every active lane — the
+        speculative proposer (truncated layer stack at ``draft_layers``,
+        LOP selection pinched to ``draft_k`` blocks), batched like
+        :meth:`decode_step` and sampled through the same in-pool PRNG
+        schedule. Cache writes are provisional: verify overwrites them,
+        :meth:`rollback` rewinds the rejected tail. → (tokens [B], pool).
+        """
+        jnp = self._jnp
+        if np.all(np.asarray(temperature) <= 0.0):
+            toks, pool = self._draft_greedy_fn(self.qp, pool,
+                                               jnp.asarray(tokens))
+        else:
+            toks, pool = self._draft_fn(
+                self.qp, pool, jnp.asarray(tokens),
+                jnp.asarray(temperature), jnp.asarray(top_k),
+                jnp.asarray(top_p))
+        return np.asarray(toks), pool
+
+    def verify_chunk(self, pool, slot, tokens, start):
+        """Score γ+1 positions of lane ``slot`` exactly, in ONE
+        chunk-shaped launch. ``tokens`` [1, γ+1] = [t_last, d_1..d_γ] at
+        stream positions [start, start+γ+1); the full-stack K/V for all
+        of them is (re)written through the bitwise ``(start, kv_len)``
+        chunk carry — overwriting every provisional draft row — and the
+        lane's length lands at ``start+γ+1``. Returns logits [1, γ+1, V]
+        (row i targets position start+i+1) and the pool. Advances the
+        lane's in-pool PRNG step by 1: with the γ draft advances and the
+        ``rollback`` rewind of γ−j rejected tokens, a lane that accepts
+        j drafts nets +j+1 — exactly its emission count. Compiles once
+        per verify width."""
+        key = ("verify", tokens.shape[1])
+        fn = self._fns.get(key)
+        if fn is None:
+            cfg, use_lop = self.cfg, self.use_lop
+
+            def run(qp, pool_, slot_, toks, start_):
+                lane = _cache.extract_slot(pool_, slot_)
+                width = toks.shape[1]
+                logits, lane = prefill_chunk(
+                    cfg, qp, toks, lane, start=start_,
+                    seq_end=start_ + width, all_logits=True)
+                pool_ = _cache.insert_slot(pool_, slot_, lane, active=True)
+                pool_ = dict(pool_)
+                pool_["sample_step"] = \
+                    pool_["sample_step"].at[slot_].add(1)
+                return logits, pool_
+
+            fn = jax.jit(run, donate_argnums=(1,))
+            self._fns[key] = fn
+            self.prefill_compiles += 1
+        jnp = self._jnp
+        logits, pool = fn(self.qp, pool, jnp.int32(slot),
+                          jnp.asarray(tokens), jnp.int32(start))
+        return np.asarray(logits), pool
+
+    def rollback(self, pool, slot, n: int):
+        """Rewind lane ``slot`` by ``n`` rejected speculative tokens —
+        :func:`repro.serving.cache.rollback_slot` under jit (lengths −n,
+        rejected K/V/scale/feature rows zeroed, PRNG step −n). One
+        compile serves every (slot, n)."""
+        jnp = self._jnp
+        return self._rollback_fn(pool, jnp.int32(slot), jnp.int32(n))
+
+    def sample_block(self, logits, sampling: SamplingParams,
+                     first_step: int):
+        """Sample every row of verify logits [C, V] (or [1, C, V]) under
+        one request's policy — row i at PRNG step ``first_step + i``, the
+        same per-emission key schedule the lane's decode steps use, so
+        the accepted sampled stream is the non-speculative stream.
+        → np.int32 [C]."""
+        sp = sampling or GREEDY
+        rows = np.asarray(logits)
+        if rows.ndim == 3:
+            rows = rows[0]
+        c = rows.shape[0]
+        toks = self._sample_fn(
+            rows, np.full((c,), sp.seed, np.int32),
+            first_step + np.arange(c, dtype=np.int32),
+            np.full((c,), sp.temperature, np.float32),
+            np.full((c,), sp.top_k, np.int32),
+            np.full((c,), sp.top_p, np.float32))
+        return np.asarray(toks)
 
     def evict(self, pool, slot):
         return self._evict_fn(pool, self._jnp.int32(slot))

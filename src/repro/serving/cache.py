@@ -349,6 +349,62 @@ def evict_slot(pool, slot):
     return pool
 
 
+# positional (per-token) attention-cache leaves — the rows a speculative
+# write touches and a rollback must rewind
+_POSITIONAL_KEYS = ("k", "v", "k_scale", "v_scale", "feat")
+
+
+def rollback_slot(pool, slot, n):
+    """Rewind lane ``slot`` by ``n`` speculative tokens.
+
+    The inverse of ``n`` cache appends, for the speculative-decoding
+    verify/reject cycle (DESIGN.md §Speculative-decoding): the lane's
+    ``lengths`` drops by ``n`` and the rejected token rows
+    ``[lengths - n, lengths)`` of every positional self-attention leaf —
+    K/V, their absmax scales AND the packed LOP feature rows — are
+    zeroed, restoring the lane bit-for-bit to its pool-init pattern at
+    those positions (stale-masking alone would make the rows logically
+    invisible, but bitwise lane equality is what the rollback property
+    test pins). The per-lane PRNG ``sample_step`` rewinds by ``n`` too,
+    so a sampled lane's key schedule stays aligned with its emission
+    count — rolling back ``n`` of γ speculative tokens leaves the lane
+    identical to having decoded γ−n tokens. Cross-attention pages and
+    recurrent state are untouched (the encoder memory is never
+    speculative; recurrent state cannot rewind, which is why engines
+    without paged KV do not declare ``supports_speculative``).
+
+    ``slot`` and ``n`` may be traced (one compile serves every lane and
+    every rejection count); ``n`` clamps to the lane's length.
+    """
+    old_len = pool["lengths"][slot]
+    new_len = jnp.maximum(old_len - n, 0)
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if path[-1] not in _POSITIONAL_KEYS or "cross" in path:
+            return node
+        sax = slot_axis(path, node)
+        qax = seq_axis(path, node)
+        start = (0,) * sax + (slot,) + (0,) * (node.ndim - sax - 1)
+        sizes = node.shape[:sax] + (1,) + node.shape[sax + 1:]
+        lane = jax.lax.dynamic_slice(node, start, sizes)
+        pos = jnp.arange(lane.shape[qax])
+        dead = (pos >= new_len) & (pos < old_len)
+        shape = [1] * lane.ndim
+        shape[qax] = lane.shape[qax]
+        lane = jnp.where(dead.reshape(shape), jnp.zeros((), node.dtype),
+                         lane)
+        return jax.lax.dynamic_update_slice(node, lane, start)
+
+    pool = walk((), dict(pool))
+    pool["lengths"] = pool["lengths"].at[slot].set(new_len)
+    if "sample_step" in pool:
+        pool["sample_step"] = pool["sample_step"].at[slot].set(
+            jnp.maximum(pool["sample_step"][slot] - n, 0))
+    return pool
+
+
 # ``free_slot`` is eviction under its queue-side name: a lane freed for the
 # next admission. Kept as an alias so scheduler code reads naturally.
 free_slot = evict_slot

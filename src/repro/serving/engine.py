@@ -291,7 +291,7 @@ def cross_attn_prefill(cfg, lp, h, cross_cache, cross_len, kv_max=None):
 # ===========================================================================
 
 def lop_decode_attention(cfg, qi, qsc, cl, new_len, *, window: int,
-                         use_lop: bool = True):
+                         use_lop: bool = True, k_keep: int | None = None):
     """Local (non-SP) decode attention core — one fused-kernel dispatch.
 
     qi int8 [B, H, dh]; qsc f32 [B, H, 1]; cl = cache layer; new_len [B].
@@ -304,12 +304,20 @@ def lop_decode_attention(cfg, qi, qsc, cl, new_len, *, window: int,
     per-head ``lop_screen``/``sparse_decode`` small-kernel dispatch under
     a triple ``vmap`` (DESIGN.md §Fused-decode-kernel). Retired slot-pool
     lanes arrive with ``new_len == 0`` and emit exactly zero.
+
+    ``k_keep`` overrides the config's kept-block budget — the speculative
+    draft pass degrades the screen to a smaller K than serving decode
+    uses (DESIGN.md §Speculative-decoding); ``None`` keeps the config
+    policy.
     """
     cfg = resolve_decode_flags(cfg)
     m = cl["k"].shape[2]
+    if k_keep is None:
+        k_keep = k_keep_blocks(cfg, m)
     return ops.decode_attention(
         qi, qsc, cl["k"], cl["v"], cl["k_scale"], cl["v_scale"], cl["feat"],
-        new_len, block=cfg.lop_block, k_keep=k_keep_blocks(cfg, m),
+        new_len, block=cfg.lop_block,
+        k_keep=max(1, min(k_keep, m // cfg.lop_block)),
         window=window, use_lop=use_lop,
         shared_select=bool(cfg.gqa_shared_select))
 
@@ -344,12 +352,13 @@ def _write_token(cl, ki, vi, ksc, vsc, feat, lengths, active=None):
 
 
 def attn_decode(cfg, lp, h, cl, lengths, *, use_lop=True, sp_axes=None,
-                active=None):
+                active=None, k_keep=None):
     """One-token self-attention with cache append. h [B, 1, D].
 
     ``active`` [B] bool masks slot-paged lanes: inactive lanes get effective
     length 0 (nothing valid for the LOP screen / block top-K), no cache
-    write, and zero attention output.
+    write, and zero attention output. ``k_keep`` degrades the LOP
+    selection budget (speculative draft pass); ``None`` = config policy.
     """
     b = h.shape[0]
     q, k, v = _project_qkv(cfg, lp, h)
@@ -374,7 +383,8 @@ def attn_decode(cfg, lp, h, cl, lengths, *, use_lop=True, sp_axes=None,
         cl = _write_token(cl, ki, vi, ksc, vsc, feat, lengths, active)
         out = lop_decode_attention(cfg, qi, qsc, cl, new_len,
                                    window=cfg.swa_window,
-                                   use_lop=use_lop and cfg.use_lop)
+                                   use_lop=use_lop and cfg.use_lop,
+                                   k_keep=k_keep)
     if active is not None:
         out = jnp.where(active[:, None, None], out, 0.0)
     out = qlinear(lp["wo"], out.reshape(b, 1, cfg.q_dim))
@@ -430,12 +440,13 @@ def _decoder_layer_prefill(cfg, lp, x, *, capacity, enc=None, cross_cap=None,
 
 
 def _decoder_layer_decode(cfg, lp, x, cl, lengths, *, use_lop, sp_axes,
-                          cross_cl=None, cross_len=None, active=None):
+                          cross_cl=None, cross_len=None, active=None,
+                          k_keep=None):
     x = _shard_batch(x)
     h = norm_apply(lp["ln1"], x, cfg.norm)
     attn_out, new_cl = attn_decode(cfg, lp["attn"], h, cl, lengths,
                                    use_lop=use_lop, sp_axes=sp_axes,
-                                   active=active)
+                                   active=active, k_keep=k_keep)
     x = x + attn_out
     if cross_cl is not None:
         h = norm_apply(lp["ln_x"], x, cfg.norm)
@@ -597,8 +608,17 @@ def prefill(cfg, qp, tokens, *, frames=None, patches=None, max_len=None,
     return logits, cache
 
 
-def prefill_chunk(cfg, qp, tokens, cache, *, start, seq_end, patches=None):
+def prefill_chunk(cfg, qp, tokens, cache, *, start, seq_end, patches=None,
+                  all_logits=False):
     """One fixed-shape chunk of chunked prefill. → (logits [B,V], cache).
+
+    With ``all_logits=True`` the returned logits are [B, C, V] — one row
+    per chunk position — instead of the single ``seq_end - 1`` row. This
+    is the speculative-decoding verify call (DESIGN.md
+    §Speculative-decoding): the chunk carries [t_last, d_1..d_γ], every
+    row is scored exactly through the same fused prefill dispatch that
+    decode is bitwise-pinned against, and row i is the target
+    distribution for the token after position start+i.
 
     tokens [B, C] cover global stream positions [start, start+C) (for vlm
     the stream is [image prefix ‖ text] and the first chunk additionally
@@ -646,6 +666,8 @@ def prefill_chunk(cfg, qp, tokens, cache, *, start, seq_end, patches=None):
     new_cache = dict(cache)
     new_cache["layers"] = layers_cache
     new_cache["lengths"] = jnp.full((b,), seq_end, jnp.int32)
+    if all_logits:
+        return _logits(cfg, qp, x), new_cache
     idx = jnp.clip(seq_end - 1 - start, 0, c_total - 1)
     x_last = jax.lax.dynamic_index_in_dim(x, idx, axis=1, keepdims=False)
     logits = _logits(cfg, qp, x_last)
@@ -721,6 +743,64 @@ def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
     else:
         raise ValueError(cfg.family)
 
+    new_cache["lengths"] = lengths + (1 if active is None
+                                      else active.astype(jnp.int32))
+    logits = _logits(cfg, qp, x[:, -1])
+    return logits, new_cache
+
+
+def draft_step(cfg, qp, cache, tokens, *, draft_layers: int,
+               draft_k: int | None = None, use_lop=True):
+    """One degraded-cost speculative DRAFT step. tokens [B, 1] →
+    (logits [B, V], updated cache).
+
+    The self-speculative predictor (DESIGN.md §Speculative-decoding):
+    runs only the first ``draft_layers`` decoder layers — same weights,
+    same per-layer cache lanes, same ``_decoder_layer_decode`` body as
+    :func:`serve_step` — with the LOP selection budget optionally pinched
+    to ``draft_k`` kept blocks, then projects through the SHARED logits
+    head. No separate draft model: the truncated stack + sparser screen
+    IS the cheap model.
+
+    Cache discipline mirrors ``serve_step``: the drafted token's K/V/
+    scale/LOP-feature rows are appended at position ``lengths`` for the
+    first ``draft_layers`` layers only and ``lengths`` advances per
+    active lane — provisional state that the verify call
+    (:func:`prefill_chunk` with ``all_logits=True``) OVERWRITES for every
+    layer at those same positions, and
+    :func:`repro.serving.cache.rollback_slot` rewinds for rejected
+    tokens. Between draft and verify the cache is transiently
+    inconsistent (layers ≥ draft_layers hold zeros at the drafted
+    positions); the scheduler never reads it in that window.
+
+    Dense/vlm only — the families that declare ``supports_speculative``
+    (a truncated scan needs a uniform causal layer stack, and the verify
+    side needs chunked prefill).
+    """
+    cfg = resolve_decode_flags(cfg)
+    if cfg.family not in ("dense", "vlm"):
+        raise ValueError(f"speculative draft is undefined for family "
+                         f"{cfg.family!r} (needs a uniform causal layer "
+                         f"stack and a chunked-prefill verify path)")
+    lengths = cache["lengths"]
+    active = cache.get("active")
+    x = _embed(cfg, qp, tokens)
+    new_cache = dict(cache)
+    full_layers = cache["layers"]
+    head_qp = jax.tree.map(lambda a: a[:draft_layers], qp["layers"])
+    head_cl = jax.tree.map(lambda a: a[:draft_layers], full_layers)
+
+    def body(x, inp):
+        lp, cl = inp
+        x, ncl = _decoder_layer_decode(cfg, lp, x, cl, lengths,
+                                       use_lop=use_lop, sp_axes=None,
+                                       active=active, k_keep=draft_k)
+        return x, ncl
+
+    x, upd = _layer_scan(body, x, (head_qp, head_cl))
+    new_cache["layers"] = jax.tree.map(
+        lambda u, f: jnp.concatenate([u, f[draft_layers:]], axis=0),
+        upd, full_layers)
     new_cache["lengths"] = lengths + (1 if active is None
                                       else active.astype(jnp.int32))
     logits = _logits(cfg, qp, x[:, -1])

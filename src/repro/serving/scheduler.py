@@ -152,6 +152,8 @@ class Scheduler:
                  chunked: bool | None = None, chunk_tokens: int | None = None,
                  prefix_cache: bool | None = None,
                  prefix_cache_tokens: int | None = None,
+                 spec_decode: bool = False, gamma: int = 4,
+                 draft_layers: int | None = None, draft_k: int | None = None,
                  clock=time.monotonic, engine=None):
         if engine is not None:
             # an injected engine owns its own configuration — reject
@@ -159,10 +161,14 @@ class Scheduler:
             assert chunk_tokens is None, \
                 "pass chunk_tokens to the engine, not the Scheduler, " \
                 "when injecting one"
+            assert draft_layers is None and draft_k is None, \
+                "pass draft_layers/draft_k to the engine, not the " \
+                "Scheduler, when injecting one"
             use_lop = getattr(engine, "use_lop", use_lop)
         self.engine = engine if engine is not None else PooledEngine(
             cfg, qp, max_len=max_len, use_lop=use_lop,
-            chunk_tokens=chunk_tokens)
+            chunk_tokens=chunk_tokens, draft_layers=draft_layers,
+            draft_k=draft_k)
         self.cfg = getattr(self.engine, "cfg", cfg)
         self.n_slots = n_slots
         self.max_len = max_len
@@ -177,6 +183,14 @@ class Scheduler:
         self.chunked = ((chunked is None or chunked)
                         and self.engine.supports_chunked)
         self.chunk_tokens = self.engine.chunk_tokens
+        # speculative decoding rides the engine's declared capability —
+        # an engine without rewindable positional state (or a chunked
+        # verify path) silently degrades to plain decode
+        if spec_decode:
+            assert gamma >= 1, f"spec_decode needs gamma >= 1, got {gamma}"
+        self.spec = bool(spec_decode) and getattr(
+            self.engine, "supports_speculative", False)
+        self.gamma = gamma
         self.prefix_store: PrefixStore | None = None
         if self.chunked and getattr(self.engine, "prefix_block", 0) \
                 and (prefix_cache is None or prefix_cache):
@@ -204,6 +218,16 @@ class Scheduler:
         self.prefix_hit_tokens = 0
         self.prefill_tokens_computed = 0
         self.prefill_tokens_served = 0
+        # speculative-decoding telemetry (benchmarks/spec_decode.py):
+        # full-model launches = decode_launches + spec_verify_launches;
+        # draft_launches are the degraded-cost proposer steps
+        self.spec_rounds = 0
+        self.spec_drafted = 0          # draft tokens proposed
+        self.spec_accepted = 0         # drafts that matched verify
+        self.spec_emitted = 0          # tokens emitted by spec rounds
+        self.spec_verify_launches = 0
+        self.draft_launches = 0
+        self.decode_launches = 0       # plain (non-spec) decode steps
 
     @property
     def prefill_compiles(self) -> int:
@@ -219,6 +243,19 @@ class Scheduler:
         assert not self.capacity or need <= self.capacity, (
             f"request {req.rid} needs {need} tokens but pool capacity is "
             f"{self.capacity}")
+        if self.spec and self.capacity:
+            # speculative rounds transiently write up to γ+1 rows past a
+            # lane's committed length; `_spec_gamma` shrinks γ toward the
+            # capacity boundary and a lane whose last row is the final
+            # capacity position falls back to plain decode — that
+            # fallback needs the lane's LAST committed write (position
+            # need−1) in bounds, which is the bound above. Assert the
+            # clamp's own precondition at admit so an off-by-γ overflow
+            # fails loudly here, not as cache corruption mid-round.
+            gam = req.sampling.gamma if req.sampling else 0
+            assert gam >= 0, (
+                f"request {req.rid}: sampling.gamma must be >= 0 "
+                f"(0 = scheduler default), got {gam}")
         assert req.frames is None or len(req.frames) <= \
             self.cross_capacity, (
             f"request {req.rid} has {len(req.frames)} encoder frames but "
@@ -463,9 +500,110 @@ class Scheduler:
             if lane is not None and lane.req.cancelled:
                 done.append(self._finish(slot, "cancelled"))
 
+    def _lane_kv_len(self, slot: int) -> int:
+        """Committed cache length of lane ``slot``: positions [0, L) hold
+        written K/V; the pending ``_next_tok`` will occupy position L."""
+        lane = self.lanes[slot]
+        return (self.engine.prefix_len(lane.req) + len(lane.req.prompt)
+                + len(lane.tokens) - 1)
+
+    def _spec_gamma(self) -> int:
+        """This round's draft length: the min over active lanes of the
+        per-request γ (``sampling.gamma``, 0 = scheduler default), the
+        lane's remaining token budget, and its capacity headroom — the
+        verify chunk writes γ+1 rows at [L, L+γ+1), so γ shrinks at the
+        slot boundary (never past ``max_len``). Returns 0 when any lane
+        can't speculate, falling the whole cycle back to plain decode."""
+        g = None
+        for slot, lane in enumerate(self.lanes):
+            if lane is None:
+                continue
+            sp = lane.req.sampling or GREEDY
+            lane_g = sp.gamma if sp.gamma > 0 else self.gamma
+            lane_g = min(lane_g, lane.remaining)
+            if self.capacity:
+                lane_g = min(lane_g,
+                             self.capacity - 1 - self._lane_kv_len(slot))
+            g = lane_g if g is None else min(g, lane_g)
+        return max(0, g or 0)
+
+    def _spec_round(self, g: int, temps, tks, tps,
+                    done: list) -> None:
+        """One speculative cycle: γ batched draft steps propose tokens for
+        every active lane, then ONE chunk-shaped verify launch per lane
+        scores all γ+1 positions exactly; the agreeing prefix plus the
+        verifier's bonus token are emitted and the rejected tail is
+        rewound (DESIGN.md §Speculative-decoding).
+
+        Greedy lanes emit exactly the plain-decode stream (verify logits
+        are bitwise the decode logits through the chunk-carry contract);
+        sampled lanes draw draft i and its verify row with the SAME
+        lane-local key (emission-indexed PRNG schedule), so the emitted
+        stream equals the non-speculative same-seed stream. Finish
+        reasons (eos > stop > length) are evaluated per emitted token —
+        a hit inside the accepted window evicts the lane mid-round and
+        the tokens past it are dropped, exactly as plain decode would
+        never have generated them.
+        """
+        self.spec_rounds += 1
+        active = [s for s, l in enumerate(self.lanes) if l is not None]
+        base_e = {s: len(self.lanes[s].tokens) for s in active}
+        base_len = {s: self._lane_kv_len(s) for s in active}
+        drafts: dict[int, list[int]] = {s: [] for s in active}
+        cur = self._next_tok.copy()
+        for _ in range(g):
+            toks, self.pool = self.engine.draft(self.pool, cur, temps,
+                                                tks, tps)
+            self.draft_launches += 1
+            for s in active:
+                d = int(toks[s])
+                drafts[s].append(d)
+                cur[s, 0] = d
+        self.spec_drafted += g * len(active)
+
+        for slot in active:
+            lane = self.lanes[slot]
+            start = base_len[slot]
+            # the γ-clamp's guarantee, restated where a violation would
+            # corrupt the lane: the verify writes rows [start, start+g+1)
+            assert start + g + 1 <= self.capacity, (
+                f"speculative verify would write past capacity "
+                f"({start}+{g}+1 > {self.capacity})")
+            block = np.concatenate(
+                [self._next_tok[slot], np.asarray(drafts[slot], np.int32)]
+            )[None, :]
+            logits, self.pool = self.engine.verify_chunk(
+                self.pool, slot, block, start)
+            self.spec_verify_launches += 1
+            sp = lane.req.sampling or GREEDY
+            targets = self.engine.sample_block(logits, sp, base_e[slot])
+            j = 0
+            while j < g and drafts[slot][j] == int(targets[j]):
+                j += 1
+            self.spec_accepted += j
+            finished = False
+            for tok in (int(t) for t in targets[:j + 1]):
+                idx = len(lane.tokens)
+                lane.tokens.append(tok)
+                lane.token_times.append(self.clock())
+                lane.remaining -= 1
+                self._next_tok[slot, 0] = tok
+                self.spec_emitted += 1
+                reason = self._token_reason(lane, tok)
+                self._emit(lane, tok, idx, reason)
+                if reason is not None:
+                    done.append(self._finish(slot, reason))
+                    finished = True
+                    break
+            if not finished and j < g:
+                # rewind the rejected tail: lengths start+g+1 → start+j+1
+                # (a finished lane was evicted — nothing to rewind)
+                self.pool = self.engine.rollback(self.pool, slot, g - j)
+
     def step(self) -> list[FinishedRequest]:
         """One serve cycle: cancellation sweep + ≤1 prefill chunk + one
-        sampled decode step over every active lane; returns completions."""
+        sampled decode step over every active lane (or, in speculative
+        mode, one draft-γ/verify round); returns completions."""
         done: list[FinishedRequest] = []
         self._sweep_cancelled(done)
         prefilling = self._step_prefill(done)
@@ -483,8 +621,14 @@ class Scheduler:
             temps[slot] = sp.temperature
             tks[slot] = sp.top_k
             tps[slot] = sp.top_p
+        if self.spec:
+            g = self._spec_gamma()
+            if g >= 1:
+                self._spec_round(g, temps, tks, tps, done)
+                return done
         toks, self.pool = self.engine.decode_step(
             self.pool, self._next_tok, temps, tks, tps)
+        self.decode_launches += 1
         for slot, lane in enumerate(self.lanes):
             if lane is None:
                 continue

@@ -1,0 +1,341 @@
+"""Self-speculative decoding: exactness, rollback, capacity clamping.
+
+The mode's core guarantee (DESIGN.md §Speculative-decoding): speculation
+is a PURE perf optimization — a degraded-cost draft proposes γ tokens,
+ONE chunk-shaped verify launch scores all γ+1 positions exactly, and the
+emitted stream is the non-speculative stream:
+
+  * greedy speculative decode is token-identical to ``lockstep_generate``
+    (dense and vlm, pinned with the dense-attention decode path the
+    verify chunk is bitwise-pinned against),
+  * sampled speculative decode emits the same-seed non-speculative
+    stream (draft token i and its verify row share one lane-local key),
+  * ``rollback_slot`` is the exact inverse of speculative cache writes —
+    pool bitwise-identical to never having speculated (hypothesis
+    property),
+  * γ shrinks at the slot-capacity boundary (off-by-γ overflow guard)
+    and eos/stop fire inside an accepted window,
+  * engines without the ``supports_speculative`` capability degrade to
+    plain decode.
+
+Runs under both REPRO_KERNEL_IMPL arms via scripts/ci_tier1.sh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import init_params
+from repro.serving import cache as _cache
+from repro.serving.api import GenerateRequest, PooledEngine, SamplingParams
+from repro.serving.quantize import quantize_params
+from repro.serving.scheduler import Scheduler, lockstep_generate
+
+from tests.test_models_smoke import _reduced
+
+MAX_LEN = 63          # pool capacity 64 with the reduced lop_block of 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _reduced("bitnet-3b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, quantize_params(cfg, params)
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (n,)).astype(np.int32) for n in lens]
+
+
+def _run_sched(cfg, qp, reqs, *, spec, gamma=4, n_slots=2, use_lop=False,
+               max_len=MAX_LEN, **kw):
+    sched = Scheduler(cfg, qp, n_slots=n_slots, max_len=max_len,
+                      use_lop=use_lop, spec_decode=spec, gamma=gamma, **kw)
+    for r in reqs:
+        sched.submit(r)
+    results = {r.rid: r for r in sched.run_to_completion()}
+    return sched, results
+
+
+# ---------------------------------------------------------------------------
+# Token-identity pins (the exactness proof)
+# ---------------------------------------------------------------------------
+# use_lop=False pins against the dense decode path: the verify chunk's
+# logits are argmax-identical to dense decode by the chunk-carry contract.
+# With LOP on, speculation emits the exact-attention stream while plain
+# decode emits the screened-attention stream — see
+# test_spec_with_lop_on_completes below and DESIGN.md §Speculative-decoding.
+
+
+def test_greedy_spec_matches_lockstep_dense(setup):
+    cfg, qp = setup
+    prompts = _prompts(cfg, (9, 21))
+    reqs = [GenerateRequest(rid=i, prompt=p, max_new_tokens=12)
+            for i, p in enumerate(prompts)]
+    sched, res = _run_sched(cfg, qp, reqs, spec=True, gamma=4)
+    assert sched.spec and sched.spec_rounds > 0 \
+        and sched.spec_verify_launches > 0
+    for i, p in enumerate(prompts):
+        ref = lockstep_generate(cfg, qp, p, 12, max_len=MAX_LEN,
+                                use_lop=False)
+        assert res[i].tokens == ref, f"rid {i} diverged from lockstep"
+
+
+def test_greedy_spec_matches_lockstep_vlm():
+    cfg = _reduced("llava-next-34b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    patches = (rng.standard_normal((cfg.n_img_tokens, cfg.d_model))
+               .astype(np.float32) * 0.02)
+    req = GenerateRequest(rid=0, prompt=prompt, max_new_tokens=10,
+                          patches=patches)
+    sched, res = _run_sched(cfg, qp, [req], spec=True, gamma=3, n_slots=1)
+    assert sched.spec and sched.spec_rounds > 0
+    ref = lockstep_generate(cfg, qp, prompt, 10, max_len=MAX_LEN,
+                            use_lop=False, patches=patches)
+    assert res[0].tokens == ref
+
+
+def test_sampled_spec_matches_lockstep(setup):
+    """A seeded sampled request emits its non-speculative stream: draft
+    i and verify row i draw from the SAME emission-indexed lane key, and
+    accepted tokens are always the verifier's draws."""
+    cfg, qp = setup
+    prompts = _prompts(cfg, (9, 21))
+    sp = SamplingParams(temperature=0.9, top_k=8, seed=5)
+    reqs = [GenerateRequest(rid=i, prompt=p, max_new_tokens=10, sampling=sp)
+            for i, p in enumerate(prompts)]
+    sched, res = _run_sched(cfg, qp, reqs, spec=True, gamma=3)
+    for i, p in enumerate(prompts):
+        ref = lockstep_generate(cfg, qp, p, 10, max_len=MAX_LEN,
+                                use_lop=False, sampling=sp)
+        assert res[i].tokens == ref, f"rid {i} diverged from lockstep"
+
+
+def test_spec_matches_nonspec_scheduler(setup):
+    """Speculative and plain scheduling emit identical streams while the
+    speculative run amortizes full-model launches over accepted drafts."""
+    cfg, qp = setup
+    prompts = _prompts(cfg, (12, 30), seed=11)
+    mk = lambda: [GenerateRequest(rid=i, prompt=p, max_new_tokens=8)
+                  for i, p in enumerate(prompts)]
+    spec_sched, spec_res = _run_sched(cfg, qp, mk(), spec=True, gamma=4)
+    plain_sched, plain_res = _run_sched(cfg, qp, mk(), spec=False)
+    for i in range(len(prompts)):
+        assert spec_res[i].tokens == plain_res[i].tokens
+    assert spec_sched.spec_verify_launches > 0
+    assert spec_sched.decode_launches < plain_sched.decode_launches
+    assert plain_sched.spec_rounds == 0
+
+
+def test_spec_with_lop_on_completes(setup):
+    """With the LOP screen live, speculation still serves every request to
+    its budget — the emitted stream is the verifier's exact-attention
+    stream (documented divergence from screened plain decode), and the
+    telemetry stays consistent."""
+    cfg, qp = setup
+    prompts = _prompts(cfg, (9, 21))
+    reqs = [GenerateRequest(rid=i, prompt=p, max_new_tokens=9)
+            for i, p in enumerate(prompts)]
+    sched, res = _run_sched(cfg, qp, reqs, spec=True, gamma=3, use_lop=True)
+    for i in range(len(prompts)):
+        assert len(res[i].tokens) == 9
+        assert res[i].finish_reason == "length"
+    # every token is the prefill seed, a plain-decode emission, or a
+    # spec-round emission — the counters must close the books
+    emitted = sum(len(r.tokens) for r in res.values())
+    assert len(reqs) + sched.spec_emitted <= emitted
+    assert sched.spec_accepted <= sched.spec_drafted
+
+
+# ---------------------------------------------------------------------------
+# Capacity clamp + finish-inside-window
+# ---------------------------------------------------------------------------
+
+
+def test_gamma_shrinks_at_capacity_boundary(setup):
+    """Off-by-γ overflow guard: a request sized to land its last token on
+    the final capacity position must decode correctly under a γ that
+    would otherwise write past ``max_len`` — γ shrinks per round and the
+    tail falls back to plain decode."""
+    cfg, qp = setup
+    (prompt,) = _prompts(cfg, (40,), seed=13)
+    gen = 64 - 40            # need == pool capacity exactly
+    req = GenerateRequest(rid=0, prompt=prompt, max_new_tokens=gen)
+    sched, res = _run_sched(cfg, qp, [req], spec=True, gamma=8, n_slots=1)
+    ref = lockstep_generate(cfg, qp, prompt, gen, max_len=MAX_LEN,
+                            use_lop=False)
+    assert res[0].tokens == ref
+    assert res[0].finish_reason == "length"
+    # the final lane state never exceeded capacity (evict zeroed it) and
+    # some round actually ran with a shrunken γ or plain-decode fallback
+    assert sched.decode_launches > 0 or sched.spec_rounds > 0
+
+
+def test_eos_inside_accepted_window(setup):
+    """An eos landing inside an accepted speculative window finishes the
+    lane there — tokens past it are dropped exactly as plain decode
+    would never have generated them."""
+    cfg, qp = setup
+    (prompt,) = _prompts(cfg, (15,), seed=17)
+    ref = lockstep_generate(cfg, qp, prompt, 12, max_len=MAX_LEN,
+                            use_lop=False)
+    # pick an eos that first appears mid-stream (position >= 2) so it can
+    # only fire inside a γ=4 window
+    eos, cut = None, None
+    for k in range(2, len(ref)):
+        if ref[k] not in ref[:k]:
+            eos, cut = ref[k], k
+            break
+    if eos is None:
+        pytest.skip("reference stream has no unique mid-stream token")
+    req = GenerateRequest(rid=0, prompt=prompt, max_new_tokens=12,
+                          eos_id=eos)
+    sched, res = _run_sched(cfg, qp, [req], spec=True, gamma=4, n_slots=1)
+    assert res[0].tokens == ref[:cut + 1]
+    assert res[0].finish_reason == "eos"
+
+
+def test_stop_sequence_inside_accepted_window(setup):
+    cfg, qp = setup
+    (prompt,) = _prompts(cfg, (15,), seed=17)
+    ref = lockstep_generate(cfg, qp, prompt, 12, max_len=MAX_LEN,
+                            use_lop=False)
+    cut = 3                         # stop on the first 4 emitted tokens
+    req = GenerateRequest(rid=0, prompt=prompt, max_new_tokens=12,
+                          stop=(tuple(ref[:cut + 1]),))
+    sched, res = _run_sched(cfg, qp, [req], spec=True, gamma=4, n_slots=1)
+    assert res[0].tokens == ref[:cut + 1]
+    assert res[0].finish_reason == "stop"
+
+
+def test_spec_degrades_without_capability(setup):
+    """spec_decode=True on an engine that does not declare
+    ``supports_speculative`` falls back to plain decode wholesale."""
+    cfg, qp = setup
+    engine = PooledEngine(cfg, qp, max_len=MAX_LEN, use_lop=False)
+    engine.supports_speculative = False
+    prompts = _prompts(cfg, (9,))
+    reqs = [GenerateRequest(rid=0, prompt=prompts[0], max_new_tokens=6)]
+    sched = Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN,
+                      spec_decode=True, gamma=4, engine=engine)
+    assert not sched.spec
+    for r in reqs:
+        sched.submit(r)
+    res = {r.rid: r for r in sched.run_to_completion()}
+    ref = lockstep_generate(cfg, qp, prompts[0], 6, max_len=MAX_LEN,
+                            use_lop=False)
+    assert res[0].tokens == ref
+    assert sched.spec_rounds == 0
+
+
+def test_gamma_validation(setup):
+    cfg, qp = setup
+    with pytest.raises(AssertionError):
+        Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN, spec_decode=True,
+                  gamma=0)
+
+
+# ---------------------------------------------------------------------------
+# Rollback property: speculative writes are exactly invertible
+# ---------------------------------------------------------------------------
+
+
+def _flat(pool):
+    leaves = jax.tree_util.tree_flatten_with_path(pool)[0]
+    return [(jax.tree_util.keystr(path), np.asarray(leaf))
+            for path, leaf in leaves]
+
+
+def _decode_n(engine, pool, toks_seq, temps, tks, tps):
+    for t in toks_seq:
+        _, pool = engine.decode_step(pool, np.asarray([[t]], np.int32),
+                                     temps, tks, tps)
+    return pool
+
+
+@pytest.fixture(scope="module")
+def rollback_rig(setup):
+    """Shared engine + a prefilled batch-1 cache + a ``build(n)`` that
+    inserts the lane and decodes ``n`` predetermined sampled tokens —
+    the speculative write sequence the rollback must invert."""
+    cfg, qp = setup
+    engine = PooledEngine(cfg, qp, max_len=MAX_LEN, use_lop=False)
+    (prompt,) = _prompts(cfg, (10,), seed=23)
+    _, req_cache = engine.prefill(prompt[None], len(prompt), {})
+    temps = np.asarray([0.8], np.float32)
+    tks = np.asarray([0], np.int32)
+    tps = np.asarray([1.0], np.float32)
+    feed = np.random.default_rng(29).integers(
+        0, cfg.vocab, (8,)).astype(np.int32)
+
+    def build(n_steps):
+        pool = engine.init_pool(1)
+        pool = engine.insert(pool, 0, req_cache)
+        pool = engine.set_sampling_state(pool, 0, 5, 1)
+        return _decode_n(engine, pool, feed[:n_steps], temps, tks, tps)
+
+    return engine, build
+
+
+def _assert_pools_bitwise_equal(rolled, ref):
+    a, b = _flat(rolled), _flat(ref)
+    assert [k for k, _ in a] == [k for k, _ in b]
+    for (key, va), (_, vb) in zip(a, b):
+        assert va.dtype == vb.dtype and va.shape == vb.shape, key
+        np.testing.assert_array_equal(va, vb, err_msg=key)
+
+
+@pytest.mark.parametrize("gamma,j", [(1, 0), (1, 1), (3, 1), (4, 4),
+                                     (6, 2)])
+def test_rollback_inverts_decode_writes(rollback_rig, gamma, j):
+    """insert → γ decode steps → rollback(j) is bitwise the pool that
+    decoded only γ−j tokens: lengths, K/V, scales, LOP feature rows AND
+    the PRNG seed/step leaves (deterministic grid; the hypothesis twin
+    below widens the search where hypothesis is installed)."""
+    engine, build = rollback_rig
+    _assert_pools_bitwise_equal(engine.rollback(build(gamma), 0, j),
+                                build(gamma - j))
+
+
+def test_rollback_property(rollback_rig):
+    """Hypothesis-driven version of the invariant above (skips when
+    hypothesis is absent — the parametrized grid still runs)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    engine, build = rollback_rig
+
+    @hypothesis.given(st.integers(1, 6), st.data())
+    @hypothesis.settings(max_examples=8, deadline=None)
+    def prop(gamma, data):
+        j = data.draw(st.integers(0, gamma))
+        _assert_pools_bitwise_equal(engine.rollback(build(gamma), 0, j),
+                                    build(gamma - j))
+
+    prop()
+
+
+def test_rollback_slot_targets_one_lane(setup):
+    """Rolling back one lane leaves every other lane untouched."""
+    cfg, qp = setup
+    engine = PooledEngine(cfg, qp, max_len=MAX_LEN, use_lop=False)
+    p0, p1 = _prompts(cfg, (10, 14), seed=31)
+    _, c0 = engine.prefill(p0[None], len(p0), {})
+    _, c1 = engine.prefill(p1[None], len(p1), {})
+    pool = engine.init_pool(2)
+    pool = engine.insert(pool, 0, c0)
+    pool = engine.insert(pool, 1, c1)
+    lane1_before = jax.tree.map(np.asarray,
+                                _cache.extract_slot(pool, 1))
+    pool = engine.rollback(pool, 0, 3)
+    assert int(pool["lengths"][0]) == len(p0) - 3
+    assert int(pool["lengths"][1]) == len(p1)
+    lane1_after = jax.tree.map(np.asarray, _cache.extract_slot(pool, 1))
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(lane1_before)[0],
+            jax.tree_util.tree_flatten_with_path(lane1_after)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=jax.tree_util.keystr(pa))
