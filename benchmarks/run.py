@@ -1,28 +1,90 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig8] [--trajectory]
+    PYTHONPATH=src python -m benchmarks.run --check
 
 Prints ``name,value,derived`` CSV (value is µs for *_us rows, else a
 dimensionless/derived quantity per the row's note).
 
-``--trajectory`` is the first step of the ROADMAP perf-regression
-harness: before each module runs, the previous ``BENCH_*.json`` payloads
-are snapshotted (the committed version via ``git show`` when one exists,
-else the working-tree file from the last run); after the module, every
-numeric leaf of any BENCH file it rewrote is compared and the per-metric
-deltas printed — ``WARN``-flagged when a metric moved more than 20%
-run-over-run. Wall-clock metrics are expected to jitter; the flag is a
-prompt to look, not a failure (the process still exits 0 unless a module
-raised).
+``--trajectory`` is the perf-regression gate (ROADMAP "Real-hardware
+readiness", grown from the PR-7 first cut): before each module runs, the
+previous ``BENCH_*.json`` payloads are snapshotted (the committed
+version via ``git show`` when one exists, else the working-tree file
+from the last run); the module then runs ``--repeats`` times so every
+numeric leaf yields a *sample set*, and each leaf is compared against
+its previous value with a noise-aware band — the larger of a
+per-metric-kind relative floor and ``MAD_Z`` normalized median absolute
+deviations of the fresh samples. Each leaf is classified by the
+``COVERAGE`` registry (kernel, metric kind, direction); a move beyond
+the band in a leaf's *bad* direction is a confirmed ``REGRESSION`` and
+the process exits nonzero. Leaves present on one side only print as
+``NEW`` / ``GONE`` rows instead of being dropped. A leaf no registry
+pattern claims is a coverage failure (also nonzero): every benchmark
+number must say which kernel it measures.
+
+``--check`` runs the gate's static half only — BENCH coverage plus
+``kernels/autotune.py`` tuning-table validation — with no benchmarks and
+no sweep; ``scripts/ci_tier1.sh`` runs this so a broken table or an
+unmapped BENCH leaf fails fast.
 """
 
 import argparse
+import fnmatch
 import glob
 import json
+import os
 import subprocess
 import sys
 
-REGRESSION_FRAC = 0.20
+# noise model: band = max(rel_floor(kind) * |prev|, MAD_Z * 1.4826 * MAD)
+REL_FLOOR = 0.05          # deterministic counts/ratios: any real move flags
+REL_FLOOR_TIME = 0.35     # wall-clock leaves jitter hard on shared CPUs
+MAD_Z = 5.0
+DEFAULT_REPEATS = 3
+_TIME_KINDS = ("time", "throughput")
+
+# ---------------------------------------------------------------------------
+# Per-kernel coverage registry: every numeric leaf of every BENCH file must
+# match a pattern (first match wins). Fields: (pattern, kernel, kind,
+# direction); direction "lower"/"higher" = which way is GOOD, "info" =
+# workload descriptor, reported but never gated.
+# ---------------------------------------------------------------------------
+COVERAGE = {
+    "BENCH_prefix.json": [
+        ("trace.*", "prefill", "workload", "info"),
+        ("cache_*.ttft_*", "prefill", "time", "lower"),
+        ("cache_*.wall_s", "prefill", "time", "lower"),
+        ("cache_*.tokens_per_s", "prefill", "throughput", "higher"),
+        ("cache_*.prefill_tokens_computed", "prefill", "count", "lower"),
+        ("cache_*.prefill_tokens_served", "prefill", "count", "info"),
+        ("cache_on.prefix_hits", "prefill", "count", "higher"),
+        ("cache_on.prefix_hit_tokens", "prefill", "count", "higher"),
+        ("ttft_hit_vs_cache_off_ratio", "prefill", "ratio", "lower"),
+        ("ttft_per_request.cached_len.*", "prefill", "count", "info"),
+        ("ttft_per_request.*", "prefill", "time", "info"),
+    ],
+    "BENCH_spec.json": [
+        ("trace.*", "decode", "workload", "info"),
+        ("arms.*.draft_layers", "decode", "workload", "info"),
+        ("arms.*.draft_k", "decode", "workload", "info"),
+        ("arms.*.wall_s", "decode", "time", "lower"),
+        ("arms.*.accept_rate", "decode", "ratio", "higher"),
+        ("arms.*.decoded_tokens", "decode", "count", "info"),
+        ("arms.*.full_launches_per_decoded", "decode", "ratio", "lower"),
+        ("arms.*.full_launches_saved_vs_baseline", "decode", "count",
+         "higher"),
+        ("arms.*.full_launches", "decode", "count", "lower"),
+        ("arms.*.draft_launches_per_decoded", "decode", "ratio", "info"),
+        ("arms.*.spec_rounds", "decode", "count", "info"),
+        ("arms.*.tokens_per_verify", "decode", "ratio", "higher"),
+        ("arms.*.model_step_equiv_per_decoded", "decode", "ratio", "lower"),
+    ],
+    "BENCH_proj.json": [
+        ("proj_dispatches_*", "qlinear", "count", "lower"),
+        ("proj_layer_step_*_us", "qlinear", "time", "lower"),
+        ("shapes.*", "qlinear", "workload", "info"),
+    ],
+}
 
 
 def _numeric_leaves(obj, prefix=""):
@@ -41,12 +103,34 @@ def _numeric_leaves(obj, prefix=""):
     return out
 
 
-def _bench_snapshot():
+def _leaf_rule(path: str, key: str):
+    """(kernel, kind, direction) for a BENCH leaf, or None (uncovered)."""
+    for pattern, kernel, kind, direction in COVERAGE.get(path, ()):
+        if fnmatch.fnmatchcase(key, pattern):
+            return kernel, kind, direction
+    return None
+
+
+def _coverage_problems(payloads: dict) -> list:
+    """Every leaf of every payload must map to a declared kernel+metric."""
+    problems = []
+    for path in sorted(payloads):
+        if path not in COVERAGE:
+            problems.append(f"{path}: no coverage declared")
+            continue
+        for key in sorted(payloads[path]):
+            if _leaf_rule(path, key) is None:
+                problems.append(f"{path}:{key} matches no coverage pattern")
+    return problems
+
+
+def _bench_snapshot(paths=None):
     """{filename: numeric leaves} of every BENCH_*.json — the committed
     version when git has one (the run-over-run reference), else the
     working-tree file left by the previous run."""
     snap = {}
-    for path in sorted(glob.glob("BENCH_*.json")):
+    for path in sorted(paths if paths is not None
+                       else glob.glob("BENCH_*.json")):
         text = None
         try:
             text = subprocess.run(
@@ -67,38 +151,103 @@ def _bench_snapshot():
     return snap
 
 
-def _trajectory_report(before: dict) -> int:
-    """Compare fresh BENCH payloads against ``before``; print deltas,
-    return the count of >20% moves."""
-    moved = 0
-    for path in sorted(glob.glob("BENCH_*.json")):
+def _read_bench(paths=None) -> dict:
+    """{filename: numeric leaves} of the working-tree BENCH files."""
+    out = {}
+    for path in sorted(paths if paths is not None
+                       else glob.glob("BENCH_*.json")):
         try:
             with open(path) as fh:
-                fresh = _numeric_leaves(json.load(fh))
+                out[path] = _numeric_leaves(json.load(fh))
         except (OSError, ValueError):
             continue
+    return out
+
+
+def _median(xs):
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def _noise_band(prev: float, samples, kind: str) -> float:
+    """Absolute half-width of the acceptance band around ``prev``: the
+    larger of the kind's relative floor and MAD_Z normalized MADs of the
+    fresh samples (repeat-to-repeat noise measured this run)."""
+    floor = REL_FLOOR_TIME if kind in _TIME_KINDS else REL_FLOOR
+    med = _median(samples)
+    sigma = 1.4826 * _median([abs(x - med) for x in samples])
+    return max(floor * abs(prev), MAD_Z * sigma)
+
+
+def _compare_leaf(prev: float, samples, kind: str, direction: str):
+    """One leaf's verdict: (delta_str, status) where status is
+    'ok' | 'improved' | 'regression' | 'moved' (info direction)."""
+    med = _median(samples)
+    if med == prev:
+        return None
+    band = _noise_band(prev, samples, kind)
+    rel = (med - prev) / max(abs(prev), 1e-12)
+    delta = f"{prev:.4g} -> {med:.4g} ({rel * 100:+.1f}%)"
+    if abs(med - prev) <= band:
+        return delta, "ok"
+    if direction == "info":
+        return delta, "moved"
+    bad = med > prev if direction == "lower" else med < prev
+    return delta, ("regression" if bad else "improved")
+
+
+def _trajectory_report(before: dict, samples_by_path: dict) -> int:
+    """Diff fresh sample sets against ``before``; print verdicts, return
+    the count of confirmed regressions."""
+    regressions = 0
+    for path in sorted(samples_by_path):
+        samples = samples_by_path[path]
         prev = before.get(path)
         if prev is None:
             print(f"# trajectory: {path} is new (no previous run)")
             continue
-        if prev == fresh:
-            continue
-        for key in sorted(set(prev) & set(fresh)):
-            a, b = prev[key], fresh[key]
-            if a == b:
+        keys = sorted(set(prev) | set(samples))
+        for key in keys:
+            if key not in samples:
+                print(f"# trajectory: {path}:{key} GONE "
+                      f"(was {prev[key]:.4g})")
                 continue
-            rel = abs(b - a) / max(abs(a), 1e-12)
-            flag = " WARN" if rel > REGRESSION_FRAC else ""
-            if flag:
-                moved += 1
-            print(f"# trajectory: {path}:{key} {a:.4g} -> {b:.4g} "
-                  f"({'+' if b >= a else '-'}{rel * 100:.1f}%){flag}")
-        for key in sorted(set(fresh) - set(prev)):
-            print(f"# trajectory: {path}:{key} (new) = {fresh[key]:.4g}")
-        for key in sorted(set(prev) - set(fresh)):
-            print(f"# trajectory: {path}:{key} dropped "
-                  f"(was {prev[key]:.4g})")
-    return moved
+            if key not in prev:
+                print(f"# trajectory: {path}:{key} NEW = "
+                      f"{_median(samples[key]):.4g}")
+                continue
+            rule = _leaf_rule(path, key)
+            kind, direction = (rule[1], rule[2]) if rule else ("count",
+                                                               "info")
+            verdict = _compare_leaf(prev[key], samples[key], kind,
+                                    direction)
+            if verdict is None:
+                continue
+            delta, status = verdict
+            if status == "regression":
+                regressions += 1
+                print(f"# trajectory: {path}:{key} {delta} REGRESSION")
+            elif status == "improved":
+                print(f"# trajectory: {path}:{key} {delta} improved")
+            elif status == "moved":
+                print(f"# trajectory: {path}:{key} {delta}")
+    return regressions
+
+
+def _check(paths=None) -> int:
+    """Static gate: BENCH coverage + tuning-table validity. No benchmarks."""
+    problems = _coverage_problems(_read_bench(paths))
+    try:
+        from repro.kernels import autotune
+        problems += [f"tuning table: {p}" for p in autotune.validate_table()]
+    except ImportError as e:
+        problems.append(f"tuning table: autotune unimportable ({e!r})")
+    for p in problems:
+        print(f"# check: {p}")
+    print(f"# check: {'FAIL' if problems else 'OK'} "
+          f"({len(problems)} problem(s))")
+    return 1 if problems else 0
 
 
 def main() -> None:
@@ -106,10 +255,20 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on module name")
     ap.add_argument("--trajectory", action="store_true",
-                    help="after each module, diff its fresh BENCH_*.json "
-                         "against the previous run's and warn on >20% "
-                         "metric moves")
+                    help="run each module --repeats times and gate every "
+                         "BENCH_*.json leaf against the previous run with "
+                         "a median + MAD noise band; exits nonzero on a "
+                         "confirmed regression or a coverage hole")
+    ap.add_argument("--repeats", type=int, default=DEFAULT_REPEATS,
+                    help="trajectory sample count per module "
+                         f"(default {DEFAULT_REPEATS})")
+    ap.add_argument("--check", action="store_true",
+                    help="static gate only: BENCH coverage + tuning-table "
+                         "validation, no benchmarks")
     args = ap.parse_args()
+
+    if args.check:
+        sys.exit(_check())
 
     from benchmarks import (fig8_lop, fig9_schedule, kernels_micro,
                             prefill_interleave, prefix_cache, spec_decode,
@@ -125,23 +284,49 @@ def main() -> None:
     ]
     print("name,value,derived")
     failed = 0
-    warned = 0
+    regressions = 0
+    coverage_holes = 0
+    repeats = max(1, args.repeats) if args.trajectory else 1
     for name, mod in modules:
         if args.only and args.only not in name:
             continue
         before = _bench_snapshot() if args.trajectory else None
+        mtimes = {p: os.stat(p).st_mtime for p in glob.glob("BENCH_*.json")} \
+            if args.trajectory else {}
+        samples_by_path: dict = {}
         try:
-            for row_name, value, note in mod.run():
-                print(f"{row_name},{value:.4g},{note}")
+            for rep in range(repeats):
+                rows = mod.run()
+                if rep == 0:
+                    for row_name, value, note in rows:
+                        print(f"{row_name},{value:.4g},{note}")
+                if args.trajectory:
+                    # gate only the files THIS module (re)wrote
+                    for path, leaves in _read_bench().items():
+                        st = os.stat(path).st_mtime
+                        if path in mtimes and st == mtimes[path]:
+                            continue
+                        store = samples_by_path.setdefault(path, {})
+                        for key, val in leaves.items():
+                            store.setdefault(key, []).append(val)
         except Exception as e:   # noqa: BLE001
             print(f"{name},ERROR,{e!r}")
             failed += 1
-        if args.trajectory:
-            warned += _trajectory_report(before)
-    if args.trajectory and warned:
-        print(f"# trajectory: {warned} metric(s) moved more than "
-              f"{REGRESSION_FRAC:.0%} run-over-run")
-    sys.exit(1 if failed else 0)
+        if args.trajectory and samples_by_path:
+            regressions += _trajectory_report(before, samples_by_path)
+            holes = _coverage_problems(
+                {p: {k: _median(v) for k, v in s.items()}
+                 for p, s in samples_by_path.items()})
+            for h in holes:
+                print(f"# trajectory: coverage: {h}")
+            coverage_holes += len(holes)
+    if args.trajectory and regressions:
+        print(f"# trajectory: {regressions} confirmed regression(s) "
+              f"beyond the noise band")
+    if args.trajectory and coverage_holes:
+        print(f"# trajectory: {coverage_holes} BENCH leaf/leaves with no "
+              f"declared kernel coverage")
+    sys.exit(1 if (failed or regressions or coverage_holes) else 0)
 
 
 if __name__ == "__main__":

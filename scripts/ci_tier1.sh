@@ -25,11 +25,17 @@ python -m pytest -x -q "$@"
 KERNEL_TESTS="tests/test_kernels.py tests/test_decode_attention.py \
 tests/test_prefill_attention.py tests/test_qlinear_fused.py \
 tests/test_serving_api.py tests/test_prefix_cache.py \
-tests/test_spec_decode.py"
+tests/test_spec_decode.py tests/test_autotune.py \
+tests/test_bench_trajectory.py"
 for impl in ref pallas; do
     echo "ci_tier1: kernel tests under REPRO_KERNEL_IMPL=${impl}" >&2
     REPRO_KERNEL_IMPL="${impl}" python -m pytest -x -q ${KERNEL_TESTS}
 done
+
+# perf-gate static half: every BENCH leaf must map to a declared kernel and
+# the autotune table (if present) must validate — no benchmarks, no sweep
+echo "ci_tier1: benchmark coverage + tuning-table check" >&2
+python -m benchmarks.run --check
 
 # docs honesty: README/DESIGN/ROADMAP/CHANGES internal links and referenced
 # paths must resolve (the paper-section → module map cannot drift)

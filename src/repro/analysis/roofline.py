@@ -23,6 +23,30 @@ PEAK_FLOPS_INT8 = 394e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 
+# Per-core VMEM (TPU v5e ~16 MiB). Kernel tile sweeps
+# (kernels/autotune.py) budget against a fraction of this — Mosaic needs
+# headroom for spills and the double-buffered input windows.
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_BUDGET_FRACTION = 0.5
+
+
+def vmem_budget() -> int:
+    """Bytes a kernel's resident working set may claim (tile sweep bound)."""
+    return int(VMEM_BYTES * VMEM_BUDGET_FRACTION)
+
+
+def arithmetic_intensity(flops: float, bytes_accessed: float) -> float:
+    """FLOPs per HBM byte — the roofline x-axis."""
+    return flops / bytes_accessed if bytes_accessed > 0 else 0.0
+
+
+def machine_balance(int8: bool = False) -> float:
+    """The roofline ridge point (FLOPs/byte): tiles whose arithmetic
+    intensity sits below this are HBM-bound no matter how good the
+    schedule; the tile sweep ranks candidates by distance above it."""
+    peak = PEAK_FLOPS_INT8 if int8 else PEAK_FLOPS_BF16
+    return peak / HBM_BW
+
 
 def roofline_terms(cost: dict, coll: dict, *, model_flops_per_chip: float
                    = 0.0) -> dict:

@@ -113,7 +113,8 @@ def _flush(o_ref, m_out, l_out, m_ref, l_ref, acc_ref, return_stats):
 def _fused_lop_kernel(nl_ref, po_ref, qi_ref, qs_ref, feat_ref,
                       k_hbm, v_hbm, ks_hbm, vs_hbm,
                       o_ref, *rest, nb, g, hkv, block, k_keep, window,
-                      softmax_scale, n_buckets, shared_select, return_stats):
+                      softmax_scale, n_buckets, n_slots, shared_select,
+                      return_stats):
     """Grid (b·hkv, NB + n_cand): screen → select → DMA'd exact attention."""
     if return_stats:
         m_out, l_out = rest[0], rest[1]
@@ -166,11 +167,15 @@ def _fused_lop_kernel(nl_ref, po_ref, qi_ref, qs_ref, feat_ref,
         rank_ref[...] = comparison_free_rank(blk_ref[...], k_keep,
                                              n_buckets)
 
-    # ---- exact: double-buffered candidate DMA + online softmax ----
-    # Candidate c's K/V/scale blocks are fetched into slot c % 2; the copy
-    # for c+1 starts BEFORE the wait-and-compute of c, so the HBM fetch of
-    # the next candidate hides behind the MXU work of the current one —
-    # the head-level pipelining the paper overlaps in silicon.
+    # ---- exact: slot-buffered candidate DMA + online softmax ----
+    # Candidate c's K/V/scale blocks are fetched into slot c % n_slots;
+    # the copy for c + n_slots − 1 starts BEFORE the wait-and-compute of
+    # c, so up to n_slots − 1 fetches are in flight behind the MXU work
+    # of the current candidate — the head-level pipelining the paper
+    # overlaps in silicon. n_slots = 2 is classic double buffering (the
+    # historical shape); the slot count only changes WHEN a block is
+    # fetched, never which blocks fold or in what order, so every
+    # n_slots ≥ 1 is bitwise n_slots = 2 (DESIGN.md §Autotuning).
     def _resolve(c):
         """Candidate number → (gated?, selected block id)."""
         if shared_select:
@@ -199,22 +204,27 @@ def _fused_lop_kernel(nl_ref, po_ref, qi_ref, qs_ref, feat_ref,
     @pl.when(j >= nb)
     def _cand():
         c = j - nb
-        slot = jax.lax.rem(c, 2)
+        slot = jax.lax.rem(c, n_slots)
         gate, idx = _resolve(c)
 
-        @pl.when((c == 0) & gate)
-        def _warmup():
-            for cp in _copies(slot, idx):
-                cp.start()
+        # warmup: the first candidate step fills slots 0..n_slots−2
+        for cc in range(min(n_slots - 1, n_cand)):
+            gate_w, idx_w = _resolve(cc)
 
-        if n_cand > 1:
-            @pl.when(c + 1 < n_cand)
+            @pl.when((c == 0) & gate_w)
+            def _warmup(cc=cc, gate_w=gate_w, idx_w=idx_w):
+                for cp in _copies(cc % n_slots, idx_w):
+                    cp.start()
+
+        if n_cand >= n_slots:
+            @pl.when(c + n_slots - 1 < n_cand)
             def _prefetch_next():
-                gate_n, idx_n = _resolve(c + 1)
+                gate_n, idx_n = _resolve(c + n_slots - 1)
 
                 @pl.when(gate_n)
                 def _():
-                    for cp in _copies(jax.lax.rem(c + 1, 2), idx_n):
+                    for cp in _copies(jax.lax.rem(c + n_slots - 1, n_slots),
+                                      idx_n):
                         cp.start()
 
         @pl.when(gate)
@@ -306,13 +316,14 @@ def _fused_dense_kernel(nl_ref, po_ref, qi_ref, qs_ref, k_ref, v_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "hkv", "block", "k_keep", "window", "softmax_scale", "use_lop",
-    "shared_select", "return_stats", "n_buckets", "interpret"))
+    "shared_select", "return_stats", "n_buckets", "n_slots", "interpret"))
 def fused_decode_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale,
                            feat, new_len, pos_off, *, hkv: int, block: int,
                            k_keep: int, window: int, softmax_scale: float,
                            use_lop: bool = True, shared_select: bool = False,
                            return_stats: bool = False,
                            n_buckets: int = DEFAULT_N_BUCKETS,
+                           n_slots: int = 2,
                            interpret: bool = False):
     """One fused decode-attention step over every (batch, kv-head) lane.
 
@@ -324,11 +335,14 @@ def fused_decode_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale,
     feat      uint8  [BH, M, d/2]  packed (sgn‖LO) feature cache
     new_len   int32  [B]           valid tokens per lane (0 = retired slot)
     pos_off   int32  [1]           global position of cache row 0 (SP shard)
+    n_slots   candidate DMA slots in VMEM (≥ 1; 2 = double buffering, the
+              default; more slots deepen the fetch pipeline, bitwise)
     → f32 [BH, G, d]; with ``return_stats`` also (m, ℓ) f32 [BH, G, 1].
     """
     bhg, g, d = qi.shape
     m = k_cache.shape[1]
     assert m % block == 0, (m, block)
+    assert n_slots >= 1, n_slots
     nb = m // block
     nbp = _round_up(nb, 128)                 # lane-padded score scratch
     g_sel = 1 if shared_select else g
@@ -398,18 +412,18 @@ def fused_decode_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale,
             pltpu.VMEM((g, 128), jnp.float32),       # running max
             pltpu.VMEM((g, 128), jnp.float32),       # running sum-exp
             pltpu.VMEM((g, d), jnp.float32),         # output accumulator
-            pltpu.VMEM((2, block, d), jnp.int8),     # K blocks (2 slots)
-            pltpu.VMEM((2, block, d), jnp.int8),     # V blocks (2 slots)
-            pltpu.VMEM((2, block, 1), jnp.float32),  # K scales (2 slots)
-            pltpu.VMEM((2, block, 1), jnp.float32),  # V scales (2 slots)
-            pltpu.SemaphoreType.DMA((2, 4)),
+            pltpu.VMEM((n_slots, block, d), jnp.int8),     # K block slots
+            pltpu.VMEM((n_slots, block, d), jnp.int8),     # V block slots
+            pltpu.VMEM((n_slots, block, 1), jnp.float32),  # K scale slots
+            pltpu.VMEM((n_slots, block, 1), jnp.float32),  # V scale slots
+            pltpu.SemaphoreType.DMA((n_slots, 4)),
         ],
     )
     return pl.pallas_call(
         functools.partial(_fused_lop_kernel, nb=nb, g=g, hkv=hkv,
                           block=block, k_keep=k_keep, window=window,
                           softmax_scale=softmax_scale, n_buckets=n_buckets,
-                          shared_select=shared_select,
+                          n_slots=n_slots, shared_select=shared_select,
                           return_stats=return_stats),
         grid_spec=grid_spec,
         out_shape=outs if return_stats else outs[0],

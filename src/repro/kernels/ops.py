@@ -17,6 +17,14 @@ same model code runs in tests (small shapes, interpret kernels), in the
 dry-run (full shapes, ref path), and on real hardware (kernels).
 
 All wrappers pad to the kernel block sizes and slice back.
+
+Block shapes come from a three-step precedence chain
+(:mod:`repro.kernels.autotune`, DESIGN.md §Autotuning): an active
+``autotune.override`` context, then the swept ``TUNE_kernels.json``
+table keyed by backend config and workload shape, then the hardcoded
+defaults below — so with no table on disk every dispatch is bitwise the
+pre-autotune behavior, and every swept knob is a pure tiling choice
+pinned against the same oracles.
 """
 
 from __future__ import annotations
@@ -28,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core.lop import pot
 from repro.core.ternary import TernaryWeight
+from repro.kernels import autotune as _tune
 from repro.kernels import decode_attention as _dec
 from repro.kernels import int8_attention as _attn
 from repro.kernels import lop_scores as _lop
@@ -78,10 +87,11 @@ def ternary_matmul(x: jax.Array, tw: TernaryWeight, *,
         out = _ref.ternary_matmul_ref(x2, tw.packed, k)
         return out.reshape(*lead, n)
 
-    bm, bk, bn = _tmm.DEFAULT_BM, _tmm.DEFAULT_BK, _tmm.DEFAULT_BN
-    bm = min(bm, max(8, x2.shape[0]))
-    bk = min(bk, k)
-    bn = min(bn, n)
+    tuned = _tune.lookup("ternary_matmul",
+                         {"m": x2.shape[0], "k": k, "n": n})
+    bm = tuned.get("bm", min(_tmm.DEFAULT_BM, max(8, x2.shape[0])))
+    bk = tuned.get("bk", min(_tmm.DEFAULT_BK, k))
+    bn = tuned.get("bn", min(_tmm.DEFAULT_BN, n))
     xp, m0 = _pad_to(x2, bm, 0)
     assert k % bk == 0 and n % bn == 0, (k, n, bk, bn)
     out = _tmm.ternary_matmul(xp, tw.packed, k, bm=bm, bk=bk, bn=bn,
@@ -144,11 +154,16 @@ def qlinear_fused(x: jax.Array, packed: jax.Array, scale: jax.Array,
         p3, s3 = packed[None], scale_row[None]
         b3 = None if bias is None else bias.reshape(1, 1, n)
     m0 = x3.shape[1]
-    bm = min(_tmm.DEFAULT_BM, _round_up(max(m0, 1), 8))
+    tuned = _tune.lookup("qlinear", {"e": x3.shape[0], "m": m0,
+                                     "k": k, "n": n})
+    bm = tuned.get("bm", min(_tmm.DEFAULT_BM, _round_up(max(m0, 1), 8)))
     pad = (-m0) % bm
     if pad:
         x3 = jnp.pad(x3, ((0, 0), (0, pad), (0, 0)))
-    out = _ql.fused_qlinear(x3, p3, s3, b3, bm=bm, bn=_pick_block(n),
+    out = _ql.fused_qlinear(x3, p3, s3, b3, bm=bm,
+                            bn=tuned.get("bn", _pick_block(n)),
+                            bkq=tuned.get("bkq", 0),
+                            eg=tuned.get("eg", 1),
                             act=act, interpret=_interpret())[:, :m0]
     if expert:
         return out
@@ -183,12 +198,16 @@ def ffn_fused(x: jax.Array, gu_packed: jax.Array, gu_scale: jax.Array,
         gu3, gs3 = gu_packed[None], gu_row[None]
         d3, ds3 = down_packed[None], down_row[None]
     m0 = x3.shape[1]
-    bm = min(_tmm.DEFAULT_BM, _round_up(max(m0, 1), 8))
+    tuned = _tune.lookup("ffn", {"e": x3.shape[0], "m": m0, "k": k,
+                                 "f": f, "n": d_out})
+    bm = tuned.get("bm", min(_tmm.DEFAULT_BM, _round_up(max(m0, 1), 8)))
     pad = (-m0) % bm
     if pad:
         x3 = jnp.pad(x3, ((0, 0), (0, pad), (0, 0)))
-    out = _ql.fused_ffn(x3, gu3, gs3, d3, ds3, bm=bm, bf=_pick_block(f),
-                        bn=_pick_block(d_out), act=act, gated=gated,
+    out = _ql.fused_ffn(x3, gu3, gs3, d3, ds3, bm=bm,
+                        bf=tuned.get("bf", _pick_block(f)),
+                        bn=tuned.get("bn", _pick_block(d_out)),
+                        bkq=tuned.get("bkq", 0), act=act, gated=gated,
                         interpret=_interpret())[:, :m0]
     if expert:
         return out
@@ -309,7 +328,9 @@ def prefill_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale, kv_len, *,
             window=window, softmax_scale=softmax_scale,
             int8_logits=int8_logits)
 
-    bk = min(_pf.DEFAULT_BK, m)
+    tuned = _tune.lookup("prefill", {"bhg": b * hkv, "r": g * c, "d": dh,
+                                     "m": m, "chunk": c})
+    bk = tuned.get("block", min(_pf.DEFAULT_BK, m))
     pad = (-m) % bk
     if pad:
         widths = [(0, 0), (0, 0), (0, pad)]
@@ -327,9 +348,9 @@ def prefill_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale, kv_len, *,
     out = _pf.fused_prefill_attention(
         qig, qsg, k_cache.reshape(bh, m, dh), v_cache.reshape(bh, m, dh),
         k_scale.reshape(bh, m, 1), v_scale.reshape(bh, m, 1), kv_len, po,
-        hkv=hkv, chunk=c, block=bk, causal=causal, window=window,
-        softmax_scale=softmax_scale, int8_logits=int8_logits,
-        interpret=_interpret())
+        hkv=hkv, chunk=c, block=bk, bq=tuned.get("bq", 0), causal=causal,
+        window=window, softmax_scale=softmax_scale,
+        int8_logits=int8_logits, interpret=_interpret())
     return out.reshape(b, h, c, dh)
 
 
@@ -397,12 +418,14 @@ def decode_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale, feat,
     vsf = v_scale.reshape(bh, m, 1)
     featf = feat.reshape(bh, m, dh // 2)
     po = jnp.full((1,), 0 if pos_offset is None else pos_offset, jnp.int32)
+    tuned = _tune.lookup("decode", {"bhg": bh, "g": g, "d": dh, "m": m,
+                                    "block": block, "k_keep": k_keep})
     out = _dec.fused_decode_attention(
         qig, qsg, kf, vf, ksf, vsf, featf, new_len.astype(jnp.int32), po,
         hkv=hkv, block=block, k_keep=k_keep, window=window,
         softmax_scale=softmax_scale, use_lop=use_lop,
         shared_select=shared_select, return_stats=return_stats,
-        interpret=_interpret())
+        n_slots=tuned.get("n_slots", 2), interpret=_interpret())
     if return_stats:
         o, ms, ls = out
         return (o.reshape(b, h, dh), ms.reshape(b, h, 1),

@@ -51,10 +51,13 @@ chunk's K/V were written (0 = nothing valid → zero output); ``q_off``
 int32 [1] — global position of chunk row t = 0. They drive gating and
 masking only; tensor operands are addressed by the grid alone.
 
-Validated in interpret mode (the container's mandated mode). On a real
-TPU the whole-prompt path would want the R = G·S query rows tiled over a
-third grid axis before Mosaic compilation — noted in ROADMAP.md; the
-serving path only ever calls this with R = G·chunk.
+Validated in interpret mode (the container's mandated mode). The R
+query rows can be tiled over a third grid axis (``bq``, the
+carried-forward ROADMAP.md item, now a sweepable knob of
+DESIGN.md §Autotuning): each bq-row slab walks the same kv blocks the
+untiled kernel walks, so any divisor of R is bitwise ``bq = R`` while
+capping resident VMEM at bq·(256 + d) f32 — what makes whole-prompt
+32k-row calls compilable on real hardware.
 """
 
 from __future__ import annotations
@@ -73,11 +76,20 @@ DEFAULT_BK = 128
 
 def _fused_prefill_kernel(kvl_ref, qo_ref, qi_ref, qs_ref, k_ref, v_ref,
                           ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                          nb, hkv, chunk, block, causal, window,
+                          nb, hkv, chunk, block, bq, causal, window,
                           softmax_scale, int8_logits):
-    """Grid (b·hkv, kv-block j); j is the sequential streaming axis."""
+    """Grid (b·hkv, query-row tile qt, kv-block j); j streams sequentially.
+
+    The second axis tiles the R query rows in ``bq``-row slabs (the
+    carried-forward third grid axis: R never has to fit VMEM whole). A
+    row's fold sequence is unchanged by the tiling — the kv gate stays
+    the whole-chunk one, so a slab walks exactly the blocks the untiled
+    kernel walks and masked folds remain bitwise no-ops — hence any
+    ``bq`` is bitwise ``bq = R``.
+    """
     bh = pl.program_id(0)
-    j = pl.program_id(1)
+    qt = pl.program_id(1)
+    j = pl.program_id(2)
     kvl = kvl_ref[bh // hkv]
     qo = qo_ref[0]
     r = qi_ref.shape[1]
@@ -116,8 +128,9 @@ def _fused_prefill_kernel(kvl_ref, qo_ref, qi_ref, qs_ref, k_ref, v_ref,
         kpos = j * block + jax.lax.broadcasted_iota(jnp.int32, (r, block), 1)
         mask = kpos < kvl
         if causal:
-            # row r = g*chunk + t → in-chunk offset t → global query pos
+            # row qt·bq + i = g*chunk + t → in-chunk offset t → query pos
             t = jax.lax.rem(
+                qt * bq +
                 jax.lax.broadcasted_iota(jnp.int32, (r, block), 0), chunk)
             qpos = qo + t
             mask = jnp.logical_and(mask, kpos <= qpos)
@@ -147,12 +160,13 @@ def _fused_prefill_kernel(kvl_ref, qo_ref, qi_ref, qs_ref, k_ref, v_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "hkv", "chunk", "block", "causal", "window", "softmax_scale",
+    "hkv", "chunk", "block", "bq", "causal", "window", "softmax_scale",
     "int8_logits", "interpret"))
 def fused_prefill_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale,
                             kv_len, pos_off, *, hkv: int, chunk: int,
-                            block: int, causal: bool, window: int,
-                            softmax_scale: float, int8_logits: bool = False,
+                            block: int, bq: int = 0, causal: bool,
+                            window: int, softmax_scale: float,
+                            int8_logits: bool = False,
                             interpret: bool = False) -> jax.Array:
     """One fused prefill-chunk attention over every (batch, kv-head) lane.
 
@@ -164,6 +178,8 @@ def fused_prefill_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale,
     k/v_scale f32   [BH, M, 1]   per-token absmax scales
     kv_len    int32 [B]          valid tokens incl. this chunk (0 = none)
     pos_off   int32 [1]          global position of chunk row t = 0
+    bq        query rows resident per grid step (0 → all R rows, the
+              historical shape); any divisor of R is bitwise-equivalent
     → f32 [BH, R, d]
     """
     bhg, r, d = qi.shape
@@ -171,28 +187,36 @@ def fused_prefill_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale,
     m = k_cache.shape[1]
     assert m % block == 0, (m, block)
     nb = m // block
+    if bq == 0:
+        bq = r
+    assert r % bq == 0, (r, bq)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(bhg, nb),
+        grid=(bhg, r // bq, nb),
         in_specs=[
-            pl.BlockSpec((1, r, d), lambda bh, j, kvl, qo: (bh, 0, 0)),
-            pl.BlockSpec((1, r, 1), lambda bh, j, kvl, qo: (bh, 0, 0)),
-            pl.BlockSpec((1, block, d), lambda bh, j, kvl, qo: (bh, j, 0)),
-            pl.BlockSpec((1, block, d), lambda bh, j, kvl, qo: (bh, j, 0)),
-            pl.BlockSpec((1, block, 1), lambda bh, j, kvl, qo: (bh, j, 0)),
-            pl.BlockSpec((1, block, 1), lambda bh, j, kvl, qo: (bh, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda bh, qt, j, kvl, qo: (bh, qt, 0)),
+            pl.BlockSpec((1, bq, 1), lambda bh, qt, j, kvl, qo: (bh, qt, 0)),
+            pl.BlockSpec((1, block, d),
+                         lambda bh, qt, j, kvl, qo: (bh, j, 0)),
+            pl.BlockSpec((1, block, d),
+                         lambda bh, qt, j, kvl, qo: (bh, j, 0)),
+            pl.BlockSpec((1, block, 1),
+                         lambda bh, qt, j, kvl, qo: (bh, j, 0)),
+            pl.BlockSpec((1, block, 1),
+                         lambda bh, qt, j, kvl, qo: (bh, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, r, d), lambda bh, j, kvl, qo: (bh, 0, 0)),
+        out_specs=pl.BlockSpec((1, bq, d),
+                               lambda bh, qt, j, kvl, qo: (bh, qt, 0)),
         scratch_shapes=[
-            pltpu.VMEM((r, 128), jnp.float32),   # running max (lanes equal)
-            pltpu.VMEM((r, 128), jnp.float32),   # running sum-exp
-            pltpu.VMEM((r, d), jnp.float32),     # output accumulator
+            pltpu.VMEM((bq, 128), jnp.float32),  # running max (lanes equal)
+            pltpu.VMEM((bq, 128), jnp.float32),  # running sum-exp
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
         ],
     )
     return pl.pallas_call(
         functools.partial(_fused_prefill_kernel, nb=nb, hkv=hkv, chunk=chunk,
-                          block=block, causal=causal, window=window,
+                          block=block, bq=bq, causal=causal, window=window,
                           softmax_scale=softmax_scale,
                           int8_logits=int8_logits),
         grid_spec=grid_spec,

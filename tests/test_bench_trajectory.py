@@ -1,0 +1,190 @@
+"""benchmarks/run.py trajectory gate: unit tests on synthetic payloads.
+
+The gate has a static half — every ``BENCH_*.json`` numeric leaf must
+map to a declared kernel+metric through the ``COVERAGE`` registry, and
+the autotune table must validate — and a noisy half: each module runs
+``--repeats`` times so every leaf yields a sample set, compared against
+the previous run's value with a band that is the larger of a
+per-metric-kind relative floor and ``MAD_Z`` normalized MADs of the
+fresh samples. Both halves are pinned here without running a real
+benchmark module.
+"""
+import json
+import subprocess
+from pathlib import Path
+
+import pytest
+
+from benchmarks import run as tr
+
+GIT = ["git", "-c", "user.email=t@t", "-c", "user.name=t"]
+
+
+# ---------------------------------------------------------------------------
+# Leaf flattening + the coverage registry
+# ---------------------------------------------------------------------------
+
+def test_numeric_leaves_flattening():
+    payload = {"a": 1, "b": {"c": 2.5, "d": [3, 4.5]}, "flag": True,
+               "s": "text", "nested": [{"x": 7}], "none": None}
+    assert tr._numeric_leaves(payload) == {
+        "a": 1.0, "b.c": 2.5, "b.d.0": 3.0, "b.d.1": 4.5, "nested.0.x": 7.0}
+    assert tr._numeric_leaves({}) == {}
+
+
+def test_leaf_rule_first_match_wins():
+    assert tr._leaf_rule("BENCH_prefix.json", "trace.n_requests") == \
+        ("prefill", "workload", "info")
+    # the cached_len carve-out matches before the broader per-request glob
+    assert tr._leaf_rule("BENCH_prefix.json",
+                         "ttft_per_request.cached_len.3") == \
+        ("prefill", "count", "info")
+    assert tr._leaf_rule("BENCH_prefix.json",
+                         "ttft_per_request.cache_on.0") == \
+        ("prefill", "time", "info")
+    assert tr._leaf_rule("BENCH_proj.json", "proj_layer_step_fused_us") == \
+        ("qlinear", "time", "lower")
+    assert tr._leaf_rule("BENCH_proj.json", "mystery") is None
+    assert tr._leaf_rule("BENCH_unknown.json", "x") is None
+
+
+def test_committed_bench_files_fully_covered(monkeypatch):
+    """The registry maps every leaf of every committed BENCH payload."""
+    root = Path(tr.__file__).resolve().parent.parent
+    monkeypatch.chdir(root)
+    payloads = tr._read_bench()
+    assert set(payloads) >= {"BENCH_prefix.json", "BENCH_spec.json"}
+    assert tr._coverage_problems(payloads) == []
+
+
+def test_coverage_problems_synthetic():
+    probs = tr._coverage_problems(
+        {"BENCH_proj.json": {"proj_dispatches_fused": 1.0, "mystery": 2.0}})
+    assert probs == ["BENCH_proj.json:mystery matches no coverage pattern"]
+    probs = tr._coverage_problems({"BENCH_unknown.json": {"x": 1.0}})
+    assert probs == ["BENCH_unknown.json: no coverage declared"]
+    assert tr._coverage_problems({}) == []
+
+
+# ---------------------------------------------------------------------------
+# Noise band + per-leaf verdicts
+# ---------------------------------------------------------------------------
+
+def test_noise_band_floors_and_mad():
+    # deterministic counts: 5% relative floor, zero MAD
+    assert tr._noise_band(100.0, [100.0] * 3, "count") == pytest.approx(5.0)
+    # wall-clock kinds get the wide floor
+    assert tr._noise_band(100.0, [100.0] * 3, "time") == pytest.approx(35.0)
+    # noisy samples widen the band beyond the floor (5σ of 1.4826·MAD)
+    band = tr._noise_band(100.0, [150.0, 90.0, 200.0], "time")
+    assert band == pytest.approx(tr.MAD_Z * 1.4826 * 50.0)
+
+
+def test_compare_leaf_verdicts():
+    # unchanged → no verdict at all
+    assert tr._compare_leaf(10.0, [10.0] * 3, "count", "lower") is None
+    # a 20% count move with zero spread is a confirmed regression...
+    _, s = tr._compare_leaf(100.0, [120.0] * 3, "count", "lower")
+    assert s == "regression"
+    # ...an improvement when higher is better...
+    _, s = tr._compare_leaf(100.0, [120.0] * 3, "count", "higher")
+    assert s == "improved"
+    # ...and only informational for workload descriptors
+    _, s = tr._compare_leaf(100.0, [120.0] * 3, "count", "info")
+    assert s == "moved"
+    # the same move on a time leaf sits inside the 35% floor
+    _, s = tr._compare_leaf(100.0, [120.0] * 3, "time", "lower")
+    assert s == "ok"
+    # small count move inside the 5% floor
+    _, s = tr._compare_leaf(100.0, [104.0] * 3, "count", "lower")
+    assert s == "ok"
+    # a big move with matching repeat-to-repeat noise is NOT confirmed
+    _, s = tr._compare_leaf(100.0, [150.0, 90.0, 200.0], "time", "lower")
+    assert s == "ok"
+
+
+def test_trajectory_report_regression_new_gone(capsys):
+    before = {"BENCH_proj.json": {"proj_dispatches_fused": 10.0,
+                                  "proj_dispatches_legacy": 30.0}}
+    samples = {"BENCH_proj.json": {
+        "proj_dispatches_fused": [20.0, 20.0, 20.0],   # count, lower: bad
+        "shapes.d_model": [256.0],                     # not in before
+    }}
+    n = tr._trajectory_report(before, samples)
+    out = capsys.readouterr().out
+    assert n == 1
+    assert "proj_dispatches_fused 10 -> 20 (+100.0%) REGRESSION" in out
+    assert "proj_dispatches_legacy GONE (was 30)" in out
+    assert "shapes.d_model NEW = 256" in out
+
+
+def test_trajectory_report_improvement_not_counted(capsys):
+    before = {"BENCH_proj.json": {"proj_dispatches_fused": 20.0}}
+    samples = {"BENCH_proj.json": {"proj_dispatches_fused": [10.0] * 3}}
+    assert tr._trajectory_report(before, samples) == 0
+    assert "improved" in capsys.readouterr().out
+
+
+def test_trajectory_report_new_file(capsys):
+    n = tr._trajectory_report({}, {"BENCH_proj.json":
+                                   {"proj_dispatches_fused": [1.0]}})
+    assert n == 0
+    assert "is new" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Snapshot: committed version preferred, working tree as fallback
+# ---------------------------------------------------------------------------
+
+def test_bench_snapshot_prefers_committed(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    path = "BENCH_proj.json"
+    (tmp_path / path).write_text(json.dumps({"proj_dispatches_fused": 10}))
+    subprocess.run(["git", "init", "-q"], check=True)
+    subprocess.run(GIT + ["add", path], check=True)
+    subprocess.run(GIT + ["commit", "-qm", "seed"], check=True)
+    (tmp_path / path).write_text(json.dumps({"proj_dispatches_fused": 99}))
+    snap = tr._bench_snapshot([path])
+    assert snap[path]["proj_dispatches_fused"] == 10.0
+    # _read_bench always sees the working tree
+    assert tr._read_bench([path])[path]["proj_dispatches_fused"] == 99.0
+
+
+def test_bench_snapshot_working_tree_fallback(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)   # no git repo here → git show fails
+    (tmp_path / "BENCH_proj.json").write_text(
+        json.dumps({"proj_dispatches_fused": 7}))
+    (tmp_path / "BENCH_bad.json").write_text("{not json")
+    snap = tr._bench_snapshot(["BENCH_proj.json", "BENCH_bad.json",
+                               "BENCH_absent.json"])
+    assert snap == {"BENCH_proj.json": {"proj_dispatches_fused": 7.0}}
+
+
+# ---------------------------------------------------------------------------
+# The static gate (--check)
+# ---------------------------------------------------------------------------
+
+def test_check_passes_on_covered_payloads(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setenv("REPRO_TUNE_TABLE", str(tmp_path / "TUNE_none.json"))
+    (tmp_path / "BENCH_proj.json").write_text(json.dumps(
+        {"proj_dispatches_fused": 4, "shapes": {"d_model": 64}}))
+    assert tr._check() == 0
+    assert "OK (0 problem(s))" in capsys.readouterr().out
+
+
+def test_check_fails_on_uncovered_leaf(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setenv("REPRO_TUNE_TABLE", str(tmp_path / "TUNE_none.json"))
+    (tmp_path / "BENCH_proj.json").write_text(json.dumps({"mystery": 1}))
+    assert tr._check() == 1
+    assert "matches no coverage pattern" in capsys.readouterr().out
+
+
+def test_check_fails_on_invalid_tuning_table(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    bad = tmp_path / "TUNE_kernels.json"
+    bad.write_text("{not json")
+    monkeypatch.setenv("REPRO_TUNE_TABLE", str(bad))
+    assert tr._check() == 1
+    assert "tuning table" in capsys.readouterr().out

@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core.lop import lop_features, pack_features
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 
 rng = np.random.default_rng(7)
 
@@ -131,6 +131,49 @@ def test_stats_agree_between_impls():
     # retired lane: no live candidates → ℓ = 0 on both impls
     assert (np.asarray(l_k[1]) == 0.0).all()
     assert (np.asarray(l_r[1]) == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Autotune tiling matrix (DESIGN.md §Autotuning)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_slots", [1, 3, 4])
+@pytest.mark.parametrize("shared", [False, True])
+def test_decode_n_slots_matrix_bitwise(n_slots, shared):
+    """Swept candidate-DMA slot counts are pure pipelining: BITWISE the
+    default n_slots=2 launch and allclose the ref oracle — at the
+    capacity-boundary K-slot (k_keep == n_blocks, every block kept)."""
+    b, h, hkv, m, dh, block = 2, 8, 2, 128, 32, 32
+    assert autotune.valid_params(
+        "decode", {"bhg": b * hkv, "g": h // hkv, "d": dh, "m": m,
+                   "block": block, "k_keep": m // block},
+        {"n_slots": n_slots})
+    args = _setup(b, h, hkv, m, dh)
+    new_len = jnp.asarray([97, 64], jnp.int32)
+    kw = dict(block=block, k_keep=m // block, use_lop=True,
+              shared_select=shared)
+    o_ref = ops.decode_attention(*args, new_len, impl="ref", **kw)
+    o_def = ops.decode_attention(*args, new_len, impl="pallas", **kw)
+    with autotune.override("decode", n_slots=n_slots):
+        o_t = ops.decode_attention(*args, new_len, impl="pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(o_t), np.asarray(o_def))
+    np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_ref),
+                               atol=1e-4)
+
+
+def test_decode_single_row_lane_n_slots():
+    """bm = 1 decode: a single-lane, single-group (B=1, MHA h=1) launch
+    stays exact across every slot count."""
+    b, h, hkv, m, dh, block = 1, 1, 1, 64, 32, 32
+    args = _setup(b, h, hkv, m, dh)
+    new_len = jnp.asarray([39], jnp.int32)
+    kw = dict(block=block, k_keep=2, use_lop=True)
+    o_ref = ops.decode_attention(*args, new_len, impl="ref", **kw)
+    for ns in (1, 2, 3):
+        with autotune.override("decode", n_slots=ns):
+            o_t = ops.decode_attention(*args, new_len, impl="pallas", **kw)
+        np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_ref),
+                                   atol=1e-4, err_msg=f"n_slots={ns}")
 
 
 # ---------------------------------------------------------------------------

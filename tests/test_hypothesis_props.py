@@ -16,7 +16,8 @@ import numpy as np                     # noqa: E402
 
 from repro.core.lop import (features_to_pot, lop_features,  # noqa: E402
                             lop_scores, pack_features, pot, unpack_features)
-from repro.core.quantization import dequantize, quantize    # noqa: E402
+from repro.core.quantization import (EPS, INT8_MAX,         # noqa: E402
+                                     dequantize, quantize)
 from repro.core.ternary import (pack_ternary, ternary_quantize,  # noqa: E402
                                 unpack_ternary)
 
@@ -108,3 +109,65 @@ def test_quantize_int8_range(x):
     v = np.asarray(qt.values)
     assert v.dtype == np.int8
     assert v.min() >= -127 and v.max() <= 127
+
+
+# ---------------------------------------------------------------------------
+# Autotuned tiling variants (DESIGN.md §Autotuning)
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(st.data())
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_ktiled_absmax_equals_single_pass_bitwise(data):
+    """The two-pass k-tiled barrier (kernels/qlinear.py, bkq > 0): fold
+    per-tile absmax maxima, freeze the scale, then quantize tile-by-tile
+    — BITWISE the single-pass absmax quantize for EVERY (k, bk) split,
+    because f32 max is exact and round/clip are elementwise against the
+    frozen scale."""
+    k = data.draw(st.integers(1, 24).map(lambda d: 4 * d), label="k")
+    bk = data.draw(st.sampled_from(
+        [d for d in range(1, k + 1) if k % d == 0]), label="bk")
+    m = data.draw(st.integers(1, 6), label="m")
+    x = data.draw(hnp.arrays(np.float32, (m, k),
+                             elements=st.floats(-1e4, 1e4, width=32)))
+    want = quantize(jnp.asarray(x))
+    am = jnp.zeros((m, 1), jnp.float32)
+    for j in range(k // bk):
+        tile = jnp.asarray(x[:, j * bk:(j + 1) * bk])
+        am = jnp.maximum(am, jnp.max(jnp.abs(tile), axis=-1, keepdims=True))
+    scale = jnp.maximum(am, EPS).astype(jnp.float32) / INT8_MAX
+    tiles = [jnp.clip(jnp.round(jnp.asarray(x[:, j * bk:(j + 1) * bk])
+                                .astype(jnp.float32) / scale),
+                      -INT8_MAX, INT8_MAX).astype(jnp.int8)
+             for j in range(k // bk)]
+    assert (np.asarray(scale) == np.asarray(want.scale)).all()
+    assert (np.asarray(jnp.concatenate(tiles, -1)) ==
+            np.asarray(want.values)).all()
+
+
+@hypothesis.given(st.data())
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_prefill_query_row_tiling_bitwise(data):
+    """The prefill kernel's third grid axis (bq query-row tiles): every
+    legal bq is BITWISE the untiled launch — the kv gate is loose enough
+    to be row-independent, so masked folds are exact no-ops."""
+    from repro.kernels.prefill_attention import fused_prefill_attention
+    r, d, m, block, chunk = 16, 8, 32, 16, 8
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    bq = data.draw(st.sampled_from([1, 2, 4, 8, 16]), label="bq")
+    kv_len_v = data.draw(st.integers(0, m), label="kv_len")
+    r_ = np.random.default_rng(seed)
+    qi = jnp.asarray(r_.integers(-127, 128, (1, r, d)), jnp.int8)
+    qsc = jnp.asarray(r_.uniform(0.005, 0.02, (1, r, 1)), jnp.float32)
+    kc = jnp.asarray(r_.integers(-127, 128, (1, m, d)), jnp.int8)
+    vc = jnp.asarray(r_.integers(-127, 128, (1, m, d)), jnp.int8)
+    ks = jnp.asarray(r_.uniform(0.005, 0.02, (1, m, 1)), jnp.float32)
+    vs = jnp.asarray(r_.uniform(0.005, 0.02, (1, m, 1)), jnp.float32)
+    kv_len = jnp.asarray([kv_len_v], jnp.int32)
+    po = jnp.zeros((1,), jnp.int32)
+    kw = dict(hkv=1, chunk=chunk, block=block, causal=True, window=0,
+              softmax_scale=d ** -0.5, interpret=True)
+    whole = fused_prefill_attention(qi, qsc, kc, vc, ks, vs, kv_len, po,
+                                    bq=0, **kw)
+    tiled = fused_prefill_attention(qi, qsc, kc, vc, ks, vs, kv_len, po,
+                                    bq=bq, **kw)
+    assert (np.asarray(tiled) == np.asarray(whole)).all()

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 from repro.models.transformer import init_params
 from repro.serving.cache import init_cache
 from repro.serving.engine import prefill, prefill_chunk, serve_step
@@ -100,6 +100,47 @@ def test_chunked_rows_bitwise_equal_whole(impl):
             q_offset=32 + i * 4, causal=True, impl=impl))
     np.testing.assert_array_equal(np.asarray(whole),
                                   np.asarray(jnp.concatenate(parts, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Autotune tiling matrix (DESIGN.md §Autotuning)
+# ---------------------------------------------------------------------------
+
+PREFILL_TILINGS = [
+    # (block, bq): kv-tile sweeps and query-row (third grid axis) tiles;
+    # kv_len below is NOT a multiple of any of these blocks
+    (16, 0),
+    (64, 8),
+    (32, 1),
+    (16, 4),
+]
+
+
+@pytest.mark.parametrize("block,bq", PREFILL_TILINGS)
+def test_prefill_tiling_matrix(block, bq):
+    """Swept (block, bq) under autotune.override: allclose vs the ref
+    oracle on ragged kv_len (not a multiple of the kv block), and every
+    bq variant BITWISE vs the untiled launch at the same kv block."""
+    rng = np.random.default_rng(11)
+    b, h, hkv, c, dh, m = 2, 4, 2, 8, 32, 64
+    r = (h // hkv) * c
+    assert autotune.valid_params(
+        "prefill", {"bhg": b * hkv, "r": r, "d": dh, "m": m, "chunk": c},
+        {"block": block, "bq": bq})
+    qi, qsc, ki, vi, ks, vs = _rand_inputs(rng, b, h, hkv, c, dh, m)
+    kv_len = jnp.asarray([41, 33], jnp.int32)
+    kw = dict(q_offset=25, causal=True, window=0)
+    o_ref = ops.prefill_attention(qi, qsc, ki, vi, ks, vs, kv_len,
+                                  impl="ref", **kw)
+    with autotune.override("prefill", block=block, bq=bq):
+        o_t = ops.prefill_attention(qi, qsc, ki, vi, ks, vs, kv_len,
+                                    impl="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    with autotune.override("prefill", block=block, bq=0):
+        o_b = ops.prefill_attention(qi, qsc, ki, vi, ks, vs, kv_len,
+                                    impl="pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(o_t), np.asarray(o_b))
 
 
 def _setup(arch="bitnet-3b", **over):

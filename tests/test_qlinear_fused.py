@@ -21,7 +21,7 @@ import pytest
 
 from repro.core.quantization import quantize
 from repro.core.ternary import TernaryWeight, make_ternary_weight
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 from repro.kernels.qlinear import apply_act
 
 rng = np.random.default_rng(7)
@@ -194,6 +194,89 @@ def test_grouped_expert_ffn_bitwise(impl):
     got = jax.jit(lambda x: ops.ffn_fused(x, gu_packed, gu_scale, dp_, ds,
                                           gated=True, act="silu",
                                           impl=impl))(x)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# ---------------------------------------------------------------------------
+# Autotune tiling matrix (DESIGN.md §Autotuning): every swept block shape
+# is a pure tiling choice — bitwise the same oracle, under both arms
+# ---------------------------------------------------------------------------
+
+QLINEAR_TILINGS = [
+    # (bm, bn, bkq, eg): single-pass barrier at small tiles; the two-pass
+    # k-tiled barrier; k-tiling + expert grouping; whole-e group with
+    # bkq == k (one k-tile, degenerate two-pass)
+    (8, 32, 0, 1),
+    (8, 96, 16, 1),
+    (16, 96, 32, 2),
+    (8, 48, 64, 4),
+]
+
+
+@pytest.mark.parametrize("impl", ARMS)
+@pytest.mark.parametrize("bm,bn,bkq,eg", QLINEAR_TILINGS)
+def test_qlinear_tiling_matrix_bitwise(bm, bn, bkq, eg, impl):
+    """Every swept (bm, bn, bkq, eg) — including the two-pass k-tiled
+    absmax barrier — dispatches bitwise-equal to the per-expert unfused
+    oracle under an autotune.override, both arms."""
+    e, c, k, n = 4, 6, 64, 96
+    params = {"bm": bm, "bn": bn, "bkq": bkq, "eg": eg}
+    assert autotune.valid_params(
+        "qlinear", {"e": e, "m": c, "k": k, "n": n}, params)
+    packed, scale = _expert_stack(e, k, n)
+    x = jnp.asarray(rng.standard_normal((e, c, k)), jnp.float32)
+
+    def per_expert(x):
+        def one(xe, pe, se):
+            tw = TernaryWeight(packed=pe, scale=1.0, shape=(k, n))
+            xq = quantize(xe)
+            acc = ops.ternary_matmul(xq.values, tw, impl="ref")
+            return acc.astype(jnp.float32) * xq.scale * se.reshape(())
+        return jax.vmap(one)(x, packed, scale)
+
+    want = jax.jit(per_expert)(x)
+    with autotune.override("qlinear", **params):
+        got = jax.jit(lambda x: ops.qlinear_fused(x, packed, scale,
+                                                  impl=impl))(x)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+FFN_TILINGS = [
+    # (bm, bf, bn, bkq): default-ish; fine hidden tiles + k-tiled
+    # barrier; coarse everything with bkq == k
+    (8, 64, 32, 0),
+    (8, 192, 64, 16),
+    (16, 96, 16, 64),
+]
+
+
+@pytest.mark.parametrize("impl", ARMS)
+@pytest.mark.parametrize("bm,bf,bn,bkq", FFN_TILINGS)
+def test_ffn_tiling_matrix_bitwise(bm, bf, bn, bkq, impl):
+    """Swept FFN tilings (incl. the k-tiled input barrier) == the
+    three-dispatch unfused chain, bitwise, both arms."""
+    d, f, m = 64, 192, 5
+    params = {"bm": bm, "bf": bf, "bn": bn, "bkq": bkq}
+    assert autotune.valid_params(
+        "ffn", {"e": 1, "m": m, "k": d, "f": f, "n": d}, params)
+    twu, twd = _node(d, f, 0.05), _node(f, d, 0.05)
+    twg = _node(d, f, 0.05)
+
+    def unfused(x):
+        h = apply_act(_unfused(twg, x), "silu") * _unfused(twu, x)
+        return _unfused(twd, h)
+
+    gu_packed = jnp.concatenate([twg.packed, twu.packed], -1)
+    gu_scale = jnp.concatenate(
+        [jnp.broadcast_to(jnp.asarray(t.scale).reshape(1, 1), (1, f))
+         for t in (twg, twu)], -1)
+    x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    want = jax.jit(unfused)(x)
+    with autotune.override("ffn", **params):
+        got = jax.jit(lambda x: ops.ffn_fused(
+            x, gu_packed, gu_scale, twd.packed,
+            jnp.asarray(twd.scale).reshape(1, 1), gated=True, act="silu",
+            impl=impl))(x)
     assert (np.asarray(got) == np.asarray(want)).all()
 
 
