@@ -84,6 +84,21 @@ COVERAGE = {
         ("proj_layer_step_*_us", "qlinear", "time", "lower"),
         ("shapes.*", "qlinear", "workload", "info"),
     ],
+    "BENCH_faults.json": [
+        ("trace.*", "scheduler", "workload", "info"),
+        ("recovery.wall_*_s", "scheduler", "time", "lower"),
+        ("recovery.fault_events", "scheduler", "count", "info"),
+        ("recovery.fault_recoveries", "scheduler", "count", "higher"),
+        ("recovery.fault_finishes", "scheduler", "count", "lower"),
+        # wall-delta clamped at 0: too noisy to gate, report-only
+        ("recovery.recovery_ms_per_event", "scheduler", "time", "info"),
+        ("recovery.retry_step_ms", "scheduler", "time", "lower"),
+        ("overload.shed_count", "scheduler", "count", "info"),
+        ("overload.shed_rate", "scheduler", "ratio", "info"),
+        ("overload.queue_depth_peak", "scheduler", "count", "info"),
+        ("deadline.deadline_count", "scheduler", "count", "info"),
+        ("deadline.deadline_hit_ratio", "scheduler", "ratio", "higher"),
+    ],
 }
 
 
@@ -271,8 +286,8 @@ def main() -> None:
         sys.exit(_check())
 
     from benchmarks import (fig8_lop, fig9_schedule, kernels_micro,
-                            prefill_interleave, prefix_cache, spec_decode,
-                            table1_e2e)
+                            prefill_interleave, prefix_cache, robustness,
+                            spec_decode, table1_e2e)
     modules = [
         ("fig8_lop", fig8_lop),
         ("fig9_schedule", fig9_schedule),
@@ -281,6 +296,7 @@ def main() -> None:
         ("prefill_interleave", prefill_interleave),
         ("prefix_cache", prefix_cache),
         ("spec_decode", spec_decode),
+        ("robustness", robustness),
     ]
     print("name,value,derived")
     failed = 0

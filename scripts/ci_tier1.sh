@@ -26,10 +26,16 @@ KERNEL_TESTS="tests/test_kernels.py tests/test_decode_attention.py \
 tests/test_prefill_attention.py tests/test_qlinear_fused.py \
 tests/test_serving_api.py tests/test_prefix_cache.py \
 tests/test_spec_decode.py tests/test_autotune.py \
-tests/test_bench_trajectory.py"
+tests/test_bench_trajectory.py tests/test_faults.py"
 for impl in ref pallas; do
     echo "ci_tier1: kernel tests under REPRO_KERNEL_IMPL=${impl}" >&2
     REPRO_KERNEL_IMPL="${impl}" python -m pytest -x -q ${KERNEL_TESTS}
+    # chaos smoke with every-step invariant auditing: 200 mixed-fate
+    # requests under seeded fault injection must terminate cleanly and
+    # bitwise-reproduce on both dispatch arms (DESIGN.md §Fault-tolerance)
+    echo "ci_tier1: REPRO_PARANOID chaos smoke under REPRO_KERNEL_IMPL=${impl}" >&2
+    REPRO_PARANOID=1 REPRO_KERNEL_IMPL="${impl}" \
+        python -m pytest -x -q tests/test_faults.py -k chaos
 done
 
 # perf-gate static half: every BENCH leaf must map to a declared kernel and

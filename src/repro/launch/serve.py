@@ -67,6 +67,7 @@ def make_requests(cfg, *, n_requests: int, min_prompt: int, max_prompt: int,
                   sampling: SamplingParams | None = None,
                   shared_prefix_tokens: int = 0,
                   prefix_reuse_frac: float = 1.0,
+                  deadline_ms: float | None = None,
                   on_token=None):
     """Synthetic traffic: variable prompt lengths, FIFO arrival order.
     With ``sampling`` given, request ``rid`` gets its params under seed
@@ -105,7 +106,8 @@ def make_requests(cfg, *, n_requests: int, min_prompt: int, max_prompt: int,
             dataclasses.replace(sampling, seed=sampling.seed + rid)
         reqs.append(GenerateRequest(
             rid=rid, prompt=prompt, max_new_tokens=gen, sampling=sp,
-            on_token=on_token, frames=frames, patches=patches))
+            deadline_ms=deadline_ms, on_token=on_token, frames=frames,
+            patches=patches))
     return reqs
 
 
@@ -122,6 +124,8 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                draft_layers: int | None = None,
                draft_k: int | None = None,
                sampling: SamplingParams | None = None,
+               max_queue: int | None = None,
+               deadline_ms: float | None = None,
                on_token=None, engine=None):
     """Continuous-batching run over staggered arrivals. → stats dict.
 
@@ -134,7 +138,18 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
     :func:`make_requests`); ``prefix_cache`` gates the scheduler's prefix
     store (None = on when chunked). TTFT is reported split by prefix
     hit/miss. An injected ``engine`` is reused across calls (shared jit
-    caches — the benchmark's cache-on vs cache-off arms)."""
+    caches — the benchmark's cache-on vs cache-off arms).
+
+    Robustness knobs (DESIGN.md §Fault-tolerance): ``max_queue`` bounds
+    the admit queue — submits past the bound answer immediately with
+    reason ``"shed"``; ``deadline_ms`` stamps every synthetic request
+    with that latency budget, enforced at admit, between prefill chunks
+    and per decode sweep (reason ``"deadline"``). The stats dict carries
+    the scheduler's robustness telemetry (shed/deadline/fault counters,
+    queue-depth peak, prefix checksum failures, watchdog trips).
+    ``--verify`` checks token equivalence only for requests that ran to
+    a natural finish — shed/deadline/cancelled/fault requests and lanes
+    a fault recovery touched have no lockstep counterpart."""
     if engine is not None:
         cfg, qp = engine.cfg, engine.qp
     else:
@@ -145,7 +160,7 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                          sampling=sampling,
                          shared_prefix_tokens=shared_prefix_tokens,
                          prefix_reuse_frac=prefix_reuse_frac,
-                         on_token=on_token)
+                         deadline_ms=deadline_ms, on_token=on_token)
     max_len = max_prompt + gen + shared_prefix_tokens
     if cfg.family == "vlm":
         max_len += cfg.n_img_tokens       # image prefix shares the cache
@@ -158,7 +173,7 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                       draft_layers=None if engine is not None
                       else draft_layers,
                       draft_k=None if engine is not None else draft_k,
-                      engine=engine)
+                      max_queue=max_queue, engine=engine)
 
     t0 = time.monotonic()
     pending = list(reqs)
@@ -234,11 +249,33 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
         "full_launches_per_token": ((sched.decode_launches
                                      + sched.spec_verify_launches)
                                     / max(1, total_toks)),
+        # robustness telemetry (DESIGN.md §Fault-tolerance)
+        "max_queue": max_queue,
+        "shed_count": sched.shed_count,
+        "queue_depth_peak": sched.queue_depth_peak,
+        "deadline_ms": deadline_ms,
+        "deadline_count": sched.deadline_count,
+        "fault_events": sched.fault_events,
+        "fault_recoveries": sched.fault_recoveries,
+        "fault_finishes": sched.fault_finishes,
+        "prefix_lookup_failures": sched.prefix_lookup_failures,
+        "checksum_failures": (sched.prefix_store.checksum_failures
+                              if sched.prefix_store is not None else 0),
+        "spec_watchdog_trips": sched.spec_watchdog_trips,
     }
 
     if verify:
-        mismatches = []
+        # only naturally-finished requests have a lockstep counterpart:
+        # a shed/deadline/cancelled/fault request was cut off mid-stream,
+        # and a lane a fault recovery touched is exact only by the
+        # recovery contract, which the chaos test checks separately
+        reason = {r.rid: r.finish_reason for r in results}
+        mismatches, skipped = [], []
         for req in reqs:
+            if reason.get(req.rid) not in ("eos", "stop", "length") \
+                    or req.rid in sched.fault_rids:
+                skipped.append(req.rid)
+                continue
             ref = lockstep_generate(cfg, qp, req.prompt, req.max_new_tokens,
                                     max_len=max_len, use_lop=use_lop,
                                     frames=req.frames, patches=req.patches,
@@ -247,6 +284,7 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                 mismatches.append(req.rid)
         out["verified"] = not mismatches
         out["mismatched_rids"] = mismatches
+        out["verify_skipped_rids"] = skipped
     return out
 
 
@@ -297,6 +335,15 @@ def main():
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base PRNG seed; request rid samples under "
                          "seed+rid")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission bound: submits past this queue depth "
+                         "are load-shed (reason \"shed\") instead of "
+                         "queued unboundedly")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget from arrival; "
+                         "expired requests retire with reason "
+                         "\"deadline\" at admit, between prefill chunks "
+                         "or mid-decode")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as lanes emit them (on_token "
                          "streaming callback)")
@@ -334,6 +381,7 @@ def main():
                      spec_decode=args.spec_decode, gamma=args.gamma,
                      draft_layers=args.draft_layers, draft_k=args.draft_k,
                      sampling=None if sampling.greedy else sampling,
+                     max_queue=args.max_queue, deadline_ms=args.deadline_ms,
                      on_token=on_token)
 
     print(f"{'rid':>4} {'plen':>5} {'hit':>5} {'toks':>5} {'ttft_ms':>8} "
@@ -374,9 +422,28 @@ def main():
               f"{out['prefill_tokens_served']}; "
               f"ttft p50 hit/miss: {out['ttft_hit_p50'] * 1e3:.1f} / "
               f"{out['ttft_miss_p50'] * 1e3:.1f} ms")
+    if args.max_queue is not None or args.deadline_ms is not None \
+            or out["shed_count"] or out["deadline_count"] \
+            or out["fault_events"]:
+        n_req = len(out["results"])
+        print(f"robustness: queue peak {out['queue_depth_peak']}"
+              f"{f' (bound {args.max_queue})' if args.max_queue else ''}, "
+              f"{out['shed_count']} shed, "
+              f"{out['deadline_count']} deadline-expired "
+              f"(deadline-hit ratio "
+              f"{1.0 - out['deadline_count'] / max(1, n_req):.2f}), "
+              f"{out['fault_events']} fault events "
+              f"({out['fault_recoveries']} recovered, "
+              f"{out['fault_finishes']} gave up), "
+              f"{out['prefix_lookup_failures']} prefix-lookup failures, "
+              f"{out['checksum_failures']} checksum failures, "
+              f"{out['spec_watchdog_trips']} spec-watchdog trips")
     if args.verify:
         status = "OK" if out["verified"] else \
             f"MISMATCH rids={out['mismatched_rids']}"
+        if out.get("verify_skipped_rids"):
+            status += (f" ({len(out['verify_skipped_rids'])} requests "
+                       "skipped: no natural finish)")
         print(f"continuous-batching vs lockstep token equivalence: {status}")
 
     m = args.max_prompt + args.gen

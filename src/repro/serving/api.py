@@ -52,8 +52,9 @@ import jax
 import numpy as np
 
 from repro.serving import cache as _cache
-from repro.serving.engine import (draft_step, prefill, prefill_chunk,
-                                  serve_step)
+from repro.serving import faults as _faults
+from repro.serving.engine import (draft_step, guard_logits, prefill,
+                                  prefill_chunk, serve_step)
 from repro.serving.sampling import sample_with_seed
 
 # ---------------------------------------------------------------------------
@@ -139,7 +140,11 @@ class GenerateRequest:
     it hidden). ``on_token`` streams every emitted token in order;
     ``cancel`` is the mid-flight abort handle. ``arrival`` is stamped at
     submit when left None (the scheduler re-creates the frozen record
-    via ``dataclasses.replace``)."""
+    via ``dataclasses.replace``). ``deadline_ms`` is the request's
+    latency budget measured from ``arrival``: the scheduler enforces it
+    at admit, between prefill chunks, and per decode sweep, retiring the
+    request with reason ``"deadline"`` — an expired request never holds
+    a lane another request could use (DESIGN.md §Fault-tolerance)."""
     rid: int
     prompt: np.ndarray                 # int32 [prompt_len]
     max_new_tokens: int
@@ -149,6 +154,7 @@ class GenerateRequest:
     on_token: Callable[[StepResult], None] | None = None
     cancel: CancelToken | None = None
     arrival: float | None = None       # driver-set; submit() stamps None
+    deadline_ms: float | None = None   # latency budget from arrival
     frames: np.ndarray | None = None   # encdec audio frames [S_enc, D]
     patches: np.ndarray | None = None  # vlm patch embeds [n_img, D]
 
@@ -174,7 +180,9 @@ class FinishedRequest:
     rid: int
     prompt_len: int
     tokens: list                       # list[int], emission order
-    finish_reason: str                 # "eos" | "stop" | "length" | "cancelled"
+    finish_reason: str                 # "eos" | "stop" | "length" |
+    #                                    "cancelled" | "deadline" |
+    #                                    "shed" | "fault"
     t_arrival: float = 0.0
     t_admit: float = 0.0               # prefill started (lane granted)
     t_first: float = 0.0               # first token emitted (TTFT end)
@@ -262,6 +270,14 @@ class InferenceEngine(Protocol):
     ``sample_first`` seeds a lane from prefill logits through the same
     sampler the decode step uses; ``set_sampling_state`` writes the
     lane's in-pool PRNG schedule at activation.
+
+    Fault contract (DESIGN.md §Fault-tolerance): after ``decode_step``
+    the engine publishes ``last_ok`` (np bool [B]) — each lane's logit
+    finiteness for THAT step, computed in-graph; engines without the
+    guard simply never set it and the scheduler treats every lane as
+    healthy. ``retry_step`` recomputes ONE quarantined lane's token with
+    degraded features (LOP disabled) against a pool already rewound by
+    ``rollback``, leaving every other lane's state untouched.
     """
 
     supports_chunked: bool
@@ -289,6 +305,9 @@ class InferenceEngine(Protocol):
     def extract(self, pool, slot): ...
 
     def decode_step(self, pool, tokens, temperature, top_k, top_p): ...
+
+    def retry_step(self, pool, slot, tokens, temperature, top_k,
+                   top_p): ...
 
     def draft(self, pool, tokens, temperature, top_k, top_p): ...
 
@@ -359,22 +378,26 @@ class PooledEngine:
         self._fns: dict = {}
         self._jnp = jnp
 
-        def step_and_sample(qp_, pool, tokens, temp, tk, tp):
+        def step_and_sample(qp_, pool, tokens, temp, tk, tp, fadd):
             # the PRNG schedule lives in the pool: seed is per-request,
             # sample_step counts the lane's emissions — advanced in-graph
             # for active lanes, so a cloned/migrated lane samples its
-            # same-seed token stream with no host round-trip
-            seeds, steps = pool["seed"], pool["sample_step"]
+            # same-seed token stream with no host round-trip. ``fadd``
+            # is the fault-injection offset (zeros in production) and
+            # ``ok`` the per-lane logit-finiteness guard — both ride the
+            # same compile, so fault tolerance costs one add + reduce
             logits, pool = serve_step(cfg, qp_, pool, tokens,
                                       use_lop=use_lop)
+            logits, ok = guard_logits(logits, fadd)
+            seeds, steps = pool["seed"], pool["sample_step"]
             toks = sample_with_seed(logits, seeds, steps, temp, tk, tp)
             pool = dict(pool)
             adv = (pool["active"].astype(jnp.int32) if "active" in pool
                    else jnp.int32(1))
             pool["sample_step"] = steps + adv
-            return toks, pool
+            return toks, ok, pool
 
-        def step_greedy(qp_, pool, tokens):
+        def step_greedy(qp_, pool, tokens, fadd):
             # all-greedy fast path: skip the sampler's sorts/softmax/
             # categorical entirely — bitwise the sampler's greedy branch
             # (both are argmax over the same logits); sample_step is not
@@ -382,7 +405,36 @@ class PooledEngine:
             # later needs it is re-seeded at activation)
             logits, pool = serve_step(cfg, qp_, pool, tokens,
                                       use_lop=use_lop)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), pool
+            logits, ok = guard_logits(logits, fadd)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), ok, pool
+
+        def retry_one(qp_, pool, slot, tokens, temp, tk, tp, fadd,
+                      sampled):
+            # single-lane RECOVERY step: the faulted lane — already
+            # rewound bitwise by rollback_slot — recomputes its token
+            # with the LOP screen disabled (exact dense attention, the
+            # bottom rung before giving the lane up) while every other
+            # lane's state is frozen behind a masked active vector.
+            # sample_step advances only on the sampled path, mirroring
+            # the batched step's greedy/sampled asymmetry.
+            act = pool["active"]
+            only = act & (jnp.arange(act.shape[0]) == slot)
+            pool = dict(pool)
+            pool["active"] = only
+            seeds, steps = pool["seed"], pool["sample_step"]
+            logits, pool = serve_step(cfg, qp_, pool, tokens,
+                                      use_lop=False)
+            logits, ok = guard_logits(logits, fadd)
+            if sampled:
+                toks = sample_with_seed(logits, seeds, steps, temp, tk,
+                                        tp)
+            else:
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            pool = dict(pool)
+            if sampled:
+                pool["sample_step"] = steps + only.astype(jnp.int32)
+            pool["active"] = act
+            return toks, ok, pool
 
         def set_sampling(pool, slot, seed, step):
             pool = dict(pool)
@@ -415,8 +467,19 @@ class PooledEngine:
                                       use_lop=use_lop)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), pool
 
+        def retry_sampled(qp_, pool, slot, tokens, temp, tk, tp, fadd):
+            return retry_one(qp_, pool, slot, tokens, temp, tk, tp, fadd,
+                             True)
+
+        def retry_greedy(qp_, pool, slot, tokens, fadd):
+            return retry_one(qp_, pool, slot, tokens, None, None, None,
+                             fadd, False)
+
         self._decode_fn = jax.jit(step_and_sample, donate_argnums=(1,))
         self._decode_greedy_fn = jax.jit(step_greedy, donate_argnums=(1,))
+        # recovery retries compile lazily — a fault-free run never pays
+        self._retry_fn = jax.jit(retry_sampled, donate_argnums=(1,))
+        self._retry_greedy_fn = jax.jit(retry_greedy, donate_argnums=(1,))
         self._draft_fn = jax.jit(draft_and_sample, donate_argnums=(1,))
         self._draft_greedy_fn = jax.jit(draft_greedy, donate_argnums=(1,))
         self._rollback_fn = jax.jit(_cache.rollback_slot,
@@ -520,17 +583,57 @@ class PooledEngine:
         leaves and advanced in-graph. Inactive lanes' samples are garbage
         the scheduler never reads. When every lane is greedy (the default
         serving configuration) the sampler is skipped for a bare argmax
-        step — bitwise the same tokens at the pre-API decode cost."""
+        step — bitwise the same tokens at the pre-API decode cost.
+
+        Fault guard: the step computes each lane's logit-finiteness mask
+        in-graph (``guard_logits``) and publishes it as ``self.last_ok``
+        (np bool [B]); a lane marked False was poisoned THIS step — its
+        sampled token is garbage and the scheduler must quarantine +
+        recover it (``retry_step``) instead of emitting. An active
+        :mod:`repro.serving.faults` plan injects NaN rows (and slow-step
+        sleeps) here; with no plan the offset is zeros."""
         jnp = self._jnp
+        n = np.asarray(tokens).shape[0]
+        fadd = _faults.decode_fault_add(n)
+        fadd = jnp.asarray(np.zeros((n,), np.float32) if fadd is None
+                           else fadd)
         if np.all(np.asarray(temperature) <= 0.0):
-            toks, pool = self._decode_greedy_fn(self.qp, pool,
-                                                jnp.asarray(tokens))
+            toks, ok, pool = self._decode_greedy_fn(self.qp, pool,
+                                                    jnp.asarray(tokens),
+                                                    fadd)
         else:
-            toks, pool = self._decode_fn(
+            toks, ok, pool = self._decode_fn(
                 self.qp, pool, jnp.asarray(tokens),
                 jnp.asarray(temperature), jnp.asarray(top_k),
-                jnp.asarray(top_p))
+                jnp.asarray(top_p), fadd)
+        self.last_ok = np.asarray(ok)
         return np.asarray(toks), pool
+
+    def retry_step(self, pool, slot, tokens, temperature, top_k, top_p):
+        """Recovery twin of :meth:`decode_step` for ONE quarantined lane
+        (DESIGN.md §Fault-tolerance). Preconditions: the lane's faulted
+        append was rewound bitwise (``rollback``), so its cache state is
+        exactly pre-step. Recomputes the lane's token with the LOP screen
+        disabled — exact dense attention, the degradation ladder's next
+        rung — while the other lanes' state is frozen behind a masked
+        active vector (their lengths, K/V and PRNG steps do not move).
+        → (tokens [B] i32, ok [B] bool, pool); only row ``slot`` is
+        meaningful. A sticky injected fault still poisons the retry —
+        ``ok[slot]`` False means the lane is beyond recovery."""
+        jnp = self._jnp
+        n = np.asarray(tokens).shape[0]
+        fadd = _faults.retry_fault_add(n)
+        fadd = jnp.asarray(np.zeros((n,), np.float32) if fadd is None
+                           else fadd)
+        if np.all(np.asarray(temperature) <= 0.0):
+            toks, ok, pool = self._retry_greedy_fn(
+                self.qp, pool, jnp.int32(slot), jnp.asarray(tokens), fadd)
+        else:
+            toks, ok, pool = self._retry_fn(
+                self.qp, pool, jnp.int32(slot), jnp.asarray(tokens),
+                jnp.asarray(temperature), jnp.asarray(top_k),
+                jnp.asarray(top_p), fadd)
+        return np.asarray(toks), np.asarray(ok), pool
 
     # ---------------- speculative decoding ----------------
 

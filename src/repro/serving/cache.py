@@ -66,6 +66,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import faults as _faults
+
 
 def round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
@@ -432,6 +434,42 @@ def _chain_key(parent_key: bytes, block_tokens: np.ndarray) -> bytes:
     return h.digest()
 
 
+def _page_checksum(pages) -> bytes:
+    """Content checksum of one node's pages (DESIGN.md §Fault-tolerance).
+
+    blake2b over every leaf's dtype, shape and raw bytes in sorted-path
+    order — taken at intern time, re-verified on match, so a page that
+    rots AFTER interning (bit flips, bad DMA) is caught before
+    ``bulk_insert`` would fan the corruption into every hit lane.
+    """
+    h = hashlib.blake2b(digest_size=16)
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(path + (k,), node[k])
+            return
+        arr = np.asarray(node)
+        h.update(repr((path, str(arr.dtype), arr.shape)).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+
+    walk((), pages)
+    return h.digest()
+
+
+def _flip_one_bit(pages, rng):
+    """Flip one deterministic bit somewhere in a page tree (the injected
+    post-intern corruption of :mod:`repro.serving.faults`)."""
+    leaves, treedef = jax.tree.flatten(pages)
+    i = int(rng.integers(0, len(leaves)))
+    arr = np.asarray(leaves[i]).copy()
+    flat = arr.view(np.uint8).reshape(-1)
+    byte = int(rng.integers(0, flat.size))
+    flat[byte] ^= np.uint8(1 << int(rng.integers(0, 8)))
+    leaves[i] = jnp.asarray(arr)
+    return jax.tree.unflatten(treedef, leaves)
+
+
 def _slice_pages(cache, lo: int, hi: int):
     """Token range [lo, hi) of every positional leaf of a batch-1 cache."""
     def walk(path, node):
@@ -466,9 +504,10 @@ class _PrefixNode:
     """
 
     __slots__ = ("key", "parent", "tokens", "n_tokens", "pages",
-                 "children", "last_use")
+                 "children", "last_use", "checksum")
 
-    def __init__(self, key, parent, tokens, n_tokens, pages):
+    def __init__(self, key, parent, tokens, n_tokens, pages,
+                 checksum=None):
         self.key = key
         self.parent = parent
         self.tokens = tokens
@@ -476,6 +515,7 @@ class _PrefixNode:
         self.pages = pages
         self.children: dict = {}
         self.last_use = 0
+        self.checksum = checksum           # blake2b of pages at intern
 
     @property
     def refs(self) -> int:
@@ -518,6 +558,7 @@ class PrefixStore:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.checksum_failures = 0
 
     def _walk_chain(self, tokens: np.ndarray, n_blocks: int):
         """Deepest existing node along ``tokens``'s first ``n_blocks``."""
@@ -537,11 +578,25 @@ class PrefixStore:
         multiple of ``block``, always < ``len(tokens)``) and the chain
         node to clone from, or ``(0, None)`` on a miss. Bumps the
         matched ancestry's LRU recency.
+
+        Every matched node's pages are re-verified against the checksum
+        taken at intern time: a corrupted node (and the subtree hanging
+        off it — its descendants resume from the corrupt pages) is
+        dropped and the match truncates to the last clean ancestor, so
+        corruption degrades to a shorter hit or a cold prefill instead
+        of being cloned into every sharer. Raises
+        :class:`repro.serving.faults.PrefixLookupError` when an active
+        fault plan injects a store outage on this call — the scheduler
+        treats it as a miss.
         """
         tokens = np.asarray(tokens, np.int32)
+        if _faults.lookup_fails():
+            raise _faults.PrefixLookupError(
+                "injected prefix-store lookup failure")
         self._tick += 1
         node = self._walk_chain(tokens, max(0, (len(tokens) - 1)
                                            // self.block))
+        node = self._verify_chain(node)
         if node is self._root:
             self.misses += 1
             return 0, None
@@ -551,6 +606,28 @@ class PrefixStore:
             n = n.parent
         self.hits += 1
         return node.n_tokens, node
+
+    def _verify_chain(self, node: _PrefixNode) -> _PrefixNode:
+        """Checksum the ancestry root→``node``; on the first mismatch
+        drop that node's subtree and truncate the match to its parent."""
+        chain = []
+        n = node
+        while n is not self._root:
+            chain.append(n)
+            n = n.parent
+        for n in reversed(chain):
+            if _page_checksum(n.pages) != n.checksum:
+                self.checksum_failures += 1
+                self._drop_subtree(n)
+                return n.parent
+        return node
+
+    def _drop_subtree(self, node: _PrefixNode) -> None:
+        """Remove ``node`` and every descendant from the store."""
+        dropped = 1 + sum(1 for _ in self._iter_nodes(node))
+        del node.parent.children[node.key]
+        node.pages = None
+        self.cached_tokens -= dropped * self.block
 
     def missing(self, tokens) -> bool:
         """True if interning ``tokens`` would create at least one node —
@@ -586,8 +663,14 @@ class PrefixStore:
                 child.last_use = self._tick
                 node = child
                 continue
-            child = _PrefixNode(key, node, blk, hi, _slice_pages(cache,
-                                                                 lo, hi))
+            pages = _slice_pages(cache, lo, hi)
+            child = _PrefixNode(key, node, blk, hi, pages,
+                                checksum=_page_checksum(pages))
+            # injected post-intern rot: the checksum above was taken on
+            # the clean pages, so the next match's verify catches this
+            rng = _faults.page_corruption_rng()
+            if rng is not None:
+                child.pages = _flip_one_bit(child.pages, rng)
             child.last_use = self._tick
             node.children[key] = child
             self.cached_tokens += self.block
@@ -627,3 +710,26 @@ class PrefixStore:
             victim.pages = None
             self.cached_tokens -= self.block
             self.evictions += 1
+
+    def check_invariants(self) -> None:
+        """Structural invariants, asserted after every serve step under
+        ``REPRO_PARANOID=1`` (DESIGN.md §Fault-tolerance): parent/child
+        linkage and cumulative token counts are consistent, live nodes
+        hold pages, ``cached_tokens`` equals the node count × block, and
+        the token budget is only exceeded when every node is pinned by a
+        child reference (the ref-counted eviction contract)."""
+        n_nodes = 0
+        for node in self._iter_nodes():
+            assert node.parent.children.get(node.key) is node, \
+                "prefix node detached from its parent"
+            assert node.n_tokens == node.parent.n_tokens + self.block, \
+                "prefix chain token count is not cumulative"
+            assert node.pages is not None, "live prefix node lost its pages"
+            n_nodes += 1
+        assert self.cached_tokens == n_nodes * self.block, (
+            f"cached_tokens={self.cached_tokens} but store holds "
+            f"{n_nodes} blocks of {self.block}")
+        if self.max_tokens is not None \
+                and self.cached_tokens > self.max_tokens:
+            assert all(n.refs for n in self._iter_nodes()), \
+                "store over budget with evictable (childless) nodes"

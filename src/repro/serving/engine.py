@@ -749,6 +749,24 @@ def serve_step(cfg, qp, cache, tokens, *, use_lop=True, sp_axes=None):
     return logits, new_cache
 
 
+def guard_logits(logits, fault_add=None):
+    """Fault-injection + detection point of the decode hot path
+    (DESIGN.md §Fault-tolerance). Adds a per-lane offset to the logits
+    (zeros in production; NaN/inf rows when a
+    :mod:`repro.serving.faults` plan is injecting) and computes the
+    per-lane finiteness mask in-graph — one cheap reduction, no [B, V]
+    host transfer. → (logits [B, V], ok [B] bool). A lane with
+    ``ok=False`` must not have its sampled token emitted: the sample of
+    a non-finite row is garbage; the scheduler quarantines the lane,
+    rewinds its cache append bitwise (``rollback_slot``) and retries
+    through the engine's no-LOP recovery step.
+    """
+    if fault_add is not None:
+        logits = logits + fault_add[:, None]
+    ok = jnp.all(jnp.isfinite(logits), axis=-1)
+    return logits, ok
+
+
 def draft_step(cfg, qp, cache, tokens, *, draft_layers: int,
                draft_k: int | None = None, use_lop=True):
     """One degraded-cost speculative DRAFT step. tokens [B, 1] →

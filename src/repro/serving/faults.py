@@ -1,0 +1,208 @@
+"""Deterministic fault injection for the serving stack.
+
+Real edge serving treats degraded operation as a first-class mode: logits
+go non-finite (overflowed accumulators, bad DMA), cache pages rot, a
+remote prefix store times out, a step stalls. This module makes every one
+of those failure modes *reproducible in CI*: a frozen, seeded
+:class:`FaultPlan` names exactly which engine call / lane / store
+operation misbehaves, and :func:`inject` activates it for a scoped region
+of code. The detection + recovery machinery it exercises lives in
+:mod:`repro.serving.scheduler` (NaN guard → ``rollback_slot`` → no-LOP
+retry), :mod:`repro.serving.cache` (per-page checksums → cold-prefill
+fallback) and :mod:`repro.serving.api` (the injection points themselves)
+— DESIGN.md §Fault-tolerance.
+
+Injection is keyed by *call counters*, not wall time: the N-th
+``decode_step`` dispatch, the N-th store insert, the N-th store lookup.
+Two runs of the same request trace under the same plan therefore inject
+at identical points, which is what makes the chaos test's bitwise
+determinism assertion possible.
+
+No plan active (the default) costs one ``is None`` check per injection
+point — the production path stays untouched.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class PrefixLookupError(RuntimeError):
+    """An injected prefix-store lookup failure (a store outage). The
+    scheduler degrades the request to a cold prefill and counts it."""
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """One deterministic failure schedule.
+
+    ``nan_logits``      {(decode_call, lane)}: that lane's decode logits
+                        go non-finite on that engine dispatch (a
+                        transient corruption — the no-LOP retry
+                        recomputes it cleanly).
+    ``sticky_nan_lanes`` {lane}: that lane's logits are non-finite on
+                        EVERY dispatch including the recovery retry, so
+                        the lane finishes with reason ``"fault"``.
+    ``page_bitflips``   {insert_call}: the prefix-store node interned by
+                        that ``PrefixStore.insert`` call gets one bit
+                        flipped in its pages AFTER its checksum is taken
+                        (post-intern rot — the checksum catches it at the
+                        next match).
+    ``lookup_failures`` {match_call}: that ``PrefixStore.match`` call
+                        raises :class:`PrefixLookupError`.
+    ``slow_steps``      {decode_call}: that decode dispatch sleeps
+                        ``slow_s`` seconds first (deadline pressure).
+    """
+    seed: int = 0
+    nan_logits: frozenset = frozenset()
+    sticky_nan_lanes: frozenset = frozenset()
+    page_bitflips: frozenset = frozenset()
+    lookup_failures: frozenset = frozenset()
+    slow_steps: frozenset = frozenset()
+    slow_s: float = 0.0
+
+    @staticmethod
+    def random(seed: int, *, n_decode_calls: int, n_lanes: int,
+               nan_events: int = 2, sticky_lanes: int = 0,
+               page_flips: int = 1, lookup_fails: int = 1,
+               slow_steps: int = 0, slow_s: float = 0.0) -> "FaultPlan":
+        """A seeded random plan over a trace of ``n_decode_calls``
+        batched decode dispatches — same seed, same plan, bit for bit."""
+        rng = np.random.default_rng(seed)
+
+        def pick(n, hi):
+            n = min(n, hi)
+            return frozenset(int(x) for x in
+                             rng.choice(hi, size=n, replace=False)) \
+                if n > 0 and hi > 0 else frozenset()
+
+        nan = frozenset(
+            (int(c), int(rng.integers(0, n_lanes)))
+            for c in rng.choice(max(1, n_decode_calls),
+                                size=min(nan_events, n_decode_calls),
+                                replace=False)) if nan_events else frozenset()
+        return FaultPlan(
+            seed=seed, nan_logits=nan,
+            sticky_nan_lanes=pick(sticky_lanes, n_lanes),
+            page_bitflips=pick(page_flips, 8),
+            lookup_failures=pick(lookup_fails, 16),
+            slow_steps=pick(slow_steps, max(1, n_decode_calls)),
+            slow_s=slow_s)
+
+
+@dataclass
+class _FaultState:
+    """Mutable per-``inject`` bookkeeping: call counters + telemetry."""
+    plan: FaultPlan
+    decode_calls: int = 0
+    insert_calls: int = 0
+    match_calls: int = 0
+    injected_nan: int = 0
+    injected_flips: int = 0
+    injected_lookup_failures: int = 0
+    injected_slow: int = 0
+
+
+_STATE: _FaultState | None = None
+
+
+def active() -> FaultPlan | None:
+    """The plan in scope, or None (the production fast path)."""
+    return _STATE.plan if _STATE is not None else None
+
+
+def state() -> _FaultState | None:
+    """Injection telemetry for the current scope (tests/benchmarks)."""
+    return _STATE
+
+
+@contextmanager
+def inject(plan: FaultPlan):
+    """Activate ``plan`` for the enclosed serve trace. Re-entrant use is
+    rejected — nested plans would make call counters ambiguous."""
+    global _STATE
+    assert _STATE is None, "fault plans do not nest"
+    _STATE = _FaultState(plan)
+    try:
+        yield _STATE
+    finally:
+        _STATE = None
+
+
+# ---------------------------------------------------------------------------
+# Injection points (called by PooledEngine / PrefixStore)
+# ---------------------------------------------------------------------------
+
+
+def decode_fault_add(n_lanes: int):
+    """Per-lane logit offset for the NEXT batched decode dispatch, or
+    None when no plan is active. Advances the decode-call counter and
+    sleeps the planned slow-step delay. NaN rows mark injected faults —
+    the engine adds the vector to the logits before sampling, and the
+    in-graph finiteness guard (``repro.serving.engine.guard_logits``)
+    reports them to the scheduler."""
+    st = _STATE
+    if st is None:
+        return None
+    call = st.decode_calls
+    st.decode_calls += 1
+    if call in st.plan.slow_steps and st.plan.slow_s > 0:
+        st.injected_slow += 1
+        time.sleep(st.plan.slow_s)
+    add = np.zeros((n_lanes,), np.float32)
+    for lane in st.plan.sticky_nan_lanes:
+        if lane < n_lanes:
+            add[lane] = np.nan
+            st.injected_nan += 1
+    for (c, lane) in st.plan.nan_logits:
+        if c == call and lane < n_lanes:
+            add[lane] = np.nan
+            st.injected_nan += 1
+    return add
+
+
+def retry_fault_add(n_lanes: int):
+    """Logit offset for a RECOVERY retry dispatch: only sticky lanes stay
+    faulted (the transient (call, lane) events never re-fire — the retry
+    recomputes clean), so a sticky lane's retry also fails and the lane
+    finishes with reason ``"fault"``. Does not advance call counters."""
+    st = _STATE
+    if st is None or not st.plan.sticky_nan_lanes:
+        return None
+    add = np.zeros((n_lanes,), np.float32)
+    for lane in st.plan.sticky_nan_lanes:
+        if lane < n_lanes:
+            add[lane] = np.nan
+    return add
+
+
+def page_corruption_rng():
+    """For the NEXT ``PrefixStore.insert`` call: a seeded Generator to
+    pick the flipped bit with, or None. Advances the insert counter."""
+    st = _STATE
+    if st is None:
+        return None
+    call = st.insert_calls
+    st.insert_calls += 1
+    if call not in st.plan.page_bitflips:
+        return None
+    st.injected_flips += 1
+    return np.random.default_rng((st.plan.seed, call))
+
+
+def lookup_fails() -> bool:
+    """Whether the NEXT ``PrefixStore.match`` call should raise
+    :class:`PrefixLookupError`. Advances the match counter."""
+    st = _STATE
+    if st is None:
+        return False
+    call = st.match_calls
+    st.match_calls += 1
+    if call in st.plan.lookup_failures:
+        st.injected_lookup_failures += 1
+        return True
+    return False

@@ -67,6 +67,7 @@ guaranteed for dense/vlm/recurrent families.
 
 from __future__ import annotations
 
+import os
 import time
 from collections import deque
 from dataclasses import dataclass, replace
@@ -78,6 +79,7 @@ from repro.serving.api import (GREEDY, ExistingPrefix, FinishedRequest,
                                GenerateRequest, PooledEngine, SamplingParams,
                                StepResult)
 from repro.serving.cache import PrefixStore, pool_capacity
+from repro.serving.faults import PrefixLookupError
 
 # Back-compat names — the typed API in repro.serving.api is the source of
 # truth; the old scheduler-local dataclasses are these aliases now.
@@ -95,6 +97,8 @@ class _Lane:
     t_first: float
     token_times: list                  # clock() stamp per emitted token
     cached_len: int = 0                # prompt tokens cloned from the store
+    no_spec: bool = False              # drafting disabled (watchdog/fault)
+    zero_accept_rounds: int = 0        # consecutive 0-accept spec rounds
 
 
 @dataclass
@@ -145,6 +149,19 @@ class Scheduler:
     pressure, not unboundedly). Matching is skipped for requests with an
     image prefix (patch embeddings shift every text position, so token
     chains would alias distinct streams).
+
+    Fault tolerance (DESIGN.md §Fault-tolerance): ``max_queue`` bounds
+    the admit queue — a submit past the bound is load-shed immediately
+    (reason ``"shed"``, reject-newest) instead of growing the queue
+    without bound; ``None`` keeps the legacy unbounded FIFO. Requests
+    carrying ``deadline_ms`` are retired with reason ``"deadline"`` at
+    admit, between prefill chunks and per decode sweep. A lane whose
+    decode logits go non-finite is quarantined, rewound bitwise
+    (``engine.rollback``) and retried once through the engine's no-LOP
+    recovery step — reason ``"fault"`` only if the retry fails too.
+    ``spec_watchdog`` disables drafting for a lane after that many
+    consecutive zero-accept speculative rounds. With ``REPRO_PARANOID=1``
+    in the environment, :meth:`check_invariants` runs after every step.
     """
 
     def __init__(self, cfg, qp, *, n_slots: int, max_len: int,
@@ -154,6 +171,7 @@ class Scheduler:
                  prefix_cache_tokens: int | None = None,
                  spec_decode: bool = False, gamma: int = 4,
                  draft_layers: int | None = None, draft_k: int | None = None,
+                 max_queue: int | None = None, spec_watchdog: int = 3,
                  clock=time.monotonic, engine=None):
         if engine is not None:
             # an injected engine owns its own configuration — reject
@@ -228,6 +246,19 @@ class Scheduler:
         self.spec_verify_launches = 0
         self.draft_launches = 0
         self.decode_launches = 0       # plain (non-spec) decode steps
+        # fault-tolerance knobs + telemetry (DESIGN.md §Fault-tolerance)
+        self.max_queue = max_queue
+        self.spec_watchdog = spec_watchdog
+        self.shed_count = 0            # submits rejected at the bound
+        self.queue_depth_peak = 0
+        self.deadline_count = 0        # requests retired past deadline
+        self.fault_events = 0          # non-finite-logit detections
+        self.fault_recoveries = 0      # rollback+retry that succeeded
+        self.fault_finishes = 0        # lanes retired with reason "fault"
+        self.fault_rids: set = set()   # rids a fault recovery touched
+        self.prefix_lookup_failures = 0
+        self.spec_watchdog_trips = 0
+        self.paranoid = os.environ.get("REPRO_PARANOID") == "1"
 
     @property
     def prefill_compiles(self) -> int:
@@ -235,7 +266,7 @@ class Scheduler:
 
     # ---------------- queue ----------------
 
-    def submit(self, req: GenerateRequest) -> None:
+    def submit(self, req: GenerateRequest) -> bool:
         # attention-free pools (capacity 0: recurrent state only) have no
         # token-capacity bound — only the prompt buffer limits them
         need = (len(req.prompt) + req.max_new_tokens
@@ -262,7 +293,17 @@ class Scheduler:
             f"the pool's cross capacity is {self.cross_capacity}")
         if req.arrival is None:
             req = replace(req, arrival=self.clock())
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # load shedding, reject-newest: overload answers immediately
+            # with reason "shed" instead of queueing unboundedly — the
+            # queued requests keep their admission order and their
+            # deadlines stay meetable
+            self.shed_count += 1
+            self._record_abort(req, reason="shed")
+            return False
         self.queue.append(req)
+        self.queue_depth_peak = max(self.queue_depth_peak, len(self.queue))
+        return True
 
     @property
     def n_active(self) -> int:
@@ -336,8 +377,13 @@ class Scheduler:
         clones: dict = {}          # prefix node key -> (node, [slots])
         while self.queue and self._free:
             req = self.queue.popleft()
-            if req.cancelled:
-                self._record_abort(req)
+            reason = self._abort_reason(req)
+            if reason:
+                # deadline enforcement point 1 of 3: at admit — a request
+                # that expired queued never takes a lane from a live one
+                if reason == "deadline":
+                    self.deadline_count += 1
+                self._record_abort(req, reason=reason)
                 continue
             slot = self._free.popleft()
             plen = len(req.prompt)
@@ -345,7 +391,13 @@ class Scheduler:
                 skip, node = 0, None
                 if self.prefix_store is not None \
                         and not self.engine.prefix_len(req):
-                    skip, node = self.prefix_store.match(req.prompt)
+                    try:
+                        skip, node = self.prefix_store.match(req.prompt)
+                    except PrefixLookupError:
+                        # store outage: degrade to a cold prefill — the
+                        # request costs more, it does not fail
+                        self.prefix_lookup_failures += 1
+                        skip, node = 0, None
                 chunks, starts, seq_ends = self._plan_chunks(req, skip=skip)
                 self._prefilling.append(_Prefill(
                     slot=slot, req=req, chunks=chunks, starts=starts,
@@ -473,32 +525,62 @@ class Scheduler:
                           finished=reason is not None,
                           finish_reason=reason or ""))
 
-    def _sweep_cancelled(self, done: list) -> None:
-        """Retire cancelled requests wherever they are in the lifecycle:
-        queued (never admitted), mid-prefill (lane released; its partial
-        K/V goes stale like any evicted lane's), or decoding."""
-        if self.queue and any(r.cancelled for r in self.queue):
+    def _expired(self, req: GenerateRequest) -> bool:
+        """Whether ``req``'s latency budget (``deadline_ms``, measured
+        from arrival) has run out."""
+        if req.deadline_ms is None or req.arrival is None:
+            return False
+        return (self.clock() - req.arrival) * 1e3 > req.deadline_ms
+
+    def _abort_reason(self, req: GenerateRequest) -> str | None:
+        """Terminal reason forcing ``req`` out mid-flight, or None.
+        Cancellation wins over deadline (the caller already gave up)."""
+        if req.cancelled:
+            return "cancelled"
+        if self._expired(req):
+            return "deadline"
+        return None
+
+    def _sweep_terminal(self, done: list) -> None:
+        """Retire cancelled and deadline-expired requests wherever they
+        are in the lifecycle: queued (never admitted), mid-prefill (lane
+        released between chunks; its partial K/V goes stale like any
+        evicted lane's), or decoding. Runs at the top of every serve
+        cycle, which is what enforces deadlines between prefill chunks
+        and per decode sweep."""
+        if self.queue and any(self._abort_reason(r) for r in self.queue):
             kept: deque[GenerateRequest] = deque()
             for req in self.queue:
-                if req.cancelled:
-                    done.append(self._record_abort(req))
+                reason = self._abort_reason(req)
+                if reason:
+                    if reason == "deadline":
+                        self.deadline_count += 1
+                    done.append(self._record_abort(req, reason=reason))
                 else:
                     kept.append(req)
             self.queue = kept
-        if self._prefilling and any(p.req.cancelled
+        if self._prefilling and any(self._abort_reason(p.req)
                                     for p in self._prefilling):
             kept_p: deque[_Prefill] = deque()
             for pf in self._prefilling:
-                if pf.req.cancelled:
+                reason = self._abort_reason(pf.req)
+                if reason:
+                    if reason == "deadline":
+                        self.deadline_count += 1
                     done.append(self._record_abort(pf.req,
-                                                   t_admit=pf.t_admit))
+                                                   t_admit=pf.t_admit,
+                                                   reason=reason))
                     self._free.append(pf.slot)
                 else:
                     kept_p.append(pf)
             self._prefilling = kept_p
         for slot, lane in enumerate(self.lanes):
-            if lane is not None and lane.req.cancelled:
-                done.append(self._finish(slot, "cancelled"))
+            if lane is not None:
+                reason = self._abort_reason(lane.req)
+                if reason:
+                    if reason == "deadline":
+                        self.deadline_count += 1
+                    done.append(self._finish(slot, reason))
 
     def _lane_kv_len(self, slot: int) -> int:
         """Committed cache length of lane ``slot``: positions [0, L) hold
@@ -518,6 +600,11 @@ class Scheduler:
         for slot, lane in enumerate(self.lanes):
             if lane is None:
                 continue
+            if lane.no_spec:
+                # a faulted or watchdog-tripped lane never drafts again;
+                # the whole cycle degrades to plain decode (the batched
+                # draft/verify launches can't exclude one lane)
+                return 0
             sp = lane.req.sampling or GREEDY
             lane_g = sp.gamma if sp.gamma > 0 else self.gamma
             lane_g = min(lane_g, lane.remaining)
@@ -575,14 +662,48 @@ class Scheduler:
             logits, self.pool = self.engine.verify_chunk(
                 self.pool, slot, block, start)
             self.spec_verify_launches += 1
+            if not bool(np.isfinite(np.asarray(logits)).all()):
+                # poisoned verify logits: rewind the whole round for this
+                # lane (g drafts + 1 verify append) and retire it from
+                # speculation — next cycle's plain decode recomputes the
+                # token through the NaN-guard/retry path
+                self.pool = self.engine.rollback(self.pool, slot, g + 1)
+                lane.no_spec = True
+                self.fault_events += 1
+                self.fault_rids.add(lane.req.rid)
+                continue
             sp = lane.req.sampling or GREEDY
             targets = self.engine.sample_block(logits, sp, base_e[slot])
             j = 0
             while j < g and drafts[slot][j] == int(targets[j]):
                 j += 1
             self.spec_accepted += j
+            if j == 0:
+                # drafting watchdog: a lane whose drafts are never
+                # accepted is burning draft launches for nothing —
+                # after ``spec_watchdog`` consecutive zero-accept rounds
+                # it falls back to plain decode for good
+                lane.zero_accept_rounds += 1
+                if lane.zero_accept_rounds >= self.spec_watchdog:
+                    lane.no_spec = True
+                    self.spec_watchdog_trips += 1
+            else:
+                lane.zero_accept_rounds = 0
             finished = False
             for tok in (int(t) for t in targets[:j + 1]):
+                abort = self._abort_reason(lane.req)
+                if abort is not None:
+                    # cancel/deadline fired mid-round: keep the tokens
+                    # already committed this round, rewind the rest of
+                    # the verify window, and retire the lane now
+                    emitted = len(lane.tokens) - base_e[slot]
+                    self.pool = self.engine.rollback(
+                        self.pool, slot, g + 1 - emitted)
+                    if abort == "deadline":
+                        self.deadline_count += 1
+                    done.append(self._finish(slot, abort))
+                    finished = True
+                    break
                 idx = len(lane.tokens)
                 lane.tokens.append(tok)
                 lane.token_times.append(self.clock())
@@ -600,12 +721,59 @@ class Scheduler:
                 # (a finished lane was evicted — nothing to rewind)
                 self.pool = self.engine.rollback(self.pool, slot, g - j)
 
+    def _append_token(self, slot: int, tok: int, done: list) -> None:
+        """Commit one emitted token to lane ``slot``: record it, stream
+        it, and retire the lane if it hit a finish reason."""
+        lane = self.lanes[slot]
+        idx = len(lane.tokens)
+        lane.tokens.append(tok)
+        lane.token_times.append(self.clock())
+        lane.remaining -= 1
+        self._next_tok[slot, 0] = tok
+        reason = self._token_reason(lane, tok)
+        self._emit(lane, tok, idx, reason)
+        if reason is not None:
+            done.append(self._finish(slot, reason))
+
+    def _recover_lane(self, slot: int, temps, tks, tps,
+                      done: list) -> None:
+        """Non-finite logits on lane ``slot`` this decode step: the
+        recovery contract (DESIGN.md §Fault-tolerance). The poisoned
+        append is rewound bitwise (``engine.rollback`` — K/V, scales,
+        LOP features, PRNG step), drafting is permanently disabled for
+        the lane, and the token is recomputed once through the engine's
+        single-lane no-LOP retry. Only if the retry's logits are ALSO
+        non-finite does the lane give up with reason ``"fault"`` (its
+        tokens so far are delivered)."""
+        lane = self.lanes[slot]
+        self.fault_events += 1
+        self.fault_rids.add(lane.req.rid)
+        lane.no_spec = True
+        self.pool = self.engine.rollback(self.pool, slot, 1)
+        toks, ok, self.pool = self.engine.retry_step(
+            self.pool, slot, self._next_tok, temps, tks, tps)
+        if not bool(ok[slot]):
+            self.pool = self.engine.rollback(self.pool, slot, 1)
+            self.fault_finishes += 1
+            done.append(self._finish(slot, "fault"))
+            return
+        self.fault_recoveries += 1
+        self._append_token(slot, int(toks[slot]), done)
+
     def step(self) -> list[FinishedRequest]:
-        """One serve cycle: cancellation sweep + ≤1 prefill chunk + one
-        sampled decode step over every active lane (or, in speculative
-        mode, one draft-γ/verify round); returns completions."""
+        """One serve cycle: terminal sweep (cancellations + deadlines) +
+        ≤1 prefill chunk + one sampled decode step over every active lane
+        (or, in speculative mode, one draft-γ/verify round); returns
+        completions. Under ``REPRO_PARANOID=1`` the invariant checker
+        runs after every cycle."""
+        done = self._step_inner()
+        if self.paranoid:
+            self.check_invariants()
+        return done
+
+    def _step_inner(self) -> list[FinishedRequest]:
         done: list[FinishedRequest] = []
-        self._sweep_cancelled(done)
+        self._sweep_terminal(done)
         prefilling = self._step_prefill(done)
         if self.n_active == 0:
             return done
@@ -629,19 +797,16 @@ class Scheduler:
         toks, self.pool = self.engine.decode_step(
             self.pool, self._next_tok, temps, tks, tps)
         self.decode_launches += 1
+        # per-lane logit-finiteness guard published by the engine (None:
+        # an engine without the guard — every lane treated healthy)
+        ok = getattr(self.engine, "last_ok", None)
         for slot, lane in enumerate(self.lanes):
             if lane is None:
                 continue
-            tok = int(toks[slot])
-            idx = len(lane.tokens)
-            lane.tokens.append(tok)
-            lane.token_times.append(self.clock())
-            lane.remaining -= 1
-            self._next_tok[slot, 0] = tok
-            reason = self._token_reason(lane, tok)
-            self._emit(lane, tok, idx, reason)
-            if reason is not None:
-                done.append(self._finish(slot, reason))
+            if ok is not None and not bool(ok[slot]):
+                self._recover_lane(slot, temps, tks, tps, done)
+                continue
+            self._append_token(slot, int(toks[slot]), done)
         return done
 
     def _finish(self, slot: int, reason: str) -> FinishedRequest:
@@ -659,18 +824,84 @@ class Scheduler:
         self.results.append(res)
         return res
 
-    def _record_abort(self, req: GenerateRequest,
-                      t_admit: float = 0.0) -> FinishedRequest:
-        """A request cancelled before emitting any token."""
+    def _record_abort(self, req: GenerateRequest, t_admit: float = 0.0,
+                      reason: str = "cancelled") -> FinishedRequest:
+        """A request retired before emitting any token (cancelled,
+        deadline-expired, or load-shed)."""
         now = self.clock()
         res = FinishedRequest(
             rid=req.rid, prompt_len=len(req.prompt), tokens=[],
-            finish_reason="cancelled",
+            finish_reason=reason,
             t_arrival=req.arrival if req.arrival is not None else now,
             t_admit=t_admit or now, t_first=now, t_done=now,
             token_times=[])
         self.results.append(res)
         return res
+
+    # ---------------- invariants (REPRO_PARANOID=1) ----------------
+
+    def check_invariants(self) -> None:
+        """Cross-check host bookkeeping against device state — the
+        contracts every fault-recovery path must preserve (DESIGN.md
+        §Fault-tolerance). Runs after every ``step()`` under
+        ``REPRO_PARANOID=1``; cheap enough for CI chaos runs (a few
+        scalar pulls per cycle, no page reads).
+
+        - slot partition: every slot is exactly one of occupied (a live
+          lane), reserved (mid-chunked-prefill) or free
+        - the pool's ``active`` mask equals the occupied set (reserved
+          lanes stay inactive until their final chunk)
+        - per-lane ``lengths`` stay within pool capacity, and an occupied
+          lane's device length equals its host-side committed length
+          (prefix + prompt + emissions − 1 pending)
+        - PRNG-step monotonicity: a sampled lane's ``sample_step`` is
+          non-negative and equals its emission count, so rollback/retry
+          cycles net to exactly the tokens delivered (greedy lanes never
+          read their counter and are exempt)
+        - the prefix store's own structural invariants hold
+        """
+        occupied = {s for s, l in enumerate(self.lanes) if l is not None}
+        reserved = {pf.slot for pf in self._prefilling}
+        free = set(self._free)
+        assert occupied.isdisjoint(reserved) and occupied.isdisjoint(free) \
+            and reserved.isdisjoint(free), (
+            f"slot sets overlap: occupied={occupied} reserved={reserved} "
+            f"free={free}")
+        assert len(free) == len(self._free), "duplicate slots in free list"
+        assert occupied | reserved | free == set(range(self.n_slots)), (
+            f"slot partition incomplete: occupied={occupied} "
+            f"reserved={reserved} free={free} n_slots={self.n_slots}")
+        if "active" in self.pool:
+            dev_active = {int(s) for s in
+                          np.flatnonzero(np.asarray(self.pool["active"]))}
+            assert dev_active == occupied, (
+                f"pool active mask {dev_active} != occupied lanes "
+                f"{occupied}")
+        lengths = np.asarray(self.pool["lengths"])
+        if self.capacity:
+            assert int(lengths.max(initial=0)) <= self.capacity, (
+                f"lane length {int(lengths.max())} exceeds pool capacity "
+                f"{self.capacity}")
+            for slot in occupied:
+                want = self._lane_kv_len(slot)
+                assert int(lengths[slot]) == want, (
+                    f"slot {slot}: device length {int(lengths[slot])} != "
+                    f"host committed length {want}")
+        if "sample_step" in self.pool:
+            steps = np.asarray(self.pool["sample_step"])
+            assert int(steps.min(initial=0)) >= 0, (
+                f"negative sample_step: {steps}")
+            for slot in occupied:
+                lane = self.lanes[slot]
+                sp = lane.req.sampling
+                if sp is None or sp.temperature <= 0.0:
+                    continue        # greedy lanes never read the counter
+                assert int(steps[slot]) == len(lane.tokens), (
+                    f"slot {slot}: sample_step {int(steps[slot])} != "
+                    f"emissions {len(lane.tokens)} — a rollback/retry "
+                    f"desynced the PRNG schedule")
+        if self.prefix_store is not None:
+            self.prefix_store.check_invariants()
 
     def run_to_completion(self) -> list[FinishedRequest]:
         """Drain queue + lanes (all requests already submitted)."""

@@ -1,0 +1,478 @@
+"""Fault-tolerant serving: injection, recovery, deadlines, admission.
+
+The robustness contract (DESIGN.md §Fault-tolerance): under a
+deterministic seeded :class:`repro.serving.faults.FaultPlan` the serving
+stack degrades instead of corrupting or hanging —
+
+  * non-finite decode logits are detected in-graph, the poisoned append
+    is rewound bitwise (``rollback``) and the token recomputed once with
+    the LOP screen off; only a sticky fault retires the lane (reason
+    ``"fault"``),
+  * a recovered lane's stream is the un-faulted stream (use_lop=False
+    pins retry == plain decode), bitwise across two runs of one plan,
+  * corrupted interned prefix pages fail their checksum at the next
+    match and degrade to a cold prefill; store lookup outages likewise,
+  * deadlines are enforced at admit, between prefill chunks and per
+    decode sweep (reason ``"deadline"``); a bounded queue load-sheds
+    reject-newest (reason ``"shed"``),
+  * a zero-accept speculative lane trips the drafting watchdog,
+  * the 200-request chaos trace completes within a step budget with
+    every request in a terminal state and the invariant checker
+    (``REPRO_PARANOID=1``) live on every cycle.
+
+Runs under both REPRO_KERNEL_IMPL arms via scripts/ci_tier1.sh.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models.transformer import init_params
+from repro.serving import faults
+from repro.serving.api import (CancelToken, GenerateRequest, PooledEngine,
+                               SamplingParams)
+from repro.serving.quantize import quantize_params
+from repro.serving.scheduler import Scheduler, lockstep_generate
+
+from tests.test_models_smoke import _reduced
+
+MAX_LEN = 63          # pool capacity 64 with the reduced lop_block of 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _reduced("bitnet-3b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, quantize_params(cfg, params)
+
+
+@pytest.fixture(scope="module")
+def engine(setup):
+    """One shared no-LOP engine: every scheduler in this module reuses
+    its jit caches (including the lazily-compiled recovery retry)."""
+    cfg, qp = setup
+    return PooledEngine(cfg, qp, max_len=MAX_LEN, use_lop=False)
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (n,)).astype(np.int32) for n in lens]
+
+
+def _sched(cfg, qp, eng, **kw):
+    return Scheduler(cfg, qp, n_slots=kw.pop("n_slots", 2),
+                     max_len=MAX_LEN, engine=eng, **kw)
+
+
+def _ref(cfg, qp, p, n, **kw):
+    return lockstep_generate(cfg, qp, p, n, max_len=MAX_LEN, use_lop=False,
+                             **kw)
+
+
+# ---------------------------------------------------------------------------
+# The plan itself: seeded, frozen, non-nesting
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_random_is_deterministic():
+    mk = lambda s: faults.FaultPlan.random(
+        s, n_decode_calls=50, n_lanes=4, nan_events=3, sticky_lanes=1,
+        page_flips=2, lookup_fails=2, slow_steps=2, slow_s=0.001)
+    assert mk(7) == mk(7)
+    assert mk(7) != mk(8)
+    p = mk(7)
+    assert len(p.nan_logits) == 3 and len(p.sticky_nan_lanes) == 1
+
+
+def test_inject_scopes_and_rejects_nesting():
+    assert faults.active() is None
+    plan = faults.FaultPlan(nan_logits=frozenset({(0, 0)}))
+    with faults.inject(plan) as st:
+        assert faults.active() is plan
+        with pytest.raises(AssertionError):
+            with faults.inject(plan):
+                pass
+        add = faults.decode_fault_add(2)
+        assert np.isnan(add[0]) and np.isfinite(add[1])
+        assert faults.decode_fault_add(2) is not None
+        assert not np.isnan(faults.decode_fault_add(2)).any()
+        assert st.decode_calls == 3 and st.injected_nan == 1
+    assert faults.active() is None
+    assert faults.decode_fault_add(2) is None     # production fast path
+
+
+def test_counter_keyed_injection_points():
+    plan = faults.FaultPlan(seed=11, page_bitflips=frozenset({1}),
+                            lookup_failures=frozenset({2}))
+    with faults.inject(plan) as st:
+        assert faults.page_corruption_rng() is None
+        r1 = faults.page_corruption_rng()
+        assert r1 is not None
+        assert [faults.lookup_fails() for _ in range(4)] == [
+            False, False, True, False]
+        assert st.injected_flips == 1 and st.injected_lookup_failures == 1
+    # same plan, fresh scope: the chosen bit is the same bit
+    with faults.inject(plan):
+        faults.page_corruption_rng()
+        r2 = faults.page_corruption_rng()
+    assert list(r1.integers(0, 1 << 30, 4)) == \
+        list(r2.integers(0, 1 << 30, 4))
+
+
+# ---------------------------------------------------------------------------
+# NaN-logit detection → rollback → retry
+# ---------------------------------------------------------------------------
+
+
+def test_transient_nan_recovers_lockstep_exact(setup, engine):
+    """A transient NaN on an active lane is detected, rewound and retried
+    — the delivered stream is exactly the un-faulted stream (the retry
+    recomputes with use_lop=False, which IS the plain path here)."""
+    cfg, qp = setup
+    prompts = _prompts(cfg, [12, 27, 9])
+    plan = faults.FaultPlan(nan_logits=frozenset({(2, 0), (4, 1)}))
+    with faults.inject(plan) as st:
+        sched = _sched(cfg, qp, engine)
+        for rid, p in enumerate(prompts):
+            sched.submit(GenerateRequest(rid=rid, prompt=p,
+                                         max_new_tokens=6))
+        res = {r.rid: r for r in sched.run_to_completion()}
+        assert st.injected_nan >= 1
+    assert sched.fault_events >= 1
+    assert sched.fault_recoveries == sched.fault_events
+    assert sched.fault_finishes == 0
+    for rid, p in enumerate(prompts):
+        assert res[rid].finish_reason == "length"
+        assert res[rid].tokens == _ref(cfg, qp, p, 6), rid
+
+
+def test_sticky_nan_lane_finishes_with_fault(setup, engine):
+    """A fault that survives the retry retires the lane with reason
+    "fault", delivering the tokens emitted before the fault; the slot is
+    reusable and a follow-up request on it is unaffected."""
+    cfg, qp = setup
+    p0, p1 = _prompts(cfg, [12, 9], seed=7)
+    with faults.inject(faults.FaultPlan(sticky_nan_lanes=frozenset({0}))):
+        sched = _sched(cfg, qp, engine, n_slots=1)
+        sched.submit(GenerateRequest(rid=0, prompt=p0, max_new_tokens=6))
+        res = {r.rid: r for r in sched.run_to_completion()}
+    assert res[0].finish_reason == "fault"
+    assert len(res[0].tokens) >= 1             # the prefill-seeded token
+    assert sched.fault_finishes == 1
+    assert sched.n_active == 0 and len(sched._free) == 1
+    # same scheduler, fault scope closed: the lane serves cleanly again
+    sched.submit(GenerateRequest(rid=1, prompt=p1, max_new_tokens=5))
+    res = {r.rid: r for r in sched.run_to_completion()}
+    assert res[1].tokens == _ref(cfg, qp, p1, 5)
+
+
+def test_sampled_recovery_reproduces_unfaulted_stream(setup, engine):
+    """A sampled lane's recovery nets sample_step to exactly its emission
+    count, so the retried token and every later draw match the un-faulted
+    same-seed stream."""
+    cfg, qp = setup
+    (p,) = _prompts(cfg, [12])
+    sp = SamplingParams(temperature=0.8, top_k=20, seed=7)
+    runs = []
+    for plan in (None, faults.FaultPlan(nan_logits=frozenset({(1, 0)}))):
+        ctx = faults.inject(plan) if plan else None
+        if ctx:
+            ctx.__enter__()
+        sched = _sched(cfg, qp, engine, n_slots=1)
+        sched.submit(GenerateRequest(rid=0, prompt=p, max_new_tokens=6,
+                                     sampling=sp))
+        runs.append(sched.run_to_completion()[0].tokens)
+        if ctx:
+            ctx.__exit__(None, None, None)
+    assert runs[0] == runs[1]
+    assert sched.fault_recoveries == 1
+
+
+def test_foreign_engine_without_guard_is_untouched(setup, engine):
+    """An engine that never publishes ``last_ok`` (the protocol's
+    fault-contract default) serves normally — the scheduler treats every
+    lane as healthy rather than probing engine internals."""
+    cfg, qp = setup
+    (p,) = _prompts(cfg, [10], seed=9)
+
+    class NoGuard:
+        def __init__(self, eng):
+            self._eng = eng
+
+        def __getattr__(self, name):
+            if name == "last_ok":
+                raise AttributeError(name)
+            return getattr(self._eng, name)
+
+        def decode_step(self, *a, **kw):
+            toks, pool = self._eng.decode_step(*a, **kw)
+            return toks, pool
+
+    sched = Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN,
+                      engine=NoGuard(engine))
+    sched.submit(GenerateRequest(rid=0, prompt=p, max_new_tokens=5))
+    res = sched.run_to_completion()[0]
+    assert res.tokens == _ref(cfg, qp, p, 5)
+    assert sched.fault_events == 0
+
+
+# ---------------------------------------------------------------------------
+# Prefix-store faults: checksums + lookup outages
+# ---------------------------------------------------------------------------
+
+
+def test_corrupted_prefix_page_fails_checksum_and_falls_back(setup, engine):
+    """A bit flipped in an interned page after intern (post-intern rot) is
+    caught by the per-page checksum at the next match: the corrupt
+    subtree is dropped, the request cold-prefills, and the re-interned
+    prefix serves later hits cleanly — tokens are never wrong."""
+    cfg, qp = setup
+    (p,) = _prompts(cfg, [40], seed=13)    # >= one 32-token block
+    plan = faults.FaultPlan(seed=3, page_bitflips=frozenset({0}))
+    with faults.inject(plan) as st:
+        sched = _sched(cfg, qp, engine, n_slots=1)
+        for rid in range(3):
+            sched.submit(GenerateRequest(rid=rid, prompt=p,
+                                         max_new_tokens=4))
+        res = {r.rid: r for r in sched.run_to_completion()}
+        assert st.injected_flips == 1
+    store = sched.prefix_store
+    assert store is not None
+    assert store.checksum_failures == 1
+    # rid 1 hit the corrupt node -> cold prefill + re-intern; rid 2 hits
+    # the clean re-interned chain
+    assert sched.prefix_hits == 1
+    ref = _ref(cfg, qp, p, 4)
+    for rid in range(3):
+        assert res[rid].tokens == ref, rid
+    store.check_invariants()
+
+
+def test_lookup_failure_degrades_to_cold_prefill(setup, engine):
+    cfg, qp = setup
+    (p,) = _prompts(cfg, [40], seed=15)
+    plan = faults.FaultPlan(lookup_failures=frozenset({1}))
+    with faults.inject(plan):
+        sched = _sched(cfg, qp, engine, n_slots=1)
+        for rid in range(3):
+            sched.submit(GenerateRequest(rid=rid, prompt=p,
+                                         max_new_tokens=4))
+        res = {r.rid: r for r in sched.run_to_completion()}
+    assert sched.prefix_lookup_failures == 1
+    assert sched.prefix_hits == 1              # rid 2 still hits
+    ref = _ref(cfg, qp, p, 4)
+    for rid in range(3):
+        assert res[rid].tokens == ref, rid
+
+
+# ---------------------------------------------------------------------------
+# Deadlines + admission control
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expired_in_queue_never_takes_a_lane(setup, engine):
+    cfg, qp = setup
+    p0, p1 = _prompts(cfg, [10, 10], seed=17)
+    t = [0.0]
+    sched = _sched(cfg, qp, engine, n_slots=1, clock=lambda: t[0])
+    sched.submit(GenerateRequest(rid=0, prompt=p0, max_new_tokens=4,
+                                 deadline_ms=50.0))
+    sched.submit(GenerateRequest(rid=1, prompt=p1, max_new_tokens=4))
+    t[0] = 0.2                                 # rid 0 expired while queued
+    res = {r.rid: r for r in sched.run_to_completion()}
+    assert res[0].finish_reason == "deadline" and res[0].tokens == []
+    assert res[1].finish_reason == "length"
+    assert sched.deadline_count == 1
+
+
+def test_deadline_mid_decode_delivers_partial_stream(setup, engine):
+    """Deadline enforcement per decode sweep: the lane retires with the
+    tokens emitted inside its budget — a PREFIX of the lockstep stream,
+    not a corrupted one."""
+    cfg, qp = setup
+    (p,) = _prompts(cfg, [10], seed=19)
+    t = [0.0]
+    sched = _sched(cfg, qp, engine, n_slots=1, clock=lambda: t[0])
+    sched.submit(GenerateRequest(rid=0, prompt=p, max_new_tokens=10,
+                                 deadline_ms=45.0))
+    steps = 0
+    while sched.has_work():
+        sched.admit()
+        sched.step()
+        t[0] += 0.01
+        steps += 1
+        assert steps < 50, "deadline never fired"
+    res = sched.results[0]
+    assert res.finish_reason == "deadline"
+    ref = _ref(cfg, qp, p, 10)
+    assert 1 <= len(res.tokens) < 10
+    assert res.tokens == ref[:len(res.tokens)]
+    assert sched.n_active == 0 and len(sched._free) == 1
+
+
+def test_deadline_between_prefill_chunks_frees_reserved_lane(setup):
+    cfg, qp = setup
+    (p,) = _prompts(cfg, [40], seed=21)
+    t = [0.0]
+    # a private engine: chunk_tokens=8 -> the 40-token prompt needs 5
+    # chunk cycles, so a 25 ms budget at 10 ms/cycle dies mid-prefill
+    eng = PooledEngine(cfg, qp, max_len=MAX_LEN, use_lop=False,
+                       chunk_tokens=8)
+    sched = Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN, engine=eng,
+                      clock=lambda: t[0])
+    sched.submit(GenerateRequest(rid=0, prompt=p, max_new_tokens=4,
+                                 deadline_ms=25.0))
+    steps = 0
+    while sched.has_work():
+        sched.admit()
+        sched.step()
+        t[0] += 0.01
+        steps += 1
+        assert steps < 50, "deadline never fired"
+    res = sched.results[0]
+    assert res.finish_reason == "deadline" and res.tokens == []
+    assert steps < 6                       # died before the chunks ran out
+    assert sched.n_prefilling == 0 and len(sched._free) == 1
+    assert sched.deadline_count == 1
+
+
+def test_bounded_queue_sheds_newest(setup, engine):
+    cfg, qp = setup
+    prompts = _prompts(cfg, [10, 12, 9, 11], seed=23)
+    sched = _sched(cfg, qp, engine, n_slots=1, max_queue=3)
+    oks = [sched.submit(GenerateRequest(rid=i, prompt=p, max_new_tokens=3))
+           for i, p in enumerate(prompts)]
+    assert oks == [True, True, True, False]
+    assert sched.shed_count == 1 and sched.queue_depth_peak == 3
+    res = {r.rid: r for r in sched.run_to_completion()}
+    assert res[3].finish_reason == "shed" and res[3].tokens == []
+    assert all(res[i].finish_reason == "length" for i in range(3))
+
+
+# ---------------------------------------------------------------------------
+# Speculative watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_spec_watchdog_disables_hopeless_drafting(setup):
+    """A lane whose drafts never match verify trips the watchdog after
+    ``spec_watchdog`` zero-accept rounds and finishes via plain decode —
+    the stream stays lockstep-exact throughout (round emissions are the
+    verifier's own tokens)."""
+    cfg, qp = setup
+    (p,) = _prompts(cfg, [10], seed=25)
+    eng = PooledEngine(cfg, qp, max_len=MAX_LEN, use_lop=False)
+    orig = eng.draft
+
+    def bad_draft(pool, tokens, temps, tks, tps):
+        toks, pool = orig(pool, tokens, temps, tks, tps)
+        return (toks + 1) % cfg.vocab, pool     # always-wrong proposals
+
+    eng.draft = bad_draft
+    sched = Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN, engine=eng,
+                      spec_decode=True, gamma=3, spec_watchdog=2)
+    sched.submit(GenerateRequest(rid=0, prompt=p, max_new_tokens=10))
+    res = sched.run_to_completion()[0]
+    assert sched.spec_watchdog_trips == 1
+    assert sched.spec_rounds == 2              # the two zero-accept rounds
+    assert sched.spec_accepted == 0
+    assert sched.decode_launches > 0           # plain-decode tail
+    assert res.tokens == _ref(cfg, qp, p, 10)
+
+
+# ---------------------------------------------------------------------------
+# Chaos: 200 requests, seeded fault plan, paranoid invariants, 2x bitwise
+# ---------------------------------------------------------------------------
+
+_TERMINAL = {"eos", "stop", "length", "cancelled", "deadline", "shed",
+             "fault"}
+
+
+def _chaos_trace(cfg):
+    """200 requests: mixed lengths, a shared 32-token prefix every 10th
+    request (exercises intern/clone under corruption), a handful of tight
+    deadlines and mid-stream cancels. Deterministic by construction."""
+    rng = np.random.default_rng(41)
+    shared = rng.integers(0, cfg.vocab, (32,)).astype(np.int32)
+    reqs, cancels = [], {}
+    for rid in range(200):
+        plen = int(rng.integers(6, 15))
+        prompt = rng.integers(0, cfg.vocab, (plen,)).astype(np.int32)
+        if rid % 10 == 0:
+            prompt = np.concatenate([shared, prompt])
+        deadline = 150.0 if rid % 23 == 5 else None
+        tok = CancelToken() if rid % 41 == 3 else None
+        if tok is not None:
+            cancels[rid] = tok
+        reqs.append(GenerateRequest(rid=rid, prompt=prompt,
+                                    max_new_tokens=3, deadline_ms=deadline,
+                                    cancel=tok))
+    return reqs, cancels
+
+
+def _run_chaos(cfg, qp, eng, plan):
+    reqs, cancels = _chaos_trace(cfg)
+    t = [0.0]
+    sched = Scheduler(cfg, qp, n_slots=4, max_len=MAX_LEN, engine=eng,
+                      max_queue=150, clock=lambda: t[0])
+    with faults.inject(plan) as st:
+        for r in reqs:
+            sched.submit(r)
+        steps = 0
+        while sched.has_work():
+            sched.admit()
+            sched.step()
+            # deterministic virtual time; cancels fire on emission count
+            t[0] += 0.01
+            for rid, tok in cancels.items():
+                lane = next((l for l in sched.lanes
+                             if l is not None and l.req.rid == rid), None)
+                if lane is not None and len(lane.tokens) >= 2:
+                    tok.cancel()
+            steps += 1
+            assert steps < 2000, "chaos run exceeded its step budget (hang)"
+    return sched, {r.rid: r for r in sched.results}, st
+
+
+def test_chaos_200_requests_terminal_deterministic_and_exact(
+        setup, engine, monkeypatch):
+    cfg, qp = setup
+    monkeypatch.setenv("REPRO_PARANOID", "1")
+    plan = faults.FaultPlan.random(31, n_decode_calls=160, n_lanes=4,
+                                   nan_events=6, page_flips=1,
+                                   lookup_fails=2)
+    sched, res, st = _run_chaos(cfg, qp, engine, plan)
+
+    # every request reached a terminal state, nothing hung or vanished
+    assert len(res) == 200
+    assert {r.finish_reason for r in res.values()} <= _TERMINAL
+    by_reason = {}
+    for r in res.values():
+        by_reason[r.finish_reason] = by_reason.get(r.finish_reason, 0) + 1
+    assert by_reason.get("shed", 0) == 50          # 200 into a 150 bound
+    assert by_reason.get("deadline", 0) >= 1
+    assert by_reason.get("cancelled", 0) >= 1
+    assert by_reason.get("length", 0) >= 100
+    assert sched.fault_events >= 1                 # the plan actually bit
+    assert sched.fault_recoveries >= 1
+    assert st.injected_nan >= 1
+
+    # un-faulted AND recovered length-finished lanes are lockstep-exact
+    # (use_lop=False makes the no-LOP retry recompute the identical token)
+    reqs, _ = _chaos_trace(cfg)
+    for req in reqs:
+        r = res[req.rid]
+        if r.finish_reason == "length":
+            assert r.tokens == _ref(cfg, qp, req.prompt, 3), req.rid
+
+    # bitwise determinism: the same plan over the same trace reproduces
+    # every stream and every terminal reason, including retried tokens
+    sched2, res2, _ = _run_chaos(cfg, qp, engine, plan)
+    for rid in res:
+        assert res[rid].tokens == res2[rid].tokens, rid
+        assert res[rid].finish_reason == res2[rid].finish_reason, rid
+    assert sched2.fault_events == sched.fault_events
+    assert sched2.fault_recoveries == sched.fault_recoveries
+
+    # the paranoid invariant checker was live the whole run
+    assert sched.paranoid and sched2.paranoid
+    sched.check_invariants()

@@ -27,7 +27,8 @@ import pytest
 
 from repro.models.transformer import init_params
 from repro.serving import cache as _cache
-from repro.serving.api import GenerateRequest, PooledEngine, SamplingParams
+from repro.serving.api import (CancelToken, ExistingPrefix, GenerateRequest,
+                               PooledEngine, SamplingParams)
 from repro.serving.quantize import quantize_params
 from repro.serving.scheduler import Scheduler, lockstep_generate
 
@@ -316,6 +317,75 @@ def test_rollback_property(rollback_rig):
                                     build(gamma - j))
 
     prop()
+
+
+def test_cancel_token_fired_mid_spec_round(setup):
+    """Regression (ISSUE 9 satellite): a CancelToken fired from the
+    ``on_token`` callback BETWEEN a speculative round's emissions retires
+    the lane inside ``_spec_round`` — the delivered tokens are a clean
+    prefix of the lockstep stream, the unemitted verify window is rewound,
+    and the freed lane then serves a fresh request token-exactly (the
+    rewind accounting left no residue)."""
+    cfg, qp = setup
+    p0, p1 = _prompts(cfg, (15, 9), seed=37)
+    ref = lockstep_generate(cfg, qp, p0, 12, max_len=MAX_LEN,
+                            use_lop=False)
+    tok = CancelToken()
+
+    def on_token(sr):
+        if sr.index >= 1:
+            tok.cancel()
+
+    sched = Scheduler(cfg, qp, n_slots=1, max_len=MAX_LEN, use_lop=False,
+                      spec_decode=True, gamma=4)
+    sched.submit(GenerateRequest(rid=0, prompt=p0, max_new_tokens=12,
+                                 cancel=tok, on_token=on_token))
+    res = {r.rid: r for r in sched.run_to_completion()}
+    assert sched.spec_rounds >= 1
+    assert res[0].finish_reason == "cancelled"
+    assert 2 <= len(res[0].tokens) < 12
+    assert res[0].tokens == ref[:len(res[0].tokens)]
+    assert sched.n_active == 0 and len(sched._free) == 1
+    # the rewound pool is coherent: the SAME lane serves the next request
+    # bitwise-exactly
+    sched.submit(GenerateRequest(rid=1, prompt=p1, max_new_tokens=8))
+    res = {r.rid: r for r in sched.run_to_completion()}
+    assert res[1].tokens == lockstep_generate(cfg, qp, p1, 8,
+                                              max_len=MAX_LEN,
+                                              use_lop=False)
+
+
+def test_rollback_into_interned_prefix_leaves_store_pages_intact(setup):
+    """Property (ISSUE 9 satellite, alongside the PR 7 rollback grid
+    above): ``rollback_slot`` into a region cloned from ref-counted
+    interned blocks mutates only the lane's pool copy — the store's
+    pages, re-assembled afterwards, are bitwise identical, so a later
+    sharer of the same prefix is unaffected."""
+    cfg, qp = setup
+    engine = PooledEngine(cfg, qp, max_len=MAX_LEN, use_lop=False)
+    store = _cache.PrefixStore(engine.prefix_block)
+    rng = np.random.default_rng(43)
+    prompt = rng.integers(0, cfg.vocab, (40,)).astype(np.int32)
+    _, c = engine.prefill(prompt[None], len(prompt), {})
+    n = (len(prompt) // store.block) * store.block
+    node = store.insert(prompt[:n], c)
+    assert node is not None and node.n_tokens == n
+    snap = [(jax.tree_util.keystr(path), np.asarray(leaf).copy())
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                store.assemble(node))[0]]
+
+    pool = engine.init_pool(1)
+    prefix = ExistingPrefix(cache=store.assemble(node), common_len=n)
+    pool = engine.bulk_insert(pool, np.asarray([0], np.int32), prefix)
+    pool = engine.rollback(pool, 0, 5)      # back INTO the interned region
+    assert int(pool["lengths"][0]) == n - 5
+
+    after = jax.tree_util.tree_flatten_with_path(store.assemble(node))[0]
+    assert len(after) == len(snap)
+    for (key, a), (path, b) in zip(snap, after):
+        assert key == jax.tree_util.keystr(path)
+        np.testing.assert_array_equal(a, np.asarray(b), err_msg=key)
+    store.check_invariants()
 
 
 def test_rollback_slot_targets_one_lane(setup):
