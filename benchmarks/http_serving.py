@@ -1,0 +1,172 @@
+"""HTTP serving-path benchmark: TTFT/ITL over real loopback sockets.
+
+Spins the production front-end (``repro.serving.frontend``) on an
+ephemeral loopback port — real asyncio server, real scheduler-pump
+thread, real HTTP parsing — then drives concurrent streaming
+completions from socket clients and measures what a caller actually
+sees: time-to-first-SSE-frame (TTFT including HTTP + queueing),
+inter-frame gaps (ITL) and aggregate tokens/s. One response is replayed
+through :func:`repro.serving.scheduler.lockstep_generate` to pin the
+transport-adds-nothing guarantee, and the final ``/metrics`` scrape is
+folded into the payload so the server's own counters ride the
+trajectory gate too.
+
+Raw series goes to ``BENCH_http.json``. On CPU the absolute times are
+compile/dispatch-dominated; the structural leaves (request counts, SSE
+frame counts, server counters) are exact.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+
+N_REQUESTS = 6
+GEN = 8
+N_SLOTS = 2
+MAX_LEN = 63            # pool capacity 64 with the reduced lop_block
+
+
+def _setup():
+    import jax
+
+    from repro.configs.bitnet_3b import REDUCED
+    from repro.models.transformer import init_params
+    from repro.serving.metrics import MetricsRegistry
+    from repro.serving.quantize import quantize_params
+    from repro.serving.scheduler import Scheduler
+
+    cfg = REDUCED
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    registry = MetricsRegistry()
+    sched = Scheduler(cfg, qp, n_slots=N_SLOTS, max_len=MAX_LEN,
+                      max_queue=4 * N_REQUESTS, metrics=registry)
+    return cfg, qp, sched, registry
+
+
+def _prompts(cfg, n, *, seed=3):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab,
+                         (int(rng.integers(6, 25)),)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _stream_one(port, prompt, out):
+    """One socket client: POST a streaming completion, stamp every SSE
+    data frame's arrival. Fills ``out`` with tokens + times."""
+    body = json.dumps({"prompt": [int(t) for t in prompt],
+                       "max_tokens": GEN, "stream": True}).encode()
+    s = socket.create_connection(("127.0.0.1", port), timeout=300)
+    t_send = time.monotonic()
+    s.sendall(b"POST /v1/completions HTTP/1.1\r\nHost: bench\r\n"
+              b"Content-Length: %d\r\n\r\n%s" % (len(body), body))
+    buf, tokens, stamps, done = b"", [], [], False
+    while True:
+        chunk = s.recv(65536)
+        if not chunk:
+            break
+        buf += chunk
+        while b"\n\n" in buf:
+            frame, buf = buf.split(b"\n\n", 1)
+            for line in frame.split(b"\n"):
+                if not line.startswith(b"data: "):
+                    continue
+                data = line[6:].decode()
+                if data == "[DONE]":
+                    done = True
+                    continue
+                tokens.append(
+                    json.loads(data)["choices"][0]["token"])
+                stamps.append(time.monotonic())
+    s.close()
+    out.update(t_send=t_send, tokens=tokens, stamps=stamps, done=done)
+
+
+def run():
+    from repro.serving.frontend import serve_threaded
+    from repro.serving.metrics import percentile
+    from repro.serving.scheduler import lockstep_generate
+
+    cfg, qp, sched, registry = _setup()
+    srv = serve_threaded(sched, model_name=cfg.name, registry=registry)
+    prompts = _prompts(cfg, N_REQUESTS)
+    try:
+        # warmup request off the clock: prefill/decode compiles
+        warm: dict = {}
+        _stream_one(srv.port, prompts[0], warm)
+        assert warm["done"] and len(warm["tokens"]) == GEN, warm
+
+        clients = [{} for _ in prompts]
+        threads = [threading.Thread(target=_stream_one,
+                                    args=(srv.port, p, out))
+                   for p, out in zip(prompts, clients)]
+        t0 = time.monotonic()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600)
+        wall = time.monotonic() - t0
+
+        assert all(c["done"] for c in clients), "a stream never finished"
+        # the transport adds nothing: replay one stream through lockstep
+        ref = lockstep_generate(cfg, qp, prompts[0], GEN, max_len=MAX_LEN)
+        assert clients[0]["tokens"] == list(ref), (
+            clients[0]["tokens"], ref)
+
+        ttft = [c["stamps"][0] - c["t_send"] for c in clients]
+        itl = [b - a for c in clients
+               for a, b in zip(c["stamps"], c["stamps"][1:])]
+        n_frames = sum(len(c["tokens"]) for c in clients)
+
+        scrape = registry.render()
+    finally:
+        srv.close()
+
+    payload = {
+        "trace": {"n_requests": N_REQUESTS, "gen": GEN,
+                  "n_slots": N_SLOTS, "arch": cfg.name},
+        "http": {
+            "ttft_p50_ms": percentile(ttft, 50) * 1e3,
+            "ttft_p99_ms": percentile(ttft, 99) * 1e3,
+            "itl_p50_ms": percentile(itl, 50) * 1e3,
+            "itl_p99_ms": percentile(itl, 99) * 1e3,
+            "wall_s": wall,
+            "tokens_per_s": n_frames / max(wall, 1e-9),
+            "requests_ok": sum(c["done"] for c in clients),
+            "sse_frames": n_frames,
+        },
+        "server": {
+            "requests_total": int(registry.value(
+                "repro_requests_total", {"outcome": "length"})),
+            "tokens_total": int(registry.value(
+                "repro_tokens_generated_total")),
+            "shed_total": int(registry.value(
+                "repro_requests_shed_total")),
+        },
+    }
+    with open("BENCH_http.json", "w") as fh:
+        json.dump(payload, fh, indent=2)
+
+    assert "repro_request_stage_seconds_bucket" in scrape
+    return [
+        ("http_serving/ttft_p50_ms", payload["http"]["ttft_p50_ms"],
+         "send -> first SSE frame, loopback HTTP + queue + prefill"),
+        ("http_serving/ttft_p99_ms", payload["http"]["ttft_p99_ms"],
+         "tail TTFT under 3x slot contention"),
+        ("http_serving/itl_p50_ms", payload["http"]["itl_p50_ms"],
+         "SSE inter-frame gap (decode step + delivery)"),
+        ("http_serving/itl_p99_ms", payload["http"]["itl_p99_ms"],
+         "tail inter-frame gap"),
+        ("http_serving/tokens_per_s", payload["http"]["tokens_per_s"],
+         f"{N_REQUESTS} concurrent streams over {N_SLOTS} slots"),
+        ("http_serving/requests_ok", payload["http"]["requests_ok"],
+         "streams that reached [DONE] (all, or the bench fails)"),
+        ("http_serving/server_tokens_total",
+         payload["server"]["tokens_total"],
+         "scheduler counter scraped from /metrics (warmup included)"),
+    ]

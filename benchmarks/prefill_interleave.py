@@ -32,6 +32,8 @@ def _serve(chunked: bool):
 
 
 def run():
+    from repro.serving.metrics import percentile
+
     out_c = _serve(chunked=True)
     out_l = _serve(chunked=False)
     assert out_c["interleaved_decode_steps"] > 0, \
@@ -41,15 +43,19 @@ def run():
     # same greedy tokens either way — interleaving is pure scheduling
     for rid, toks in out_c["tokens"].items():
         assert list(toks) == list(out_l["tokens"][rid]), rid
+    # TTFT tails straight off the raw per-request series via the shared
+    # percentile helper (same interpolation serve_loop's summaries use)
+    ttft_c = [r.ttft for r in out_c["results"]]
+    ttft_l = [r.ttft for r in out_l["results"]]
     return [
         ("prefill_interleave/ttft_p50_ms_chunked",
-         out_c["ttft_p50"] * 1e3, "TTFT under interleaving"),
+         percentile(ttft_c, 50) * 1e3, "TTFT under interleaving"),
         ("prefill_interleave/ttft_p50_ms_run_to_completion",
-         out_l["ttft_p50"] * 1e3, "TTFT with whole-prompt stalls"),
+         percentile(ttft_l, 50) * 1e3, "TTFT with whole-prompt stalls"),
         ("prefill_interleave/ttft_p99_ms_chunked",
-         out_c["ttft_p99"] * 1e3, "tail TTFT under interleaving"),
+         percentile(ttft_c, 99) * 1e3, "tail TTFT under interleaving"),
         ("prefill_interleave/ttft_p99_ms_run_to_completion",
-         out_l["ttft_p99"] * 1e3, "tail TTFT with stalls"),
+         percentile(ttft_l, 99) * 1e3, "tail TTFT with stalls"),
         ("prefill_interleave/decode_steps_mid_prefill_chunked",
          out_c["interleaved_decode_steps"],
          "decode progress while a prompt prefilled (>0 = no lane stall)"),

@@ -84,6 +84,16 @@ COVERAGE = {
         ("proj_layer_step_*_us", "qlinear", "time", "lower"),
         ("shapes.*", "qlinear", "workload", "info"),
     ],
+    "BENCH_http.json": [
+        ("trace.*", "scheduler", "workload", "info"),
+        ("http.ttft_*_ms", "scheduler", "time", "lower"),
+        ("http.itl_*_ms", "scheduler", "time", "lower"),
+        ("http.wall_s", "scheduler", "time", "lower"),
+        ("http.tokens_per_s", "scheduler", "throughput", "higher"),
+        ("http.requests_ok", "scheduler", "count", "info"),
+        ("http.sse_frames", "scheduler", "count", "info"),
+        ("server.*", "scheduler", "count", "info"),
+    ],
     "BENCH_faults.json": [
         ("trace.*", "scheduler", "workload", "info"),
         ("recovery.wall_*_s", "scheduler", "time", "lower"),
@@ -285,9 +295,9 @@ def main() -> None:
     if args.check:
         sys.exit(_check())
 
-    from benchmarks import (fig8_lop, fig9_schedule, kernels_micro,
-                            prefill_interleave, prefix_cache, robustness,
-                            spec_decode, table1_e2e)
+    from benchmarks import (fig8_lop, fig9_schedule, http_serving,
+                            kernels_micro, prefill_interleave, prefix_cache,
+                            robustness, spec_decode, table1_e2e)
     modules = [
         ("fig8_lop", fig8_lop),
         ("fig9_schedule", fig9_schedule),
@@ -297,6 +307,7 @@ def main() -> None:
         ("prefix_cache", prefix_cache),
         ("spec_decode", spec_decode),
         ("robustness", robustness),
+        ("http_serving", http_serving),
     ]
     print("name,value,derived")
     failed = 0

@@ -117,9 +117,14 @@ def run():
     bpt1 = decode_bytes_per_token(cfg, n_params, m, 64, with_lop=True)
     step_s = bpt1 * 64 / HBM_BW_V5E             # whole-batch decode step
     chunk_s = 2 * n_params * chunk / PEAK_INT8_V5E
-    rows.append(("table1/v5e_itl_p50_ms", step_s * 1e3,
+    # modeled step series — 90% pure decode cycles, 10% cycles sharing
+    # with a prefill chunk — reduced through the shared percentile
+    # helper, the same reduction launch/serve.py applies to measured ITL
+    from repro.serving.metrics import percentile
+    itl_series = [step_s] * 90 + [step_s + chunk_s] * 10
+    rows.append(("table1/v5e_itl_p50_ms", percentile(itl_series, 50) * 1e3,
                  "bandwidth-bound decode step (batch 64, LOP)"))
-    rows.append(("table1/v5e_itl_p99_ms", (step_s + chunk_s) * 1e3,
+    rows.append(("table1/v5e_itl_p99_ms", percentile(itl_series, 99) * 1e3,
                  f"decode step sharing its cycle with a {chunk}-token "
                  "prefill chunk"))
     n_chunks = -(-64 // chunk)

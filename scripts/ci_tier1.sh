@@ -26,7 +26,8 @@ KERNEL_TESTS="tests/test_kernels.py tests/test_decode_attention.py \
 tests/test_prefill_attention.py tests/test_qlinear_fused.py \
 tests/test_serving_api.py tests/test_prefix_cache.py \
 tests/test_spec_decode.py tests/test_autotune.py \
-tests/test_bench_trajectory.py tests/test_faults.py"
+tests/test_bench_trajectory.py tests/test_faults.py \
+tests/test_metrics.py tests/test_http_frontend.py"
 for impl in ref pallas; do
     echo "ci_tier1: kernel tests under REPRO_KERNEL_IMPL=${impl}" >&2
     REPRO_KERNEL_IMPL="${impl}" python -m pytest -x -q ${KERNEL_TESTS}
@@ -37,6 +38,12 @@ for impl in ref pallas; do
     REPRO_PARANOID=1 REPRO_KERNEL_IMPL="${impl}" \
         python -m pytest -x -q tests/test_faults.py -k chaos
 done
+
+# HTTP front-end loopback smoke: start a real server, stream a completion
+# over a socket, check it against lockstep, scrape /metrics, shut down
+# (DESIGN.md §Serving-frontend)
+echo "ci_tier1: HTTP serving smoke" >&2
+python scripts/sanity_serving.py --http-smoke
 
 # perf-gate static half: every BENCH leaf must map to a declared kernel and
 # the autotune table (if present) must validate — no benchmarks, no sweep

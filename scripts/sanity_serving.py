@@ -1,6 +1,11 @@
 """Serving consistency sanity: prefill(S)+decode(1) == prefill(S+1),
 plus a typed-API smoke check (streaming + sampled generation).
 
+``--http-smoke`` runs the HTTP front-end smoke instead (DESIGN.md
+§Serving-frontend): start a loopback server, stream a completion over a
+real socket, check it against lockstep, scrape ``/metrics``, shut down.
+scripts/ci_tier1.sh runs both modes.
+
 With lop_keep=1.0 the LOP screen selects every valid block, so the sparse
 decode path must agree with the dense prefill path bit-for-bit (modulo f32
 accumulation order). The API smoke drives the scheduler through the
@@ -10,6 +15,7 @@ must match their lockstep replays token-for-token (DESIGN.md
 §Serving-API).
 """
 import importlib
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +24,80 @@ import numpy as np
 from repro.models.transformer import init_params
 from repro.serving.engine import prefill, serve_step
 from repro.serving.quantize import quantize_params
+
+
+def http_smoke() -> None:
+    """Loopback-port server smoke: start -> stream -> scrape -> stop."""
+    import json
+    import socket
+
+    from repro.configs.bitnet_3b import REDUCED
+    from repro.serving.frontend import serve_threaded
+    from repro.serving.metrics import MetricsRegistry
+    from repro.serving.scheduler import Scheduler, lockstep_generate
+
+    cfg = REDUCED
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    registry = MetricsRegistry()
+    sched = Scheduler(cfg, qp, n_slots=2, max_len=40, metrics=registry)
+    srv = serve_threaded(sched, model_name=cfg.name, registry=registry)
+    print(f"http smoke: server up on 127.0.0.1:{srv.port}")
+
+    def request(method, path, body=None):
+        payload = json.dumps(body).encode() if body is not None else b""
+        s = socket.create_connection(("127.0.0.1", srv.port), timeout=300)
+        s.sendall(f"{method} {path} HTTP/1.1\r\nHost: s\r\n"
+                  f"Content-Length: {len(payload)}\r\n\r\n".encode()
+                  + payload)
+        raw = b""
+        while True:
+            chunk = s.recv(65536)
+            if not chunk:
+                break
+            raw += chunk
+        s.close()
+        head, _, body = raw.partition(b"\r\n\r\n")
+        return int(head.split(b" ")[1]), body
+
+    try:
+        status, body = request("GET", "/healthz")
+        assert status == 200 and json.loads(body)["status"] == "ok"
+
+        prompt = np.random.default_rng(2).integers(
+            0, cfg.vocab, (10,)).astype(np.int32)
+        status, body = request("POST", "/v1/completions", {
+            "prompt": [int(t) for t in prompt], "max_tokens": 6,
+            "stream": True})
+        assert status == 200, status
+        tokens = []
+        for frame in body.decode().split("\n\n"):
+            for line in frame.split("\n"):
+                if line.startswith("data: ") and line[6:] != "[DONE]":
+                    tokens.append(
+                        json.loads(line[6:])["choices"][0]["token"])
+        assert "data: [DONE]" in body.decode(), "stream never closed"
+        ref = lockstep_generate(cfg, qp, prompt, 6, max_len=40)
+        assert tokens == ref, (tokens, ref)
+        print(f"http smoke: streamed {len(tokens)} tokens == lockstep")
+
+        status, body = request("GET", "/metrics")
+        text = body.decode()
+        assert status == 200
+        for needle in ('repro_requests_total{outcome="length"} 1',
+                       "repro_request_stage_seconds_bucket",
+                       "repro_http_requests_total"):
+            assert needle in text, needle
+        print("http smoke: /metrics exports stage histograms + counters")
+    finally:
+        srv.close()
+    assert not srv.frontend.pump.is_alive(), "pump survived shutdown"
+    print("HTTP SERVING SMOKE OK")
+
+
+if "--http-smoke" in sys.argv:
+    http_smoke()
+    raise SystemExit(0)
 
 MODULES = [
     "mixtral_8x22b", "granite_moe_1b_a400m", "whisper_small",

@@ -53,6 +53,9 @@ from repro.analysis.roofline import (arithmetic_intensity, machine_balance,
 ROOT = Path(__file__).resolve().parents[3]
 DEFAULT_TABLE = ROOT / "TUNE_kernels.json"
 TABLE_VERSION = 1
+DEFAULT_SHAPE_LOG = ROOT / "TUNE_shapes.json"
+SHAPE_LOG_ENV = "REPRO_SHAPE_LOG"
+SHAPE_LOG_VERSION = 1
 
 KERNELS = ("ternary_matmul", "qlinear", "ffn", "prefill", "decode")
 
@@ -201,6 +204,108 @@ def lookup(kernel: str, dims: dict) -> dict:
         return {}
     params = entry.get("params", {})
     return dict(params) if valid_params(kernel, dims, params) else {}
+
+
+# ---------------------------------------------------------------------------
+# Shape log (log-and-sweep, DESIGN.md §Autotuning): the serving engine
+# records every distinct kernel dispatch shape to a JSON sidecar, and a
+# later sweep (on the real hardware) reads it back so the swept-shape
+# set grows from the shapes production traffic actually dispatches —
+# not just the DEFAULT_SHAPES guesses.
+# ---------------------------------------------------------------------------
+
+_SHAPE_LOG: dict = {"path": None, "seen": set()}
+
+
+def shape_log_path() -> Path | None:
+    """Active sidecar path: explicit ``start_shape_log`` wins, then the
+    ``REPRO_SHAPE_LOG`` env (its value = the path, or ``1`` for the
+    repo-root default). ``None`` = logging off (the default: dispatch
+    must not grow file I/O unless asked)."""
+    if _SHAPE_LOG["path"] is not None:
+        return _SHAPE_LOG["path"]
+    env = os.environ.get(SHAPE_LOG_ENV)
+    if not env or env == "0":
+        return None
+    return DEFAULT_SHAPE_LOG if env == "1" else Path(env)
+
+
+def start_shape_log(path: str | Path | None = None) -> Path:
+    """Enable shape logging (e.g. ``PooledEngine(shape_log=...)``)."""
+    p = Path(path) if path is not None else DEFAULT_SHAPE_LOG
+    _SHAPE_LOG["path"] = p
+    _SHAPE_LOG["seen"] = set()
+    return p
+
+
+def stop_shape_log() -> None:
+    _SHAPE_LOG["path"] = None
+    _SHAPE_LOG["seen"] = set()
+
+
+def observe(kernel: str, dims: dict) -> None:
+    """Record one dispatch shape to the sidecar (dedup'd, write-through).
+
+    Called by every ``ops.py`` entry point at trace time — shapes are
+    static Python ints, so a shape is observed once per compile, not per
+    step; the in-memory ``seen`` set makes repeat traces free and the
+    read-modify-write below keeps the file a union across processes.
+    No-op unless logging is enabled.
+    """
+    p = shape_log_path()
+    if p is None or kernel not in KERNEL_DIMS:
+        return
+    key = (str(p), kernel, shape_key(kernel, dims))
+    if key in _SHAPE_LOG["seen"]:
+        return
+    _SHAPE_LOG["seen"].add(key)
+    try:
+        log = json.loads(p.read_text())
+        assert isinstance(log, dict)
+    except (OSError, ValueError, AssertionError):
+        log = {}
+    log.setdefault("version", SHAPE_LOG_VERSION)
+    shapes = log.setdefault("shapes", {}).setdefault(kernel, [])
+    skey = shape_key(kernel, dims)
+    if skey not in shapes:
+        shapes.append(skey)
+        shapes.sort()
+    p.write_text(json.dumps(log, indent=2, sort_keys=True) + "\n")
+
+
+def load_shape_log(path: str | Path | None = None) -> dict:
+    """Sidecar → ``{kernel: [dims, ...]}`` (malformed entries dropped)."""
+    p = Path(path) if path is not None else (shape_log_path()
+                                             or DEFAULT_SHAPE_LOG)
+    try:
+        log = json.loads(p.read_text())
+    except (OSError, ValueError):
+        return {}
+    out: dict[str, list[dict]] = {}
+    for kernel, skeys in (log.get("shapes") or {}).items():
+        if kernel not in KERNELS or not isinstance(skeys, list):
+            continue
+        for skey in skeys:
+            try:
+                dims = {k: int(v) for k, v in
+                        (kv.split("=") for kv in skey.split(","))}
+            except (ValueError, AttributeError):
+                continue
+            if set(dims) != set(KERNEL_DIMS[kernel]):
+                continue
+            out.setdefault(kernel, []).append(dims)
+    return out
+
+
+def merged_shapes(path: str | Path | None = None) -> dict:
+    """DEFAULT_SHAPES grown by the sidecar's logged shapes (dedup'd) —
+    the sweep set of ``--from-log``."""
+    out = {k: [dict(d) for d in v] for k, v in DEFAULT_SHAPES.items()}
+    for kernel, shapes in load_shape_log(path).items():
+        for dims in shapes:
+            if dims not in out.setdefault(kernel, []):
+                out[kernel].append(dims)
+    return out
 
 
 def validate_table(path: str | Path | None = None) -> list[str]:
@@ -570,6 +675,11 @@ def main(argv=None) -> int:
                     "(default: REPRO_TUNE_TABLE or TUNE_kernels.json)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--max-candidates", type=int, default=12)
+    ap.add_argument("--from-log", nargs="?", const=True, default=None,
+                    metavar="PATH",
+                    help="grow the swept-shape set from a serving shape "
+                         "log (PooledEngine shape_log= / REPRO_SHAPE_LOG "
+                         "sidecar; default path TUNE_shapes.json)")
     ap.add_argument("--check", action="store_true",
                     help="validate the table instead of sweeping")
     args = ap.parse_args(argv)
@@ -580,7 +690,14 @@ def main(argv=None) -> int:
         print(f"autotune: table "
               f"{'INVALID' if problems else 'OK'} ({table_path()})")
         return 1 if problems else 0
-    run_sweep(args.kernel, out_path=args.out, repeats=args.repeats,
+    shapes = None
+    if args.from_log is not None:
+        log_path = None if args.from_log is True else args.from_log
+        shapes = merged_shapes(log_path)
+        n_logged = sum(len(v) for v in load_shape_log(log_path).values())
+        print(f"autotune: sweeping {n_logged} logged serving shape(s) "
+              f"on top of the defaults")
+    run_sweep(args.kernel, shapes, out_path=args.out, repeats=args.repeats,
               max_candidates=args.max_candidates)
     return 0
 

@@ -59,6 +59,14 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _lead_rows(shape) -> int:
+    """Row count after flattening leading dims (static Python ints)."""
+    rows = 1
+    for s in shape:
+        rows *= int(s)
+    return rows
+
+
 def _pad_to(x: jax.Array, mult: int, axis: int):
     size = x.shape[axis]
     pad = (-size) % mult
@@ -83,6 +91,9 @@ def ternary_matmul(x: jax.Array, tw: TernaryWeight, *,
     k, n = tw.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, k)
+    # log-and-sweep (DESIGN.md §Autotuning): shapes are static at trace
+    # time, so each distinct dispatch shape is observed once per compile
+    _tune.observe("ternary_matmul", {"m": x2.shape[0], "k": k, "n": n})
     if _resolve(impl) == "ref":
         out = _ref.ternary_matmul_ref(x2, tw.packed, k)
         return out.reshape(*lead, n)
@@ -142,6 +153,10 @@ def qlinear_fused(x: jax.Array, packed: jax.Array, scale: jax.Array,
     k = packed.shape[-2] * 4
     n = packed.shape[-1]
     scale_row = _col_scale(scale, n)
+    _tune.observe("qlinear", {"e": x.shape[0] if expert else 1,
+                              "m": (x.shape[1] if expert
+                                    else _lead_rows(x.shape[:-1])),
+                              "k": k, "n": n})
     if _resolve(impl) == "ref":
         return _ref.qlinear_ref(x, packed, scale_row, bias, act=act)
 
@@ -185,6 +200,10 @@ def ffn_fused(x: jax.Array, gu_packed: jax.Array, gu_scale: jax.Array,
     d_out = down_packed.shape[-1]
     gu_row = _col_scale(gu_scale, gu_packed.shape[-1])
     down_row = _col_scale(down_scale, d_out)
+    _tune.observe("ffn", {"e": x.shape[0] if expert else 1,
+                          "m": (x.shape[1] if expert
+                                else _lead_rows(x.shape[:-1])),
+                          "k": k, "f": f, "n": d_out})
     if _resolve(impl) == "ref":
         return _ref.ffn_fused_ref(x, gu_packed, gu_row, down_packed,
                                   down_row, gated=gated, act=act)
@@ -320,6 +339,8 @@ def prefill_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale, kv_len, *,
     if softmax_scale is None:
         softmax_scale = dh ** -0.5
     kv_len = kv_len.astype(jnp.int32)
+    _tune.observe("prefill", {"bhg": b * hkv, "r": g * c, "d": dh,
+                              "m": m, "chunk": c})
 
     if _resolve(impl) == "ref":
         return _ref.prefill_attention_ref(
@@ -399,6 +420,8 @@ def decode_attention(qi, qsc, k_cache, v_cache, k_scale, v_scale, feat,
     assert m % block == 0, (m, block)
     if softmax_scale is None:
         softmax_scale = dh ** -0.5
+    _tune.observe("decode", {"bhg": b * hkv, "g": g, "d": dh, "m": m,
+                             "block": block, "k_keep": k_keep})
 
     if _resolve(impl) == "ref":
         return _ref.decode_attention_ref(

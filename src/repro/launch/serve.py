@@ -57,6 +57,7 @@ import numpy as np
 from repro.core.lop import kv_traffic_bytes
 from repro.launch.train import resolve_config
 from repro.models.transformer import init_params
+from repro.serving import metrics as smetrics
 from repro.serving.api import GenerateRequest, SamplingParams, StepResult
 from repro.serving.quantize import quantize_params
 from repro.serving.scheduler import Scheduler, lockstep_generate
@@ -164,6 +165,10 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
     max_len = max_prompt + gen + shared_prefix_tokens
     if cfg.family == "vlm":
         max_len += cfg.n_img_tokens       # image prefix shares the cache
+    # fresh per-run registry: the same metric families the HTTP server
+    # exports from /metrics, so a driver run and a live server are
+    # diffable dashboards (DESIGN.md §Serving-metrics)
+    registry = smetrics.MetricsRegistry()
     sched = Scheduler(cfg, qp, n_slots=n_slots, max_len=max_len,
                       use_lop=use_lop, chunked=chunked,
                       chunk_tokens=None if engine is not None
@@ -173,7 +178,8 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
                       draft_layers=None if engine is not None
                       else draft_layers,
                       draft_k=None if engine is not None else draft_k,
-                      max_queue=max_queue, engine=engine)
+                      max_queue=max_queue, engine=engine,
+                      metrics=registry)
 
     t0 = time.monotonic()
     pending = list(reqs)
@@ -197,31 +203,23 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
 
     results = sorted(sched.results, key=lambda r: r.rid)
     total_toks = sum(len(r.tokens) for r in results)
-    lat = np.asarray([r.latency for r in results])
-    ttft = np.asarray([r.ttft for r in results])
-    ttft_hit = np.asarray([r.ttft for r in results if r.cached_len] or
-                          [np.nan])
-    ttft_miss = np.asarray([r.ttft for r in results if not r.cached_len] or
-                           [np.nan])
-    itl = np.asarray([g for r in results for g in r.itl] or [0.0])
+    lat = [r.latency for r in results]
+    ttft = [r.ttft for r in results]
+    ttft_hit = [r.ttft for r in results if r.cached_len] or [np.nan]
+    ttft_miss = [r.ttft for r in results if not r.cached_len] or [np.nan]
+    itl = [g for r in results for g in r.itl] or [0.0]
     out = {
         "results": results,
         "tokens": {r.rid: np.asarray(r.tokens, np.int32) for r in results},
         "wall_s": wall,
         "decode_steps": n_steps,
         "tokens_per_s": total_toks / max(wall, 1e-9),
-        "latency_p50": float(np.percentile(lat, 50)),
-        "latency_p90": float(np.percentile(lat, 90)),
-        "latency_p99": float(np.percentile(lat, 99)),
-        "ttft_p50": float(np.percentile(ttft, 50)),
-        "ttft_p90": float(np.percentile(ttft, 90)),
-        "ttft_p99": float(np.percentile(ttft, 99)),
-        "itl_p50": float(np.percentile(itl, 50)),
-        "itl_p99": float(np.percentile(itl, 99)),
-        "ttft_hit_p50": float(np.percentile(ttft_hit, 50)),
-        "ttft_hit_p99": float(np.percentile(ttft_hit, 99)),
-        "ttft_miss_p50": float(np.percentile(ttft_miss, 50)),
-        "ttft_miss_p99": float(np.percentile(ttft_miss, 99)),
+        "metrics": registry,
+        **smetrics.summarize(lat, (50, 90, 99), prefix="latency_"),
+        **smetrics.summarize(ttft, (50, 90, 99), prefix="ttft_"),
+        **smetrics.summarize(itl, (50, 99), prefix="itl_"),
+        **smetrics.summarize(ttft_hit, (50, 99), prefix="ttft_hit_"),
+        **smetrics.summarize(ttft_miss, (50, 99), prefix="ttft_miss_"),
         "prefill_compiles": sched.prefill_compiles,
         "chunked": sched.chunked,
         "interleaved_decode_steps": sched.interleaved_decode_steps,
@@ -249,15 +247,19 @@ def serve_loop(cfg, *, n_slots: int = 4, n_requests: int = 8,
         "full_launches_per_token": ((sched.decode_launches
                                      + sched.spec_verify_launches)
                                     / max(1, total_toks)),
-        # robustness telemetry (DESIGN.md §Fault-tolerance)
+        # robustness telemetry (DESIGN.md §Fault-tolerance), read back
+        # off the metrics registry — the same counters /metrics exports
         "max_queue": max_queue,
-        "shed_count": sched.shed_count,
+        "shed_count": int(registry.value("repro_requests_shed_total")),
         "queue_depth_peak": sched.queue_depth_peak,
         "deadline_ms": deadline_ms,
-        "deadline_count": sched.deadline_count,
-        "fault_events": sched.fault_events,
-        "fault_recoveries": sched.fault_recoveries,
-        "fault_finishes": sched.fault_finishes,
+        "deadline_count": int(
+            registry.value("repro_deadline_expired_total")),
+        "fault_events": int(registry.value("repro_fault_events_total")),
+        "fault_recoveries": int(
+            registry.value("repro_fault_recoveries_total")),
+        "fault_finishes": int(
+            registry.value("repro_fault_finishes_total")),
         "prefix_lookup_failures": sched.prefix_lookup_failures,
         "checksum_failures": (sched.prefix_store.checksum_failures
                               if sched.prefix_store is not None else 0),

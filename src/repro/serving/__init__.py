@@ -7,6 +7,11 @@ The cross-layer contract is :mod:`repro.serving.api` (DESIGN.md
 Lifecycle (see :mod:`repro.serving.scheduler`): admit → prefill → insert →
 decode → evict over ``n_slots`` persistent decode lanes, with per-lane
 sampling (:mod:`repro.serving.sampling`) and streaming token delivery.
+
+Observability lives in :mod:`repro.serving.metrics` (DESIGN.md
+§Serving-metrics) and the HTTP front-end in
+:mod:`repro.serving.frontend` (DESIGN.md §Serving-frontend) — addressed
+by module path, not re-exported here.
 """
 
 from repro.serving.api import (GREEDY, CancelToken, FinishedRequest,

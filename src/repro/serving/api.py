@@ -346,13 +346,21 @@ class PooledEngine:
     def __init__(self, cfg, qp, *, max_len: int, use_lop: bool = True,
                  chunk_tokens: int | None = None,
                  draft_layers: int | None = None,
-                 draft_k: int | None = None):
+                 draft_k: int | None = None,
+                 shape_log: str | None = None):
         import jax.numpy as jnp  # local alias for the jitted closures
 
         self.cfg = cfg
         self.qp = qp
         self.max_len = max_len
         self.use_lop = use_lop
+        if shape_log is not None:
+            # log-and-sweep sidecar (DESIGN.md §Autotuning): every
+            # distinct kernel dispatch shape this engine traces is
+            # recorded so `python -m repro.kernels.autotune --from-log`
+            # can sweep the shapes production traffic actually serves
+            from repro.kernels import autotune as _tune
+            _tune.start_shape_log(shape_log)
         self.chunk_tokens = chunk_tokens or cfg.lop_block
         # speculative draft knobs: layer-stack prefix depth and degraded
         # LOP selection budget (None = config's serving budget)

@@ -1,0 +1,26 @@
+"""Production HTTP serving front-end (DESIGN.md §Serving-frontend).
+
+An asyncio HTTP/1.1 server — stdlib only, no new dependencies — that
+exposes the typed serving API (:mod:`repro.serving.api`) over the wire:
+
+  ``POST /v1/completions``  OpenAI-style completion; ``"stream": true``
+                            streams tokens as Server-Sent Events
+  ``GET /v1/models``        the served model
+  ``GET /healthz``          liveness + lane/queue occupancy
+  ``GET /metrics``          Prometheus text (:mod:`repro.serving.metrics`)
+
+The scheduler is pumped from a dedicated thread
+(:class:`~repro.serving.frontend.server.SchedulerPump`); the asyncio
+loop and the pump communicate through a thread-safe submission queue and
+``loop.call_soon_threadsafe`` token delivery — the JSON body maps onto a
+frozen :class:`~repro.serving.api.GenerateRequest`, ``on_token`` becomes
+SSE chunks, and a client disconnect becomes
+:meth:`~repro.serving.api.CancelToken.cancel`.
+"""
+
+from repro.serving.frontend.http import Request, read_request, sse_event
+from repro.serving.frontend.server import (HttpFrontend, SchedulerPump,
+                                           serve_threaded)
+
+__all__ = ["HttpFrontend", "SchedulerPump", "serve_threaded",
+           "Request", "read_request", "sse_event"]

@@ -75,6 +75,7 @@ from dataclasses import dataclass, replace
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import metrics as _metrics
 from repro.serving.api import (GREEDY, ExistingPrefix, FinishedRequest,
                                GenerateRequest, PooledEngine, SamplingParams,
                                StepResult)
@@ -172,7 +173,7 @@ class Scheduler:
                  spec_decode: bool = False, gamma: int = 4,
                  draft_layers: int | None = None, draft_k: int | None = None,
                  max_queue: int | None = None, spec_watchdog: int = 3,
-                 clock=time.monotonic, engine=None):
+                 clock=time.monotonic, engine=None, metrics=None):
         if engine is not None:
             # an injected engine owns its own configuration — reject
             # overrides that would otherwise be silently ignored
@@ -259,6 +260,14 @@ class Scheduler:
         self.prefix_lookup_failures = 0
         self.spec_watchdog_trips = 0
         self.paranoid = os.environ.get("REPRO_PARANOID") == "1"
+        # structured telemetry (DESIGN.md §Serving-frontend): the same
+        # events as the plain int attributes above, published onto a
+        # metrics registry so the synthetic driver and the HTTP server
+        # export identical series; per-request StageTimers record the
+        # queue → prefill → decode spans under the scheduler's clock
+        self.metrics = metrics if metrics is not None else _metrics.REGISTRY
+        self._m = _metrics.scheduler_instruments(self.metrics)
+        self._timers: dict = {}
 
     @property
     def prefill_compiles(self) -> int:
@@ -299,10 +308,15 @@ class Scheduler:
             # queued requests keep their admission order and their
             # deadlines stay meetable
             self.shed_count += 1
+            self._m.shed.inc()
             self._record_abort(req, reason="shed")
             return False
+        timer = _metrics.StageTimer(self.clock)
+        timer.enter("queue")
+        self._timers[req.rid] = timer
         self.queue.append(req)
         self.queue_depth_peak = max(self.queue_depth_peak, len(self.queue))
+        self._m.queue_depth.set(len(self.queue))
         return True
 
     @property
@@ -387,6 +401,9 @@ class Scheduler:
                 continue
             slot = self._free.popleft()
             plen = len(req.prompt)
+            timer = self._timers.get(req.rid)
+            if timer is not None:
+                timer.to("prefill")
             if self.chunked:
                 skip, node = 0, None
                 if self.prefix_store is not None \
@@ -409,6 +426,9 @@ class Scheduler:
                     self.prefix_hit_tokens += skip
                 self.prefill_tokens_computed += plen - skip
                 self.prefill_tokens_served += plen
+                self._m.prefill_tokens.labels(source="computed") \
+                    .inc(plen - skip)
+                self._m.prefill_tokens.labels(source="cached").inc(skip)
                 n += 1
                 continue
             if self.n_active:
@@ -425,6 +445,7 @@ class Scheduler:
                 kw["patches"] = jnp.asarray(req.patches)[None]
             self.prefill_tokens_computed += plen
             self.prefill_tokens_served += plen
+            self._m.prefill_tokens.labels(source="computed").inc(plen)
             logits, req_cache = self.engine.prefill(padded, true_len, kw)
             self.pool = self.engine.insert(self.pool, slot, req_cache)
             self._start_lane(slot, req, logits, t_admit)
@@ -434,6 +455,7 @@ class Scheduler:
                                     common_len=node.n_tokens)
             self.pool = self.engine.bulk_insert(
                 self.pool, np.asarray(slots, np.int32), prefix)
+        self._m.queue_depth.set(len(self.queue))
         return n
 
     def _start_lane(self, slot: int, req: GenerateRequest, logits,
@@ -447,11 +469,17 @@ class Scheduler:
         self.pool = self.engine.set_sampling_state(self.pool, slot,
                                                    sp.seed, 1)
         now = self.clock()
+        timer = self._timers.get(req.rid)
+        if timer is not None:
+            timer.to("decode")
+        if req.arrival is not None:
+            self._m.ttft.observe(now - req.arrival)
         lane = _Lane(req=req, tokens=[first],
                      remaining=req.max_new_tokens - 1,
                      t_admit=t_admit, t_first=now, token_times=[now],
                      cached_len=cached_len)
         self.lanes[slot] = lane
+        self._m.active_lanes.set(self.n_active)
         self._next_tok[slot, 0] = first
         reason = self._token_reason(lane, first)   # evaluated exactly once
         self._emit(lane, first, 0, reason)
@@ -470,9 +498,11 @@ class Scheduler:
         kw = {}
         if k == 0 and self.engine.prefix_len(pf.req):
             kw["patches"] = jnp.asarray(pf.req.patches)[None]
+        t0 = self.clock()
         logits, self.pool = self.engine.prefill_chunk(
             self.pool, pf.slot, pf.chunks[k], pf.starts[k], pf.seq_ends[k],
             final, kw)
+        self._m.prefill_chunk.observe(self.clock() - t0)
         pf.next_chunk += 1
         if final:
             self._prefilling.popleft()
@@ -559,6 +589,7 @@ class Scheduler:
                 else:
                     kept.append(req)
             self.queue = kept
+            self._m.queue_depth.set(len(self.queue))
         if self._prefilling and any(self._abort_reason(p.req)
                                     for p in self._prefilling):
             kept_p: deque[_Prefill] = deque()
@@ -639,8 +670,10 @@ class Scheduler:
         drafts: dict[int, list[int]] = {s: [] for s in active}
         cur = self._next_tok.copy()
         for _ in range(g):
+            t0 = self.clock()
             toks, self.pool = self.engine.draft(self.pool, cur, temps,
                                                 tks, tps)
+            self._m.spec_draft.observe(self.clock() - t0)
             self.draft_launches += 1
             for s in active:
                 d = int(toks[s])
@@ -659,8 +692,10 @@ class Scheduler:
             block = np.concatenate(
                 [self._next_tok[slot], np.asarray(drafts[slot], np.int32)]
             )[None, :]
+            t0 = self.clock()
             logits, self.pool = self.engine.verify_chunk(
                 self.pool, slot, block, start)
+            self._m.spec_verify.observe(self.clock() - t0)
             self.spec_verify_launches += 1
             if not bool(np.isfinite(np.asarray(logits)).all()):
                 # poisoned verify logits: rewind the whole round for this
@@ -670,6 +705,7 @@ class Scheduler:
                 self.pool = self.engine.rollback(self.pool, slot, g + 1)
                 lane.no_spec = True
                 self.fault_events += 1
+                self._m.fault_events.inc()
                 self.fault_rids.add(lane.req.rid)
                 continue
             sp = lane.req.sampling or GREEDY
@@ -747,6 +783,7 @@ class Scheduler:
         tokens so far are delivered)."""
         lane = self.lanes[slot]
         self.fault_events += 1
+        self._m.fault_events.inc()
         self.fault_rids.add(lane.req.rid)
         lane.no_spec = True
         self.pool = self.engine.rollback(self.pool, slot, 1)
@@ -755,9 +792,11 @@ class Scheduler:
         if not bool(ok[slot]):
             self.pool = self.engine.rollback(self.pool, slot, 1)
             self.fault_finishes += 1
+            self._m.fault_finishes.inc()
             done.append(self._finish(slot, "fault"))
             return
         self.fault_recoveries += 1
+        self._m.fault_recoveries.inc()
         self._append_token(slot, int(toks[slot]), done)
 
     def step(self) -> list[FinishedRequest]:
@@ -794,8 +833,10 @@ class Scheduler:
             if g >= 1:
                 self._spec_round(g, temps, tks, tps, done)
                 return done
+        t0 = self.clock()
         toks, self.pool = self.engine.decode_step(
             self.pool, self._next_tok, temps, tks, tps)
+        self._m.decode_step.observe(self.clock() - t0)
         self.decode_launches += 1
         # per-lane logit-finiteness guard published by the engine (None:
         # an engine without the guard — every lane treated healthy)
@@ -822,6 +863,8 @@ class Scheduler:
         self._free.append(slot)
         self._next_tok[slot, 0] = 0
         self.results.append(res)
+        self._m.active_lanes.set(self.n_active)
+        self._publish_finish(res, reason)
         return res
 
     def _record_abort(self, req: GenerateRequest, t_admit: float = 0.0,
@@ -836,7 +879,25 @@ class Scheduler:
             t_admit=t_admit or now, t_first=now, t_done=now,
             token_times=[])
         self.results.append(res)
+        self._publish_finish(res, reason)
         return res
+
+    def _publish_finish(self, res: FinishedRequest, reason: str) -> None:
+        """Registry side of retirement: finish-reason counters, the
+        request's stage spans, and its latency observations — the same
+        numbers the int attributes / FinishedRequest fields carry, as
+        exported series (DESIGN.md §Serving-frontend)."""
+        self._m.requests.labels(outcome=reason).inc()
+        if reason == "deadline":
+            self._m.deadline.inc()
+        self._m.tokens.inc(len(res.tokens))
+        self._m.e2e.observe(res.latency)
+        for gap in res.itl:
+            self._m.itl.observe(gap)
+        timer = self._timers.pop(res.rid, None)
+        if timer is not None:
+            for stage, span in timer.finish().items():
+                self._m.stage_seconds.labels(stage=stage).observe(span)
 
     # ---------------- invariants (REPRO_PARANOID=1) ----------------
 

@@ -236,3 +236,88 @@ def test_override_retiles_ternary_matmul_dispatch_bitwise():
     ref = ops.ternary_matmul(xq, tw, impl="ref")
     assert (np.asarray(base) == np.asarray(tuned)).all()
     assert (np.asarray(tuned) == np.asarray(ref)).all()
+
+
+# ---------------------------------------------------------------------------
+# Log-and-sweep sidecar: dispatch shapes -> JSON -> --from-log sweep set
+# ---------------------------------------------------------------------------
+
+def test_shape_log_records_dedupes_and_loads(tmp_path):
+    path = tmp_path / "shapes.json"
+    autotune.start_shape_log(path)
+    try:
+        dims = {"m": 8, "k": 64, "n": 128}
+        autotune.observe("ternary_matmul", dims)
+        autotune.observe("ternary_matmul", dims)          # dedup'd
+        autotune.observe("qlinear", {"e": 1, "m": 4, "k": 64, "n": 64})
+        autotune.observe("not_a_kernel", {"m": 1})        # unknown: no-op
+    finally:
+        autotune.stop_shape_log()
+    raw = json.loads(path.read_text())
+    assert raw["version"] == autotune.SHAPE_LOG_VERSION
+    assert raw["shapes"]["ternary_matmul"] == [
+        autotune.shape_key("ternary_matmul", dims)]
+    loaded = autotune.load_shape_log(path)
+    assert loaded == {"ternary_matmul": [dims],
+                      "qlinear": [{"e": 1, "m": 4, "k": 64, "n": 64}]}
+
+
+def test_shape_log_survives_restart_and_unions(tmp_path):
+    """A second enable (fresh ``seen`` set, e.g. a new server process)
+    appends to the same sidecar instead of clobbering it."""
+    path = tmp_path / "shapes.json"
+    autotune.start_shape_log(path)
+    autotune.observe("ternary_matmul", {"m": 8, "k": 64, "n": 128})
+    autotune.stop_shape_log()
+    autotune.start_shape_log(path)
+    autotune.observe("ternary_matmul", {"m": 8, "k": 64, "n": 128})
+    autotune.observe("ternary_matmul", {"m": 16, "k": 64, "n": 128})
+    autotune.stop_shape_log()
+    loaded = autotune.load_shape_log(path)
+    assert len(loaded["ternary_matmul"]) == 2
+    assert {"m": 8, "k": 64, "n": 128} in loaded["ternary_matmul"]
+    assert {"m": 16, "k": 64, "n": 128} in loaded["ternary_matmul"]
+
+
+def test_merged_shapes_grows_defaults_without_duplicates(tmp_path):
+    path = tmp_path / "shapes.json"
+    autotune.start_shape_log(path)
+    known = autotune.DEFAULT_SHAPES["ternary_matmul"][0]
+    novel = {"m": 3, "k": 64, "n": 128}
+    assert novel not in autotune.DEFAULT_SHAPES["ternary_matmul"]
+    autotune.observe("ternary_matmul", known)             # already swept
+    autotune.observe("ternary_matmul", novel)
+    autotune.stop_shape_log()
+    merged = autotune.merged_shapes(path)
+    base = autotune.DEFAULT_SHAPES["ternary_matmul"]
+    assert merged["ternary_matmul"][:len(base)] == base
+    assert merged["ternary_matmul"].count(known) == 1
+    assert novel in merged["ternary_matmul"]
+
+
+def test_shape_log_env_off_by_default(tmp_path, monkeypatch):
+    monkeypatch.delenv(autotune.SHAPE_LOG_ENV, raising=False)
+    autotune.stop_shape_log()
+    assert autotune.shape_log_path() is None
+    monkeypatch.setenv(autotune.SHAPE_LOG_ENV, "0")
+    assert autotune.shape_log_path() is None
+    monkeypatch.setenv(autotune.SHAPE_LOG_ENV, str(tmp_path / "s.json"))
+    assert autotune.shape_log_path() == tmp_path / "s.json"
+
+
+def test_ops_dispatch_feeds_the_shape_log(tmp_path):
+    """A real kernel call while logging is armed lands its dims in the
+    sidecar — the PooledEngine(shape_log=...) wiring minus the engine."""
+    path = tmp_path / "shapes.json"
+    rng = np.random.default_rng(5)
+    k, n = 64, 64
+    tw = make_ternary_weight(
+        jnp.asarray(rng.standard_normal((k, n)), jnp.float32) * 0.02)
+    xq = jnp.asarray(rng.integers(-127, 128, (8, k)), jnp.int8)
+    autotune.start_shape_log(path)
+    try:
+        ops.ternary_matmul(xq, tw)
+    finally:
+        autotune.stop_shape_log()
+    loaded = autotune.load_shape_log(path)
+    assert {"m": 8, "k": k, "n": n} in loaded["ternary_matmul"]

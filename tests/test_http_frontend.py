@@ -1,0 +1,344 @@
+"""HTTP serving front-end: token exactness over real sockets, SSE
+framing, disconnect cancellation, overload 429s, deadline 504s and the
+/metrics scrape (DESIGN.md §Serving-frontend).
+
+The load-bearing guarantee: the transport adds NOTHING to sampling —
+tokens streamed over loopback HTTP are byte-identical to
+:func:`repro.serving.scheduler.lockstep_generate` for greedy AND seeded
+sampled requests. Runs under both REPRO_KERNEL_IMPL arms via
+scripts/ci_tier1.sh.
+"""
+
+import json
+import socket
+import time
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.transformer import init_params
+from repro.serving.api import PooledEngine
+from repro.serving.frontend import serve_threaded
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.quantize import quantize_params
+from repro.serving.scheduler import Scheduler, lockstep_generate
+
+from tests.test_models_smoke import _reduced
+
+MAX_LEN = 63
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = _reduced("bitnet-3b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    engine = PooledEngine(cfg, qp, max_len=MAX_LEN)
+    return cfg, qp, engine
+
+
+class _SlowDecode:
+    """Engine proxy that stretches every decode step — makes the
+    disconnect/overload races deterministic without touching timings
+    anywhere else."""
+
+    def __init__(self, inner, delay_s=0.02):
+        self._inner = inner
+        self._delay = delay_s
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def decode_step(self, *a, **kw):
+        time.sleep(self._delay)
+        return self._inner.decode_step(*a, **kw)
+
+
+@contextmanager
+def _server(cfg, qp, engine=None, *, n_slots=2, **sched_kw):
+    reg = MetricsRegistry()
+    sched = Scheduler(cfg, qp, n_slots=n_slots, max_len=MAX_LEN,
+                      engine=engine, metrics=reg, **sched_kw)
+    srv = serve_threaded(sched, model_name="bitnet-test", registry=reg)
+    try:
+        yield srv, sched, reg
+    finally:
+        srv.close()
+
+
+def _prompt(cfg, n=9, seed=3):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+
+
+def _post(port, body, *, path="/v1/completions", method="POST",
+          timeout=120):
+    """One request, response fully read. Returns (status, headers, body)."""
+    payload = json.dumps(body).encode() if body is not None else b""
+    s = socket.create_connection(("127.0.0.1", port), timeout=timeout)
+    s.sendall(f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+              f"Content-Length: {len(payload)}\r\n\r\n".encode() + payload)
+    raw = b""
+    while True:
+        chunk = s.recv(65536)
+        if not chunk:
+            break
+        raw += chunk
+    s.close()
+    head, _, body = raw.partition(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    status = int(lines[0].split(" ")[1])
+    headers = dict(l.split(": ", 1) for l in lines[1:] if ": " in l)
+    return status, headers, body
+
+
+def _sse_tokens(body: bytes):
+    """Parse an SSE byte stream -> (tokens, saw_done, error_frames)."""
+    tokens, done, errors = [], False, []
+    for frame in body.decode().split("\n\n"):
+        is_error = any(l.strip() == "event: error"
+                       for l in frame.split("\n"))
+        for line in frame.split("\n"):
+            if not line.startswith("data: "):
+                continue
+            data = line[6:]
+            if data == "[DONE]":
+                done = True
+            elif is_error:
+                errors.append(json.loads(data))
+            else:
+                tokens.append(json.loads(data)["choices"][0]["token"])
+    return tokens, done, errors
+
+
+# ---------------------------------------------------------------------------
+# Token exactness over the wire — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_stream_matches_lockstep_bitwise(stack):
+    cfg, qp, engine = stack
+    p = _prompt(cfg)
+    with _server(cfg, qp, engine) as (srv, _, _):
+        status, _, body = _post(srv.port, {
+            "prompt": [int(t) for t in p], "max_tokens": 6,
+            "stream": True})
+    assert status == 200
+    tokens, done, errors = _sse_tokens(body)
+    assert done and not errors
+    ref = lockstep_generate(cfg, qp, p, 6, max_len=MAX_LEN, engine=engine)
+    assert tokens == list(ref)
+
+
+def test_sampled_seeded_stream_matches_lockstep(stack):
+    from repro.serving.api import SamplingParams
+
+    cfg, qp, engine = stack
+    p = _prompt(cfg, n=12, seed=7)
+    sp = SamplingParams(temperature=0.9, top_k=8, seed=13)
+    with _server(cfg, qp, engine) as (srv, _, _):
+        status, _, body = _post(srv.port, {
+            "prompt": [int(t) for t in p], "max_tokens": 6, "stream": True,
+            "temperature": 0.9, "top_k": 8, "seed": 13})
+    assert status == 200
+    tokens, done, _ = _sse_tokens(body)
+    assert done
+    ref = lockstep_generate(cfg, qp, p, 6, max_len=MAX_LEN, sampling=sp,
+                            engine=engine)
+    assert tokens == list(ref)
+
+
+def test_unary_completion_matches_lockstep_with_usage(stack):
+    cfg, qp, engine = stack
+    p = _prompt(cfg, n=10, seed=5)
+    with _server(cfg, qp, engine) as (srv, _, _):
+        status, _, body = _post(srv.port, {
+            "prompt": [int(t) for t in p], "max_tokens": 5})
+    assert status == 200
+    obj = json.loads(body)
+    ref = lockstep_generate(cfg, qp, p, 5, max_len=MAX_LEN, engine=engine)
+    assert obj["choices"][0]["tokens"] == list(ref)
+    assert obj["choices"][0]["finish_reason"] == "length"
+    assert obj["usage"] == {"prompt_tokens": 10, "completion_tokens": 5,
+                            "cached_prompt_tokens": 0}
+
+
+def test_concurrent_streams_each_match_lockstep(stack):
+    import threading
+
+    cfg, qp, engine = stack
+    prompts = [_prompt(cfg, n=n, seed=s)
+               for n, s in ((9, 1), (14, 2), (11, 3), (8, 4))]
+    outs = [{} for _ in prompts]
+
+    def go(i):
+        status, _, body = _post(srv.port, {
+            "prompt": [int(t) for t in prompts[i]], "max_tokens": 5,
+            "stream": True})
+        outs[i].update(status=status, body=body)
+
+    with _server(cfg, qp, engine) as (srv, _, _):
+        threads = [threading.Thread(target=go, args=(i,))
+                   for i in range(len(prompts))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+    for p, out in zip(prompts, outs):
+        assert out["status"] == 200
+        tokens, done, _ = _sse_tokens(out["body"])
+        assert done
+        ref = lockstep_generate(cfg, qp, p, 5, max_len=MAX_LEN,
+                                engine=engine)
+        assert tokens == list(ref)
+
+
+# ---------------------------------------------------------------------------
+# Disconnect -> cancel, overload -> 429, deadline -> 504
+# ---------------------------------------------------------------------------
+
+
+def test_mid_stream_disconnect_cancels_lane_and_frees_slot(stack):
+    cfg, qp, engine = stack
+    slow = _SlowDecode(engine, delay_s=0.02)
+    p = _prompt(cfg)
+    with _server(cfg, qp, slow) as (srv, sched, reg):
+        body = json.dumps({"prompt": [int(t) for t in p],
+                           "max_tokens": 50, "stream": True}).encode()
+        s = socket.create_connection(("127.0.0.1", srv.port), timeout=120)
+        s.sendall(b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                  b"Content-Length: %d\r\n\r\n%s" % (len(body), body))
+        got = b""
+        while got.count(b"\n\n") < 2:          # ~2 tokens of a 50-token run
+            got += s.recv(4096)
+        s.close()                              # client walks away
+
+        deadline = time.monotonic() + 30
+        while sched.has_work() or not sched.results:
+            assert time.monotonic() < deadline, "lane never retired"
+            time.sleep(0.02)
+        res = sched.results[-1]
+        assert res.finish_reason == "cancelled"
+        assert len(res.tokens) < 50            # cut off mid-stream
+        assert sched.n_active == 0             # lane retired...
+        assert len(sched._free) == 2           # ...and the slot is back
+        assert reg.value("repro_requests_total",
+                         {"outcome": "cancelled"}) == 1
+
+
+def test_overload_returns_429_with_retry_after(stack):
+    import threading
+
+    cfg, qp, engine = stack
+    slow = _SlowDecode(engine, delay_s=0.02)
+    outs = {}
+
+    def go(name, n_tokens):
+        outs[name] = _post(srv.port, {
+            "prompt": [int(t) for t in _prompt(cfg, seed=ord(name[0]))],
+            "max_tokens": n_tokens, "stream": True})
+
+    with _server(cfg, qp, slow, n_slots=1, max_queue=1) as (srv, _, reg):
+        a = threading.Thread(target=go, args=("a", 30))
+        a.start()
+        deadline = time.monotonic() + 30
+        while not srv.frontend.sched.n_active:   # a holds the only lane
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        b = threading.Thread(target=go, args=("b", 3))
+        b.start()
+        deadline = time.monotonic() + 30
+        while not len(srv.frontend.sched.queue):  # b parked in the queue
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        status, headers, body = _post(srv.port, {
+            "prompt": [int(t) for t in _prompt(cfg, seed=9)],
+            "max_tokens": 3})                  # queue full -> shed
+        a.join(timeout=300)
+        b.join(timeout=300)
+    assert status == 429
+    assert headers.get("Retry-After") == "1"
+    assert json.loads(body)["error"]["code"] == 429
+    assert reg.value("repro_requests_shed_total") == 1
+    assert outs["a"][0] == 200 and outs["b"][0] == 200
+
+
+def test_expired_deadline_is_504_not_a_hang(stack):
+    cfg, qp, engine = stack
+    p = _prompt(cfg)
+    with _server(cfg, qp, engine) as (srv, _, reg):
+        status, _, body = _post(srv.port, {
+            "prompt": [int(t) for t in p], "max_tokens": 5,
+            "deadline_ms": 0.001, "stream": True})
+        assert status == 504
+        assert json.loads(body)["error"]["type"] == "deadline_expired"
+        status2, _, body2 = _post(srv.port, {
+            "prompt": [int(t) for t in p], "max_tokens": 5,
+            "deadline_ms": 0.001})
+        assert status2 == 504
+    assert reg.value("repro_deadline_expired_total") == 2
+
+
+# ---------------------------------------------------------------------------
+# Validation, routing, observability endpoints
+# ---------------------------------------------------------------------------
+
+
+def test_validation_rejects_before_touching_the_scheduler(stack):
+    cfg, qp, engine = stack
+    with _server(cfg, qp, engine) as (srv, sched, _):
+        cases = [
+            {"prompt": "text"},                          # not token ids
+            {"prompt": []},                              # empty
+            {"prompt": [1, 2], "max_tokens": 0},         # no budget
+            {"prompt": [1, 2], "max_tokens": MAX_LEN + 60},  # > capacity
+            {"prompt": [int(cfg.vocab) + 5]},            # out of vocab
+            {"prompt": [1, 2], "temperature": -1.0},
+            {"prompt": [1, 2], "deadline_ms": -5},
+        ]
+        for body in cases:
+            status, _, raw = _post(srv.port, body)
+            assert status == 400, body
+            assert "error" in json.loads(raw), body
+        assert not sched.results                # nothing ever submitted
+        status, _, _ = _post(srv.port, None, path="/nope", method="GET")
+        assert status == 404
+        status, _, _ = _post(srv.port, None, method="GET")
+        assert status == 405
+
+
+def test_healthz_and_models(stack):
+    cfg, qp, engine = stack
+    with _server(cfg, qp, engine) as (srv, _, _):
+        status, _, body = _post(srv.port, None, path="/healthz",
+                                method="GET")
+        assert status == 200
+        health = json.loads(body)
+        assert health["status"] == "ok"
+        assert health["active_lanes"] == 0
+        status, _, body = _post(srv.port, None, path="/v1/models",
+                                method="GET")
+        assert status == 200
+        models = json.loads(body)
+        assert models["data"][0]["id"] == "bitnet-test"
+
+
+def test_metrics_endpoint_exports_stage_histograms_and_counters(stack):
+    cfg, qp, engine = stack
+    p = _prompt(cfg)
+    with _server(cfg, qp, engine) as (srv, _, _):
+        _post(srv.port, {"prompt": [int(t) for t in p], "max_tokens": 4})
+        status, headers, body = _post(srv.port, None, path="/metrics",
+                                      method="GET")
+    assert status == 200
+    assert headers["Content-Type"].startswith("text/plain")
+    text = body.decode()
+    for stage in ("queue", "prefill", "decode"):
+        assert f'repro_request_stage_seconds_bucket{{stage="{stage}"' \
+            in text
+    assert 'repro_requests_total{outcome="length"} 1' in text
+    assert "repro_request_ttft_seconds_count 1" in text
+    assert 'repro_http_requests_total{route="/v1/completions",' \
+        'code="200"} 1' in text

@@ -1,0 +1,214 @@
+"""Observability core: registry semantics, Prometheus rendering, the
+shared percentile helper, StageTimer spans, and the scheduler's metric
+families (DESIGN.md §Serving-metrics).
+
+The registry is the ONE definition of every serving metric name —
+``launch/serve.py`` summaries and the HTTP server's ``/metrics`` scrape
+both read it, so a driver run and a live server are diffable.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving import metrics
+from repro.serving.metrics import (MetricsRegistry, StageTimer, percentile,
+                                   summarize)
+
+# ---------------------------------------------------------------------------
+# percentile / summarize — the dedupe target
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_matches_numpy_linear_interpolation():
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal(37).tolist()
+    for q in (0, 25, 50, 90, 99, 100):
+        assert percentile(xs, q) == float(np.percentile(xs, q))
+
+
+def test_percentile_empty_is_nan():
+    assert math.isnan(percentile([], 50))
+
+
+def test_summarize_keys_and_prefix():
+    out = summarize([1.0, 2.0, 3.0], (50, 99), prefix="ttft_")
+    assert set(out) == {"ttft_p50", "ttft_p99"}
+    assert out["ttft_p50"] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Registry: counters / gauges / histograms, labels, merge, render
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_roundtrip():
+    reg = MetricsRegistry()
+    c = reg.counter("t_total", "help", ("k",))
+    c.labels(k="a").inc()
+    c.labels(k="a").inc(2)
+    c.labels(k="b").inc()
+    g = reg.gauge("t_depth", "help")
+    g.set(7)
+    g.dec(3)
+    h = reg.histogram("t_seconds", "help", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    assert reg.value("t_total", {"k": "a"}) == 3
+    assert reg.value("t_total", {"k": "b"}) == 1
+    assert reg.value("t_depth") == 4
+    assert reg.value("t_seconds") == pytest.approx(5.55)  # _sum
+
+
+def test_reregistration_is_idempotent_but_kind_checked():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "help")
+    b = reg.counter("x_total", "other help")
+    assert a is b
+    with pytest.raises(AssertionError):
+        reg.gauge("x_total", "now a gauge")
+
+
+def test_histogram_buckets_cumulative_in_render():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", "h", buckets=(0.1, 1.0))
+    for v in (0.05, 0.05, 0.5, 5.0):
+        h.observe(v)
+    text = reg.render()
+    assert 'lat_seconds_bucket{le="0.1"} 2' in text
+    assert 'lat_seconds_bucket{le="1"} 3' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 4' in text
+    assert "lat_seconds_count 4" in text
+    assert "# TYPE lat_seconds histogram" in text
+
+
+def test_render_prometheus_text_shape():
+    reg = MetricsRegistry()
+    reg.counter("a_total", "things done", ("mode",)).labels(
+        mode="fast").inc()
+    reg.gauge("b_now", "current").set(2.5)
+    text = reg.render()
+    assert "# HELP a_total things done" in text
+    assert "# TYPE a_total counter" in text
+    assert 'a_total{mode="fast"} 1' in text
+    assert "# TYPE b_now gauge" in text
+    assert "b_now 2.5" in text
+    # families render sorted — stable scrape diffs
+    names = [l.split()[2] for l in text.splitlines()
+             if l.startswith("# TYPE")]
+    assert names == sorted(names)
+
+
+def test_merge_adds_counters_and_histograms():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    for reg, n in ((a, 2), (b, 3)):
+        c = reg.counter("m_total", "h", ("k",))
+        c.labels(k="x").inc(n)
+        h = reg.histogram("m_seconds", "h", buckets=(1.0,))
+        h.observe(0.5)
+        reg.gauge("m_depth", "h").set(n)
+    a.merge(b)
+    assert a.value("m_total", {"k": "x"}) == 5
+    assert "m_seconds_count 2" in a.render()
+    assert a.value("m_depth") == 3          # gauges take the newer value
+
+
+def test_histogram_quantile_estimate_brackets_truth():
+    reg = MetricsRegistry()
+    h = reg.histogram("q_seconds", "h", buckets=(0.01, 0.1, 1.0, 10.0))
+    rng = np.random.default_rng(1)
+    xs = rng.uniform(0.02, 0.9, 500)
+    for v in xs:
+        h.observe(float(v))
+    est = h.labels().quantile(0.5)
+    assert 0.01 <= est <= 1.0               # within the bracketing buckets
+
+
+# ---------------------------------------------------------------------------
+# StageTimer
+# ---------------------------------------------------------------------------
+
+
+def test_stage_timer_spans():
+    ticks = iter([0.0, 1.0, 1.0, 3.0, 3.0, 6.0])
+    t = StageTimer(clock=lambda: next(ticks))
+    t.enter("queue")
+    t.to("prefill")
+    t.to("decode")
+    spans = t.finish()
+    assert spans == {"queue": 1.0, "prefill": 2.0, "decode": 3.0}
+
+
+def test_stage_timer_reentry_accumulates():
+    ticks = iter([0.0, 1.0, 1.0, 2.0, 2.0, 5.0])
+    t = StageTimer(clock=lambda: next(ticks))
+    t.enter("decode")
+    t.to("prefill")
+    t.to("decode")
+    assert t.finish()["decode"] == 1.0 + 3.0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration: families exist and move on a real trace
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    import jax
+
+    from repro.models.transformer import init_params
+    from repro.serving.api import GenerateRequest
+    from repro.serving.quantize import quantize_params
+    from repro.serving.scheduler import Scheduler
+
+    from tests.test_models_smoke import _reduced
+
+    cfg = _reduced("bitnet-3b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(cfg, params)
+    reg = MetricsRegistry()
+    sched = Scheduler(cfg, qp, n_slots=2, max_len=63, metrics=reg)
+    rng = np.random.default_rng(3)
+    for rid, n in enumerate((9, 14, 11)):
+        sched.submit(GenerateRequest(
+            rid=rid, prompt=rng.integers(0, cfg.vocab, (n,)).astype(
+                np.int32), max_new_tokens=5))
+    sched.run_to_completion()
+    return sched, reg
+
+
+def test_scheduler_publishes_request_outcomes(served):
+    sched, reg = served
+    assert reg.value("repro_requests_total", {"outcome": "length"}) == 3
+    assert reg.value("repro_tokens_generated_total") == 15
+    assert reg.value("repro_requests_shed_total") == 0
+
+
+def test_scheduler_publishes_stage_and_latency_histograms(served):
+    _, reg = served
+    text = reg.render()
+    for stage in ("queue", "prefill", "decode"):
+        assert f'repro_request_stage_seconds_bucket{{stage="{stage}"' \
+            in text, stage
+    assert "repro_request_ttft_seconds_count 3" in text
+    assert "repro_request_e2e_seconds_count 3" in text
+    # 5 tokens/request -> 4 inter-token gaps each
+    assert "repro_request_itl_seconds_count 12" in text
+
+
+def test_scheduler_counts_prefill_token_provenance(served):
+    sched, reg = served
+    computed = reg.value("repro_prefill_tokens_total",
+                         {"source": "computed"})
+    assert computed == sched.prefill_tokens_computed > 0
+
+
+def test_default_registry_is_process_wide():
+    from repro.serving.metrics import REGISTRY
+    assert isinstance(REGISTRY, MetricsRegistry)
+    c = REGISTRY.counter("test_selfcheck_total", "scratch")
+    before = REGISTRY.value("test_selfcheck_total")
+    c.inc()
+    assert REGISTRY.value("test_selfcheck_total") == before + 1
